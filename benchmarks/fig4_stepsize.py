@@ -1,0 +1,23 @@
+"""Paper Fig. 4: AUC vs step-size learning rate x gradient scaling factor.
+
+Claim: the Delta learning rate matters; the gradient scaling factor barely
+does (all three scalings track each other at a given lr).
+"""
+from benchmarks.common import AVAZU_MINI, emit, run_method
+
+
+def run(steps=None):
+    results = {}
+    kw = {"steps": steps} if steps else {}
+    for lr in (2e-3, 2e-4, 2e-5):
+        for scale in ("1", "dq", "bdq"):
+            r = run_method(AVAZU_MINI, "alpt", step_lr=lr, grad_scale=scale,
+                           **kw)
+            results[(lr, scale)] = r
+            emit(f"fig4/alpt_lr{lr:g}_g{scale}", r["us_per_step"],
+                 f"auc={r['auc']:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On CPU the pallas interpreter is NOT representative of TPU speed — the
+derived column therefore reports bytes moved and the arithmetic intensity the
+BlockSpec tiling claims, which is what transfers to TPU.  The jnp reference
+is additionally timed for a same-machine sanity number.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    n, d, b = 100_000, 128, 4096
+    codes = jax.random.randint(key, (n, d), -128, 128, jnp.int8)
+    step = jax.random.uniform(key, (n,), minval=1e-3, maxval=0.1)
+    ids = jax.random.randint(key, (b,), 0, n, jnp.int32)
+    us = _time(lambda *a: ops.dequant_gather(*a), codes, step, ids)
+    us_ref = _time(lambda *a: ref.dequant_gather_ref(*a), codes, step, ids)
+    moved = b * d * (1 + 4) + b * 4  # int8 in, f32 out
+    emit("kernel/dequant_gather", us,
+         f"ref_us={us_ref:.1f} bytes={moved} int8_vs_f32_read=4.0x")
+
+    w = jax.random.normal(key, (4096, 512)) * 0.05
+    st = jax.random.uniform(key, (4096,), minval=1e-3, maxval=0.05)
+    noise = jax.random.uniform(key, (4096, 512))
+    us = _time(lambda *a: ops.sr_round(*a, 8), w, st, noise)
+    us_ref = _time(lambda *a: ref.sr_round_ref(*a, 8), w, st, noise)
+    emit("kernel/sr_round", us,
+         f"ref_us={us_ref:.1f} bytes={4096*512*(4+4+1)} writeback_int8=4x_smaller")
+
+    x = jax.random.normal(key, (256, 2048), jnp.bfloat16)
+    wc = jax.random.randint(key, (2048, 2048), -128, 128, jnp.int8)
+    ws = jax.random.uniform(key, (2048,), minval=1e-3, maxval=0.02)
+    us = _time(lambda *a: ops.dequant_matmul(*a), x, wc, ws)
+    us_ref = _time(lambda *a: ref.dequant_matmul_ref(*a), x, wc, ws)
+    flops = 2 * 256 * 2048 * 2048
+    wbytes = 2048 * 2048
+    emit("kernel/dequant_matmul", us,
+         f"ref_us={us_ref:.1f} flops={flops} weight_bytes={wbytes} "
+         f"intensity={flops/wbytes:.0f}flop_per_weight_byte")
+
+
+if __name__ == "__main__":
+    run()

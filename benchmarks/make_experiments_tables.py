@@ -1,0 +1,94 @@
+"""Emit the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from the
+dry-run JSON cells.  Run after `python -m repro.launch.dryrun --all`."""
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "dryrun_results"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}GB"
+
+
+def load():
+    cells = {}
+    for p in sorted(RESULTS.glob("*.json")):
+        cells[p.stem] = json.loads(p.read_text())
+    return cells
+
+
+def baseline_table(cells, mesh="pod256"):
+    print(f"\n### Roofline baselines — {mesh} (16x16), default policy\n")
+    print("| arch | shape | policy | status | compute_s | memory_s | "
+          "collective_s | bottleneck | useful FLOPs ratio | roofline frac | "
+          "fits 16GB |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for name, d in cells.items():
+        parts = name.split("__")
+        if len(parts) != 3 or parts[2] != mesh:
+            continue
+        arch, shape = parts[0], parts[1]
+        if d["status"] == "skipped":
+            print(f"| {arch} | {shape} | - | SKIP ({d['reason'][:48]}...) "
+                  f"| | | | | | | |")
+            continue
+        if d["status"] != "ok":
+            print(f"| {arch} | {shape} | - | ERROR | | | | | | | |")
+            continue
+        r = d["roofline"]
+        print(
+            f"| {arch} | {shape} | {d['policy']} | ok "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.3f} "
+            f"| {'yes' if d.get('fits_16gb_hbm') else 'NO'} |"
+        )
+
+
+def multipod_table(cells):
+    print("\n### Multi-pod (2x16x16 = 512 chips) — lower+compile status\n")
+    print("| arch | shape | status | compile_s | collective total |")
+    print("|---|---|---|---|---|")
+    for name, d in cells.items():
+        parts = name.split("__")
+        if len(parts) != 3 or parts[2] != "pod512":
+            continue
+        arch, shape = parts[0], parts[1]
+        if d["status"] == "skipped":
+            print(f"| {arch} | {shape} | SKIP | | |")
+        elif d["status"] == "ok":
+            print(f"| {arch} | {shape} | ok | {d['compile_s']} | "
+                  f"{fmt_bytes(d['collectives']['total'])} |")
+        else:
+            print(f"| {arch} | {shape} | ERROR | | |")
+
+
+def variants_table(cells):
+    print("\n### §Perf variant cells (hillclimb)\n")
+    print("| cell | policy | embedding | compute_s | memory_s | "
+          "collective_s | bottleneck | frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for name, d in cells.items():
+        parts = name.split("__")
+        if len(parts) <= 3 or d["status"] != "ok":
+            continue
+        r = d["roofline"]
+        # The filename token keeps the _sp/_ep suffix; d['policy'] is the base.
+        pol_label = next((p for p in parts[3:] if not p.startswith("emb-")),
+                         d["policy"])
+        print(
+            f"| {parts[0]}/{parts[1]} | {pol_label} "
+            f"| {d.get('embedding') or 'alpt'} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['bottleneck']} "
+            f"| {r['roofline_fraction']:.3f} |"
+        )
+
+
+if __name__ == "__main__":
+    cells = load()
+    baseline_table(cells)
+    multipod_table(cells)
+    variants_table(cells)

@@ -1,0 +1,53 @@
+"""§Roofline report: reads the dry-run JSON cells and prints the per-cell
+three-term roofline table (compute / memory / collective seconds, bottleneck,
+MODEL_FLOPS/HLO ratio, roofline fraction).
+"""
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "dryrun_results"
+
+
+def load_cells():
+    cells = {}
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        cells[p.stem] = d
+    return cells
+
+
+def run():
+    cells = load_cells()
+    if not cells:
+        emit("roofline/none", 0.0,
+             "no dry-run results; run python -m repro.launch.dryrun --all")
+        return {}
+    n_ok = n_skip = n_err = 0
+    for name, d in cells.items():
+        if d["status"] == "skipped":
+            n_skip += 1
+            emit(f"roofline/{name}", 0.0, f"SKIP: {d['reason'][:60]}")
+            continue
+        if d["status"] != "ok":
+            n_err += 1
+            emit(f"roofline/{name}", 0.0, f"ERROR: {d.get('error','?')[:80]}")
+            continue
+        n_ok += 1
+        r = d["roofline"]
+        emit(
+            f"roofline/{name}",
+            r["step_time_lower_bound_s"] * 1e6,
+            f"bottleneck={r['bottleneck']} compute_s={r['compute_s']:.3f} "
+            f"memory_s={r['memory_s']:.3f} collective_s={r['collective_s']:.3f} "
+            f"useful_ratio={r['useful_flops_ratio']:.3f} "
+            f"roofline_frac={r['roofline_fraction']:.3f} "
+            f"fits16gb={d.get('fits_16gb_hbm')}",
+        )
+    emit("roofline/summary", 0.0, f"ok={n_ok} skipped={n_skip} errors={n_err}")
+    return cells
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Benchmark harness — one module per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks training steps
+(CI mode); the full run reproduces the paper's orderings at reduced scale.
+"""
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer train steps")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma list from: table1,table2,table3,fig3,fig4,kernels,serve,"
+             "roofline",
+    )
+    args = ap.parse_args(argv)
+    steps = 120 if args.quick else None
+    want = set(args.only.split(",")) if args.only else None
+
+    def on(name):
+        return want is None or name in want
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    if on("fig3"):
+        from benchmarks import fig3_synthetic
+
+        fig3_synthetic.run()
+    if on("kernels"):
+        from benchmarks import kernel_bench
+
+        kernel_bench.run()
+    if on("table1"):
+        from benchmarks import table1_overall
+
+        table1_overall.run(steps=steps)
+    if on("table2"):
+        from benchmarks import table2_bitwidths
+
+        table2_bitwidths.run(steps=steps)
+    if on("table3"):
+        from benchmarks import table3_scalability
+
+        table3_scalability.run(steps=steps)
+    if on("fig4"):
+        from benchmarks import fig4_stepsize
+
+        fig4_stepsize.run(steps=steps)
+    if on("serve"):
+        from benchmarks import serve_bench
+
+        serve_bench.run()
+    if on("roofline"):
+        from benchmarks import roofline
+
+        roofline.run()
+    print(f"# total_wall_s={time.time()-t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

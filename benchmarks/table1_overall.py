@@ -1,0 +1,44 @@
+"""Paper Table 1: overall performance of ALPT vs baselines at 8-bit.
+
+Columns reproduced: AUC / Logloss / per-step time / train & inference
+compression, on synthetic Avazu- and Criteo-shaped data.  The claims under
+test (paper §4.2): ALPT(SR) ~ FP >= {LSQ, PACT} > LPT(SR) > {hash, prune-ish}
+>> LPT(DR), and LPT/ALPT alone compress *training* memory ~4x.
+"""
+from benchmarks.common import AVAZU_MINI, CRITEO_MINI, emit, run_method
+
+METHODS = [
+    ("fp", {}),
+    ("hash", {}),
+    ("prune", {}),
+    ("pact", {}),
+    ("lsq", {}),
+    ("lpt_dr", {"rounding": "dr"}),
+    ("lpt_sr", {}),
+    # DR cannot undo a bad Delta move (Remark 1), so its Delta needs the
+    # paper's conservative lr (2e-5); SR tolerates 10x larger (Fig. 4).
+    ("alpt_dr", {"rounding": "dr", "step_lr": 2e-5}),
+    ("alpt_sr", {}),
+]
+
+
+def run(steps=None):
+    results = {}
+    for ds_name, ds in (("avazu", AVAZU_MINI), ("criteo", CRITEO_MINI)):
+        for label, kw in METHODS:
+            method = label.split("_")[0]
+            r = run_method(ds, method, **({"steps": steps} if steps else {}),
+                           **kw)
+            results[(ds_name, label)] = r
+            emit(
+                f"table1/{ds_name}/{label}",
+                r["us_per_step"],
+                f"auc={r['auc']:.4f} logloss={r['logloss']:.4f} "
+                f"train_comp={r['train_compression']:.1f}x "
+                f"inf_comp={r['inference_compression']:.1f}x",
+            )
+    return results
+
+
+if __name__ == "__main__":
+    run()

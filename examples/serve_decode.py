@@ -1,0 +1,20 @@
+"""Batched serving with int8 embedding tables (continuous batcher).
+
+    PYTHONPATH=src python examples/serve_decode.py
+
+Wraps repro.launch.serve: prefill + decode steps are jitted once; finished
+requests are replaced without recompilation; the vocab table stays int8.
+"""
+from repro.launch import serve
+
+
+def main():
+    serve.main([
+        "--arch", "mixtral-8x7b", "--smoke",
+        "--batch", "4", "--prompt-len", "24", "--gen", "12",
+        "--requests", "8",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+10 assigned LM-pool architectures + the paper's own DCN/CTR setups.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "qwen3-1.7b": "repro.configs.qwen3_1p7b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1p8b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+}
+
+
+def get_arch(name: str):
+    """Returns the config module for an architecture id."""
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[name])
+
+
+def full_config(name: str, **overrides):
+    return get_arch(name).full_config(**overrides)
+
+
+def smoke_config(name: str):
+    return get_arch(name).smoke_config()
+
+
+def skip_shapes(name: str) -> dict[str, str]:
+    return get_arch(name).SKIP_SHAPES

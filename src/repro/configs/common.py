@@ -1,0 +1,83 @@
+"""Shared machinery for the assigned architecture configs.
+
+Every config module exposes:
+  full_config(**overrides)  -> ModelConfig   (the exact published shape)
+  smoke_config()            -> ModelConfig   (reduced same-family config)
+  SKIP_SHAPES: dict[shape_name, reason]      (spec-sanctioned skips)
+
+Shapes (LM pool): train/prefill lower ``train_step``-style full-sequence
+programs; decode/long lower ``serve_step`` (one token + KV cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+FULL_ATTN_LONG_SKIP = (
+    "long_500k needs sub-quadratic attention; this arch is pure full attention "
+    "(see DESIGN.md §4)"
+)
+ENCODER_DECODE_SKIP = "encoder-only arch has no autoregressive decode step"
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    For 'train'/'prefill': full-sequence inputs.  For 'decode': one new token
+    plus the cache metadata (the cache itself is built by serve_step's init).
+    """
+    s = SHAPES[shape_name]
+    b, t = s["global_batch"], s["seq_len"]
+    i32 = jnp.int32
+    if s["kind"] in ("train", "prefill"):
+        batch: dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.input_mode == "embeds":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, t, cfg.d_model), cfg.dtype)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, t), i32)
+            if cfg.input_mode == "mixed":
+                batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.visual_prefix, cfg.d_model), cfg.dtype
+                )
+                batch["positions"] = jax.ShapeDtypeStruct((3, b, t), i32)
+        batch["labels"] = jax.ShapeDtypeStruct((b, t), i32)
+        return batch
+    # decode: one token per sequence, cache length scalar.
+    return {
+        "token": jax.ShapeDtypeStruct((b,), i32),
+        "cache_len": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def concrete_batch(cfg: ModelConfig, *, batch: int, seq: int, key=None):
+    """Small concrete batch for smoke tests (same structure as input_specs)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    k1, k2, k3 = jax.random.split(key, 3)
+    out: dict[str, jax.Array] = {}
+    if cfg.input_mode == "embeds":
+        out["embeds"] = jax.random.normal(k1, (batch, seq, cfg.d_model), cfg.dtype)
+    else:
+        out["tokens"] = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+        if cfg.input_mode == "mixed":
+            out["prefix_embeds"] = jax.random.normal(
+                k2, (batch, cfg.visual_prefix, cfg.d_model), cfg.dtype
+            )
+            pos = jnp.arange(seq, dtype=jnp.int32)[None].repeat(batch, 0)
+            out["positions"] = jnp.stack([pos, pos, pos], 0)
+    out["labels"] = jax.random.randint(k3, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    return out
+
+
+def shrink(cfg: ModelConfig, **overrides) -> ModelConfig:
+    return dataclasses.replace(cfg, **overrides)

@@ -1,0 +1,35 @@
+"""The paper's own architecture: DCN on (synthetic) Criteo / Avazu.
+
+Appendix B: Avazu — cross/deep depth 3, deep widths 1024/512/256;
+Criteo — depth 5, width 1000, dropout 0.2.  Embedding dim 16 (§4.1).
+"""
+from repro.core.alpt import ALPTConfig
+from repro.data import ctr_synth
+from repro.models.ctr import DCNConfig
+from repro.models.embedding import EmbeddingSpec
+
+
+def avazu_setup(method: str = "alpt", bits: int = 8, scale: float = 0.01):
+    data_cfg = ctr_synth.avazu_like(scale=scale)
+    spec = EmbeddingSpec(
+        method=method, n=data_cfg.n_features, d=16, bits=bits,
+        alpt=ALPTConfig(bits=bits, step_lr=2e-5, weight_decay=5e-8),
+    )
+    dcn = DCNConfig(
+        n_fields=data_cfg.n_fields, emb_dim=16, cross_depth=3,
+        mlp_widths=(1024, 512, 256),
+    )
+    return data_cfg, spec, dcn
+
+
+def criteo_setup(method: str = "alpt", bits: int = 8, scale: float = 0.01):
+    data_cfg = ctr_synth.criteo_like(scale=scale)
+    spec = EmbeddingSpec(
+        method=method, n=data_cfg.n_features, d=16, bits=bits,
+        alpt=ALPTConfig(bits=bits, step_lr=2e-5, weight_decay=1e-5),
+    )
+    dcn = DCNConfig(
+        n_fields=data_cfg.n_fields, emb_dim=16, cross_depth=5,
+        mlp_widths=(1000,) * 5, dropout=0.2,
+    )
+    return data_cfg, spec, dcn

@@ -1,0 +1,42 @@
+"""deepseek-67b [dense]: 95L d=8192 64H (kv=8) d_ff=22016 vocab=102400.
+
+llama-arch at 67B — arXiv:2401.02954.  The depth (95 layers) is why the
+backbone scans over layer groups: the lowered HLO is O(1) in depth.  Requires
+the fsdp_tp sharding policy to fit 16 GB/chip (DESIGN.md §5).
+"""
+from repro.models.transformer import ModelConfig
+from repro.configs.common import shrink, FULL_ATTN_LONG_SKIP
+
+SKIP_SHAPES = {"long_500k": FULL_ATTN_LONG_SKIP}
+
+
+def full_config(**overrides) -> ModelConfig:
+    cfg = ModelConfig(
+        name="deepseek-67b",
+        n_layers=95,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=22016,
+        vocab_size=102400,
+        embedding_method="alpt",
+        remat=True,  # activation checkpointing per layer group
+    )
+    return shrink(cfg, **overrides)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-67b-smoke",
+        n_layers=3,
+        d_model=64,
+        n_heads=8,
+        n_kv_heads=2,
+        d_ff=160,
+        vocab_size=512,
+        embedding_method="alpt",
+        remat=True,
+        ce_chunk=32,
+        attn_q_block=32,
+        attn_k_block=32,
+    )

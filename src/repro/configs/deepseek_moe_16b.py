@@ -1,0 +1,59 @@
+"""deepseek-moe-16b [moe]: 28L d=2048 16H (MHA kv=16) d_ff=1408 vocab=102400.
+
+Fine-grained MoE: 64 routed experts top-6 plus 2 shared (always-on) experts —
+arXiv:2401.06066.  Deviation note: the released model's layer 0 is a dense
+MLP (d_ff 10944); we route every layer to keep the scan period at 1 (DESIGN.md
+§7) — parameter count differs by <1%.
+"""
+from repro.models.moe import MoEConfig
+from repro.models.transformer import ModelConfig
+from repro.configs.common import shrink, FULL_ATTN_LONG_SKIP
+
+SKIP_SHAPES = {"long_500k": FULL_ATTN_LONG_SKIP}  # full (non-windowed) attention
+
+
+def full_config(**overrides) -> ModelConfig:
+    cfg = ModelConfig(
+        name="deepseek-moe-16b",
+        n_layers=28,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1408,
+        vocab_size=102400,
+        layer_types=("attn",),
+        moe_pattern=(True,),
+        moe=MoEConfig(
+            n_experts=64,
+            top_k=6,
+            d_model=2048,
+            d_ff=1408,
+            n_shared_experts=2,
+            shared_d_ff=2816,
+            normalize_gates=False,  # deepseek-moe keeps raw top-k probs
+        ),
+        embedding_method="alpt",
+    )
+    return shrink(cfg, **overrides)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-moe-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=32,
+        vocab_size=512,
+        layer_types=("attn",),
+        moe_pattern=(True,),
+        moe=MoEConfig(
+            n_experts=8, top_k=3, d_model=64, d_ff=32,
+            n_shared_experts=2, shared_d_ff=64, normalize_gates=False,
+        ),
+        embedding_method="alpt",
+        ce_chunk=32,
+        attn_q_block=32,
+        attn_k_block=32,
+    )

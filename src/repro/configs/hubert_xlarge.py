@@ -1,0 +1,51 @@
+"""hubert-xlarge [audio]: 48L d=1280 16H (kv=16) d_ff=5120 vocab=504.
+
+Encoder-only transformer (same backbone as wav2vec2) — arXiv:2106.07447.
+Per the pool spec the modality frontend is a STUB: input_specs() provides
+precomputed frame embeddings [B, S, 1280]; training is frame-level CE over
+the 504 cluster targets.  GELU MLP; deviation: RMSNorm instead of LayerNorm
+(uniform backbone; DESIGN.md §7).  No decode shapes (encoder-only).
+"""
+from repro.models.transformer import ModelConfig
+from repro.configs.common import shrink, ENCODER_DECODE_SKIP
+
+SKIP_SHAPES = {
+    "decode_32k": ENCODER_DECODE_SKIP,
+    "long_500k": ENCODER_DECODE_SKIP,
+}
+
+
+def full_config(**overrides) -> ModelConfig:
+    cfg = ModelConfig(
+        name="hubert-xlarge",
+        n_layers=48,
+        d_model=1280,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=5120,
+        vocab_size=504,
+        mlp_type="gelu",
+        causal=False,
+        input_mode="embeds",
+        embedding_method="alpt",  # applies to the (tiny) 504-way output table
+    )
+    return shrink(cfg, **overrides)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab_size=64,
+        mlp_type="gelu",
+        causal=False,
+        input_mode="embeds",
+        embedding_method="alpt",
+        ce_chunk=32,
+        attn_q_block=32,
+        attn_k_block=32,
+    )

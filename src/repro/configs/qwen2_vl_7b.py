@@ -1,0 +1,51 @@
+"""qwen2-vl-7b [vlm]: 28L d=3584 28H (kv=4) d_ff=18944 vocab=152064.
+
+M-RoPE (temporal/height/width frequency sections 16/24/24 of head_dim 128)
+and QKV bias — arXiv:2409.12191.  Vision frontend is a STUB per the pool
+spec: input_specs() provides 256 precomputed patch embeddings that replace
+the first 256 token positions ('mixed' input mode) plus 3-stream positions.
+28 q-heads pad to 32 on a 16-way tensor axis.
+"""
+from repro.models.transformer import ModelConfig
+from repro.configs.common import shrink, FULL_ATTN_LONG_SKIP
+
+SKIP_SHAPES = {"long_500k": FULL_ATTN_LONG_SKIP}
+
+
+def full_config(**overrides) -> ModelConfig:
+    cfg = ModelConfig(
+        name="qwen2-vl-7b",
+        n_layers=28,
+        d_model=3584,
+        n_heads=28,
+        n_kv_heads=4,
+        d_ff=18944,
+        vocab_size=152064,
+        attn_bias=True,
+        mrope_sections=(16, 24, 24),
+        input_mode="mixed",
+        visual_prefix=256,
+        embedding_method="alpt",
+    )
+    return shrink(cfg, **overrides)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        attn_bias=True,
+        mrope_sections=(2, 3, 3),
+        input_mode="mixed",
+        visual_prefix=8,
+        embedding_method="alpt",
+        ce_chunk=32,
+        attn_q_block=32,
+        attn_k_block=32,
+    )

@@ -1,0 +1,2 @@
+"""Core of the paper: quantization, LPT, ALPT, QAT/hash/prune baselines, theory."""
+from repro.core import alpt, hashing, lpt, pruning, qat, quant, theory  # noqa: F401

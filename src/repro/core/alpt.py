@@ -1,0 +1,176 @@
+"""Adaptive low-precision training (ALPT) — paper §3.2, Algorithm 1.
+
+Per batch, two alternating sub-steps:
+
+  Step 1 (weights):   w_hat_b = Delta_b * w_tilde_b          (de-quantize)
+                      w_b'    = w_hat_b - eta * df/dw_hat    (+ dense params)
+  Step 2 (step size): Delta_b' = Delta_b - eta_D * df(Q_D(w_b', Delta_b))/dDelta
+                      w_tilde_b' = SR-quantize(w_b', Delta_b')
+
+The Delta gradient comes from an LSQ-style second forward pass over the
+*updated float rows* (quant.fake_quant_lsq, Eq. 6/7), scaled by
+g = 1/sqrt(b * d * q) with q = 2^{m-1} - 1 (paper §3.2; Fig. 4 shows the
+scale matters less than the Delta learning rate, both are exposed).
+
+The weight sub-step reuses lpt.sparse_apply / lpt.dense_apply, so ALPT == LPT
+plus the learned Delta — exactly the paper's framing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lpt, quant
+
+
+class ALPTConfig(NamedTuple):
+    bits: int = 8
+    rounding: str = "sr"  # rounding for the write-back (paper: SR)
+    optimizer: str = "adam"  # row optimizer for the embeddings
+    weight_decay: float = 5e-8  # paper: 5e-8 Avazu / 1e-5 Criteo
+    step_lr: float = 2e-5  # paper: Delta learning rate 2e-5
+    step_weight_decay: float = 5e-8  # paper: same decay as embeddings (8-bit)
+    grad_scale: str = "bdq"  # '1' | 'dq' | 'bdq'  (Fig. 4 sweep)
+
+
+def grad_scale_factor(cfg: ALPTConfig, batch_rows: int, dim: int) -> float:
+    q = 2 ** (cfg.bits - 1) - 1
+    if cfg.grad_scale == "1":
+        return 1.0
+    if cfg.grad_scale == "dq":
+        return 1.0 / math.sqrt(dim * q)
+    if cfg.grad_scale == "bdq":
+        return 1.0 / math.sqrt(batch_rows * dim * q)
+    raise ValueError(f"unknown grad_scale {cfg.grad_scale!r}")
+
+
+def alpt_step(
+    table: lpt.LPTTable,
+    ids: jax.Array,
+    loss_fn: Callable[[jax.Array], jax.Array],
+    *,
+    cfg: ALPTConfig,
+    lr: jax.Array,
+    noise_key: jax.Array,
+    loss_fn_step2: Callable[[jax.Array], jax.Array] | None = None,
+):
+    """One ALPT update of a table against ``loss_fn(rows) -> scalar``.
+
+    ``loss_fn`` closes over the batch and any dense parameters; it receives the
+    de-quantized rows for ``ids`` (same leading shape as ids, trailing dim d).
+    Returns (new_table, loss, aux) where aux carries diagnostics.
+
+    Dense-parameter updates happen outside (the caller differentiates the same
+    loss w.r.t. its own params); this function owns lines 1-2 and 4-5 of
+    Algorithm 1 for the embedding table.  Algorithm 1 line 4 evaluates the
+    step-size loss at the *updated* dense params w_o^{t+1}; pass that closure
+    as ``loss_fn_step2`` (defaults to ``loss_fn``).
+    """
+    if loss_fn_step2 is None:
+        loss_fn_step2 = loss_fn
+    d = table.dim
+    n = table.n_rows
+
+    # ---- Step 1: de-quantize, get row gradients, float update. ----
+    rows = lpt.lookup(table, ids)  # w_hat_b^t
+    loss, g_rows = jax.value_and_grad(loss_fn)(rows)
+    table1, (uniq, w_new) = lpt.sparse_apply(
+        table,
+        ids,
+        g_rows,
+        lr=lr,
+        bits=cfg.bits,
+        rounding=cfg.rounding,
+        noise_key=noise_key,
+        optimizer=cfg.optimizer,
+        weight_decay=cfg.weight_decay,
+        return_updated_rows=True,
+    )
+    # ---- Step 2: learn Delta on the *updated* float rows (line 4). ----
+    # Re-run the forward with fake-quantized updated rows; the LSQ custom-vjp
+    # routes the gradient to Delta via Eq. 7.
+    safe = jnp.minimum(uniq, n - 1)
+    step_b = jnp.take(table.step, safe)  # Delta_b^t
+    gscale = grad_scale_factor(cfg, batch_rows=int(ids.size), dim=d)
+    inv = lpt.dedup_ids(ids, n)[1]
+
+    def loss_wrt_step(step_vec):
+        rows_q = quant.fake_quant_lsq(
+            jax.lax.stop_gradient(w_new), step_vec, cfg.bits, gscale
+        )
+        # Re-broadcast unique rows back to per-occurrence layout for the loss.
+        occ = jnp.take(rows_q, inv, axis=0).reshape(ids.shape + (d,))
+        return loss_fn_step2(occ)
+
+    g_step = jax.grad(loss_wrt_step)(step_b)
+    new_step_b = step_b - cfg.step_lr * (
+        g_step + cfg.step_weight_decay * step_b
+    )
+    new_step_b = jnp.maximum(new_step_b, 1e-8)  # Delta must stay positive
+
+    # ---- Line 5: re-quantize w^{t+1} with the NEW Delta (SR). ----
+    k2 = jax.random.fold_in(noise_key, 1)
+    noise = quant.sr_noise(k2, w_new.shape)
+    codes_rows = quant.quantize_codes(
+        w_new, new_step_b, cfg.bits, cfg.rounding, noise
+    )
+    codes = table1.codes.at[uniq].set(codes_rows, mode="drop")
+    step = table1.step.at[uniq].set(new_step_b, mode="drop")
+    new_table = table1._replace(codes=codes, step=step)
+    aux = {
+        "step_grad_norm": jnp.linalg.norm(g_step),
+        "mean_step": jnp.mean(new_step_b),
+    }
+    return new_table, loss, aux
+
+
+def alpt_dense_step(
+    table: lpt.LPTTable,
+    grad_table: jax.Array,
+    loss_fn_q: Callable[[jax.Array], jax.Array],
+    *,
+    cfg: ALPTConfig,
+    lr: jax.Array,
+    noise_key: jax.Array,
+):
+    """pjit-friendly ALPT: dense gradients + dense Delta learning.
+
+    ``grad_table`` is the dense df/dtable from the caller's backward pass.
+    ``loss_fn_q(table_fp) -> scalar`` re-evaluates the loss from a dense float
+    table (used for the Delta gradient via fake-quant).  Untouched rows keep
+    codes and Delta bit-identical.
+    """
+    touched = jnp.any(grad_table != 0.0, axis=-1)
+    w = lpt.dense_table(table)
+    count = table.count + 1
+    t = count.astype(jnp.float32)
+    w_new, mu_new, nu_new = lpt._row_update(
+        w, grad_table, table.mu, table.nu, t, lr, cfg.optimizer, cfg.weight_decay
+    )
+    gscale = grad_scale_factor(cfg, batch_rows=int(jnp.size(touched)), dim=table.dim)
+
+    def loss_wrt_step(step_vec):
+        table_q = quant.fake_quant_lsq(
+            jax.lax.stop_gradient(w_new), step_vec, cfg.bits, gscale
+        )
+        return loss_fn_q(table_q)
+
+    g_step = jax.grad(loss_wrt_step)(table.step)
+    new_step = table.step - cfg.step_lr * (g_step + cfg.step_weight_decay * table.step)
+    new_step = jnp.maximum(new_step, 1e-8)
+    new_step = jnp.where(touched, new_step, table.step)
+
+    noise = quant.sr_noise(jax.random.fold_in(noise_key, 1), w_new.shape)
+    codes_new = quant.quantize_codes(w_new, new_step, cfg.bits, cfg.rounding, noise)
+    mask = touched[:, None]
+    codes = jnp.where(mask, codes_new, table.codes)
+    if table.mu.ndim == 2:
+        mu = jnp.where(mask, mu_new, table.mu)
+        nu = jnp.where(mask, nu_new, table.nu)
+    else:
+        mu = jnp.where(touched, mu_new, table.mu)
+        nu = jnp.where(touched, nu_new, table.nu)
+    return table._replace(codes=codes, step=new_step, mu=mu, nu=nu, count=count)

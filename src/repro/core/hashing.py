@@ -1,0 +1,57 @@
+"""QR compositional-embedding baseline (Shi et al. 2020; paper §4.1).
+
+The n x d table is replaced by E1 in R^{r x d} (indexed by id % r... paper
+text: remainder table is R^{r x d}, quotient table R^{n/r x d}) whose rows are
+element-wise multiplied.  Compression ratio ~= n / (r + n/r) per dimension; the
+paper uses r such that the ratio is 2x.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QRTable(NamedTuple):
+    remainder: jax.Array  # f32 [r, d]
+    quotient: jax.Array  # f32 [ceil(n/r), d]
+    r: int
+
+
+def init_qr(
+    key: jax.Array, n: int, d: int, *, compression: float = 2.0,
+    init_scale: float = 1e-2,
+) -> QRTable:
+    """Pick r so that (r + n/r) ~= n / compression (quadratic formula)."""
+    target = n / compression
+    # r + n/r = target  ->  r^2 - target*r + n = 0
+    disc = target * target - 4.0 * n
+    if disc <= 0:
+        r = max(int(jnp.sqrt(n)), 2)
+    else:
+        r = int((target - disc**0.5) / 2.0)
+        r = max(r, 2)
+    q_rows = -(-n // r)  # ceil
+    k1, k2 = jax.random.split(key)
+    return QRTable(
+        remainder=jax.random.normal(k1, (r, d), jnp.float32) * init_scale,
+        # Quotient table initialized near 1 so the product starts ~= remainder.
+        quotient=1.0 + jax.random.normal(k2, (q_rows, d), jnp.float32) * init_scale,
+        r=r,
+    )
+
+
+def qr_lookup(table: QRTable, ids: jax.Array) -> jax.Array:
+    rem = jnp.take(table.remainder, ids % table.r, axis=0)
+    quo = jnp.take(table.quotient, ids // table.r, axis=0)
+    return rem * quo
+
+
+def qr_params(table: QRTable):
+    """The trainable leaves (r is static)."""
+    return {"remainder": table.remainder, "quotient": table.quotient}
+
+
+def qr_memory_bytes(table: QRTable) -> int:
+    return int((table.remainder.size + table.quotient.size) * 4)

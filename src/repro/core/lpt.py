@@ -1,0 +1,266 @@
+"""Low-precision training (LPT) of embedding tables (paper §2.3, Eq. 8).
+
+The table lives as int8 codes plus a per-row (feature-wise) step size; there is
+NO full-precision master copy.  Each step de-quantizes only the rows a batch
+touches, applies the optimizer update in float, and re-quantizes with SR or DR:
+
+    w_hat^{t+1} = Q( w_hat^t - eta * grad f(w_hat^t) )            (Eq. 8)
+
+Two execution paths share identical semantics:
+
+* ``sparse`` — CTR-style: ids are de-duplicated under jit (`jnp.unique(size=)`),
+  per-unique-row gradients are segment-summed, and only those rows are updated
+  and re-quantized.  This is the paper-faithful path: the de-quantized floats
+  for a batch are "negligible compared to the embedding tables" (§2.3).
+* ``dense`` — LM/pjit-style: the table gradient arrives dense (XLA scatter-add
+  from the token gather); rows whose gradient is exactly zero keep their old
+  codes bit-for-bit, so untouched rows never drift.  This path shards cleanly
+  over a vocab-partitioned mesh axis.
+
+Row optimizers: 'sgd' (Eq. 8 literally), 'adam' (paper §4.1: Adam with
+decoupled weight decay), 'adagrad' (industry-standard per-row accumulator,
+cheapest state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+class LPTTable(NamedTuple):
+    """Quantized embedding table + per-row step + row optimizer state."""
+
+    codes: jax.Array  # int8 [n, d]
+    step: jax.Array  # f32  [n]   (feature-wise Delta; ALPT learns this)
+    # Row-optimizer slots (zeros-shaped () when unused):
+    mu: jax.Array  # f32 [n, d] (adam) | [n] zeros (adagrad/sgd)
+    nu: jax.Array  # f32 [n, d] (adam) | [n] (adagrad accumulator) | [n] zeros
+    count: jax.Array  # int32 scalar — global step for Adam bias correction
+
+    @property
+    def n_rows(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.codes.shape[1]
+
+
+def init_table(
+    key: jax.Array,
+    n: int,
+    d: int,
+    bits: int,
+    *,
+    init_scale: float = 1e-2,
+    step_size: float | None = None,
+    clip_value: float | None = None,
+    optimizer: str = "adam",
+) -> LPTTable:
+    """Initialize weights ~ N(0, init_scale^2), choose Delta, quantize.
+
+    Vanilla LPT (Xu et al. 2021) fixes Delta from a tuned clip value:
+    Delta = clip / 2^{m-1}.  If neither ``step_size`` nor ``clip_value`` is
+    given, Delta is set per-row LSQ-style from the init (the ALPT default).
+    """
+    kw, kn = jax.random.split(key)
+    w = jax.random.normal(kw, (n, d), jnp.float32) * init_scale
+    if step_size is not None:
+        step = jnp.full((n,), step_size, jnp.float32)
+    elif clip_value is not None:
+        step = jnp.full((n,), clip_value / (2 ** (bits - 1)), jnp.float32)
+    else:
+        step = quant.init_step_size(w, bits, per_row=True)
+    noise = quant.sr_noise(kn, w.shape)
+    codes = quant.quantize_codes(w, step, bits, "sr", noise)
+    if optimizer == "adam":
+        mu = jnp.zeros((n, d), jnp.float32)
+        nu = jnp.zeros((n, d), jnp.float32)
+    elif optimizer == "adagrad":
+        mu = jnp.zeros((n,), jnp.float32)
+        nu = jnp.zeros((n,), jnp.float32)
+    elif optimizer == "sgd":
+        mu = jnp.zeros((n,), jnp.float32)
+        nu = jnp.zeros((n,), jnp.float32)
+    else:
+        raise ValueError(f"unknown row optimizer {optimizer!r}")
+    return LPTTable(codes=codes, step=step, mu=mu, nu=nu, count=jnp.zeros((), jnp.int32))
+
+
+def lookup(table: LPTTable, ids: jax.Array) -> jax.Array:
+    """De-quantize the rows for ``ids`` (any leading shape) -> f32 [..., d]."""
+    codes = jnp.take(table.codes, ids, axis=0)
+    step = jnp.take(table.step, ids, axis=0)
+    return quant.dequantize(codes, step)
+
+
+def dense_table(table: LPTTable) -> jax.Array:
+    """Materialize the full de-quantized table (dense/pjit path)."""
+    return quant.dequantize(table.codes, table.step)
+
+
+# ---------------------------------------------------------------------------
+# Row-update rules (shared by the sparse and dense paths).
+# ---------------------------------------------------------------------------
+
+
+def _row_update(
+    w: jax.Array,  # f32 [k, d] current de-quantized rows
+    g: jax.Array,  # f32 [k, d] summed row gradients
+    mu: jax.Array,
+    nu: jax.Array,
+    t: jax.Array,  # scalar f32, 1-indexed adam step
+    lr: jax.Array,
+    optimizer: str,
+    weight_decay: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+):
+    """Returns (w_new, mu_new, nu_new)."""
+    g = g.astype(jnp.float32)
+    if optimizer == "adam":
+        mu = b1 * mu + (1.0 - b1) * g
+        nu = b2 * nu + (1.0 - b2) * jnp.square(g)
+        upd = (mu / (1.0 - b1**t)) / (jnp.sqrt(nu / (1.0 - b2**t)) + eps)
+    elif optimizer == "adagrad":
+        nu = nu + jnp.mean(jnp.square(g), axis=-1)
+        upd = g / (jnp.sqrt(nu)[..., None] + eps)
+    else:  # sgd
+        upd = g
+    if weight_decay:
+        upd = upd + weight_decay * w
+    return w - lr * upd, mu, nu
+
+
+def dedup_ids(ids: jax.Array, n_rows: int):
+    """jit-stable de-duplication: returns (unique_ids [K], inverse [K_in]).
+
+    ``unique_ids`` is padded with ``n_rows`` (an out-of-range sentinel row);
+    scatters use mode='drop' so padding is inert.
+    """
+    flat = ids.reshape(-1)
+    uniq, inv = jnp.unique(
+        flat, return_inverse=True, size=flat.shape[0], fill_value=n_rows
+    )
+    return uniq, inv.reshape(-1)
+
+
+def sparse_apply(
+    table: LPTTable,
+    ids: jax.Array,  # int32 [...], the ids that were looked up
+    grad_rows: jax.Array,  # f32 [..., d], cotangent per lookup occurrence
+    *,
+    lr: jax.Array,
+    bits: int,
+    rounding: str = "sr",
+    noise_key: jax.Array | None = None,
+    optimizer: str = "adam",
+    weight_decay: float = 0.0,
+    new_step: jax.Array | None = None,  # ALPT passes the freshly learned Delta_b
+    return_updated_rows: bool = False,
+):
+    """Paper-faithful LPT update: only rows present in ``ids`` change.
+
+    Duplicate ids in the batch have their gradients summed (the same semantics
+    autodiff would give a dense table scatter-add).
+    """
+    n = table.n_rows
+    d = table.dim
+    flat_ids = ids.reshape(-1)
+    flat_g = grad_rows.reshape(-1, d)
+    uniq, inv = dedup_ids(flat_ids, n)
+    k = uniq.shape[0]
+    # Sum gradients per unique row.
+    g_sum = jnp.zeros((k, d), jnp.float32).at[inv].add(flat_g.astype(jnp.float32))
+    # Gather current rows + optimizer slots (sentinel gathers row 0 harmlessly;
+    # its scatter is dropped).
+    safe = jnp.minimum(uniq, n - 1)
+    w = quant.dequantize(jnp.take(table.codes, safe, axis=0), jnp.take(table.step, safe))
+    count = table.count + 1
+    t = count.astype(jnp.float32)
+    if optimizer == "adam":
+        mu = jnp.take(table.mu, safe, axis=0)
+        nu = jnp.take(table.nu, safe, axis=0)
+    else:
+        mu = jnp.take(table.mu, safe, axis=0)
+        nu = jnp.take(table.nu, safe, axis=0)
+    w_new, mu_new, nu_new = _row_update(
+        w, g_sum, mu, nu, t, lr, optimizer, weight_decay
+    )
+    step_rows = jnp.take(table.step, safe) if new_step is None else new_step
+    if rounding == "sr":
+        if noise_key is None:
+            raise ValueError("SR requires noise_key")
+        noise = quant.sr_noise(noise_key, w_new.shape)
+    else:
+        noise = None
+    new_codes_rows = quant.quantize_codes(w_new, step_rows, bits, rounding, noise)
+    codes = table.codes.at[uniq].set(new_codes_rows, mode="drop")
+    step = table.step.at[uniq].set(step_rows, mode="drop")
+    mu_t = table.mu.at[uniq].set(mu_new, mode="drop")
+    nu_t = table.nu.at[uniq].set(nu_new, mode="drop")
+    new_table = LPTTable(codes=codes, step=step, mu=mu_t, nu=nu_t, count=count)
+    if return_updated_rows:
+        return new_table, (uniq, w_new)
+    return new_table
+
+
+def dense_apply(
+    table: LPTTable,
+    grad_table: jax.Array,  # f32 [n, d] dense gradient (zero on untouched rows)
+    *,
+    lr: jax.Array,
+    bits: int,
+    rounding: str = "sr",
+    noise_key: jax.Array | None = None,
+    optimizer: str = "adam",
+    weight_decay: float = 0.0,
+    new_step: jax.Array | None = None,
+) -> LPTTable:
+    """pjit-friendly LPT update: dense compute, touched-row masking.
+
+    A row is "touched" iff any element of its gradient is nonzero; untouched
+    rows keep their codes/slots bit-identical (exact sparse semantics, but the
+    computation is dense and therefore shards trivially over the vocab axis).
+    """
+    touched = jnp.any(grad_table != 0.0, axis=-1)  # [n]
+    w = dense_table(table)
+    count = table.count + 1
+    t = count.astype(jnp.float32)
+    w_new, mu_new, nu_new = _row_update(
+        w, grad_table, table.mu, table.nu, t, lr, optimizer, weight_decay
+    )
+    step = table.step if new_step is None else new_step
+    if rounding == "sr":
+        if noise_key is None:
+            raise ValueError("SR requires noise_key")
+        noise = quant.sr_noise(noise_key, w_new.shape)
+    else:
+        noise = None
+    codes_new = quant.quantize_codes(w_new, step, bits, rounding, noise)
+    mask = touched[:, None]
+    codes = jnp.where(mask, codes_new, table.codes)
+    if table.mu.ndim == 2:
+        mu = jnp.where(mask, mu_new, table.mu)
+        nu = jnp.where(mask, nu_new, table.nu)
+    else:
+        mu = jnp.where(touched, mu_new, table.mu)
+        nu = jnp.where(touched, nu_new, table.nu)
+    step_out = jnp.where(touched, step, table.step) if new_step is not None else table.step
+    return LPTTable(codes=codes, step=step_out, mu=mu, nu=nu, count=count)
+
+
+def memory_bytes(table: LPTTable, bits: int, count_optimizer: bool = False) -> int:
+    """Training-memory accounting as in paper Table 1 (codes + Delta)."""
+    n, d = table.codes.shape
+    code_bytes = n * d * bits / 8.0
+    step_bytes = n * 4
+    total = code_bytes + step_bytes
+    if count_optimizer:
+        total += table.mu.size * 4 + table.nu.size * 4
+    return int(total)

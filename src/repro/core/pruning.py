@@ -1,0 +1,65 @@
+"""DeepLight-style magnitude pruning baseline (Deng et al. 2021; paper §4.1/B.2).
+
+Train dense for a warmup, then prune-and-retrain with a schedule where the
+pruning ratio grows as  R_x * (1 - D^{k/U})  (R_x target sparsity, k current
+step, D/U damping).  Pruned weights may grow back: the mask is recomputed from
+current magnitudes every ``update_every`` steps rather than frozen.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PruneState(NamedTuple):
+    weights: jax.Array  # f32 [n, d]
+    mask: jax.Array  # bool [n, d]
+    step: jax.Array  # int32 scalar (pruning-schedule clock)
+
+
+class PruneConfig(NamedTuple):
+    target_sparsity: float = 0.5  # R_x (paper: 0.5 -> 2x inference ratio)
+    damping: float = 0.99  # D
+    damping_steps: int = 3000  # U
+    warmup_steps: int = 200
+    update_every: int = 10
+
+
+def init_prune(key: jax.Array, n: int, d: int, *, init_scale: float = 1e-2):
+    w = jax.random.normal(key, (n, d), jnp.float32) * init_scale
+    return PruneState(weights=w, mask=jnp.ones((n, d), bool), step=jnp.zeros((), jnp.int32))
+
+
+def prune_ratio(cfg: PruneConfig, step: jax.Array) -> jax.Array:
+    """R_x * (1 - D^{k/U}) after warmup, 0 before."""
+    k = jnp.maximum(step.astype(jnp.float32) - cfg.warmup_steps, 0.0)
+    return jnp.where(
+        step < cfg.warmup_steps,
+        0.0,
+        cfg.target_sparsity * (1.0 - cfg.damping ** (k / cfg.damping_steps)),
+    )
+
+
+def update_mask(state: PruneState, cfg: PruneConfig) -> PruneState:
+    """Recompute the magnitude mask at the scheduled ratio (regrowth allowed)."""
+    ratio = prune_ratio(cfg, state.step)
+    flat = jnp.abs(state.weights).reshape(-1)
+    k = flat.shape[0]
+    # Threshold = ratio-quantile of |w|; quantile of 0 keeps everything.
+    thresh = jnp.quantile(flat, ratio)
+    mask = jnp.abs(state.weights) > thresh
+    # Never prune everything: keep mask unchanged if ratio == 0.
+    mask = jnp.where(ratio > 0.0, mask, state.weights == state.weights)
+    return state._replace(mask=mask)
+
+
+def prune_lookup(state: PruneState, ids: jax.Array) -> jax.Array:
+    w = jnp.take(state.weights, ids, axis=0)
+    m = jnp.take(state.mask, ids, axis=0)
+    return w * m
+
+
+def sparsity(state: PruneState) -> jax.Array:
+    return 1.0 - jnp.mean(state.mask.astype(jnp.float32))

@@ -1,0 +1,58 @@
+"""QAT baselines (paper §2.2 / §4.1): LSQ and PACT.
+
+Unlike LPT these keep a *full-precision master copy* of the embedding table —
+so they compress inference (4x at int8) but not training memory (1x), exactly
+the distinction Table 1's "Compression ratio" columns draw.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+class QATTable(NamedTuple):
+    weights: jax.Array  # f32 [n, d] — master copy (the thing LPT removes)
+    scale: jax.Array  # f32 [n] — LSQ step size or PACT clip alpha
+
+
+def init_qat(
+    key: jax.Array, n: int, d: int, bits: int, *, method: str = "lsq",
+    init_scale: float = 1e-2,
+) -> QATTable:
+    w = jax.random.normal(key, (n, d), jnp.float32) * init_scale
+    if method == "lsq":
+        scale = quant.init_step_size(w, bits, per_row=True)
+    elif method == "pact":
+        p = 2 ** (bits - 1) - 1
+        scale = quant.init_step_size(w, bits, per_row=True) * p  # alpha = step*p
+    else:
+        raise ValueError(f"unknown QAT method {method!r}")
+    return QATTable(weights=w, scale=scale)
+
+
+def qat_lookup(
+    table: QATTable, ids: jax.Array, bits: int, *, method: str = "lsq",
+    grad_scale: float = 1.0,
+) -> jax.Array:
+    """Fake-quantized lookup: forward sees Q_D(w), backward flows STE to the
+    master weights and (Eq. 7 / PACT rule) to the scale."""
+    w_rows = jnp.take(table.weights, ids, axis=0)
+    s_rows = jnp.take(table.scale, ids, axis=0)
+    if method == "lsq":
+        return quant.fake_quant_lsq(w_rows, s_rows, bits, grad_scale)
+    return quant.fake_quant_pact(w_rows, s_rows, bits)
+
+
+def export_int8(table: QATTable, bits: int, *, method: str = "lsq"):
+    """Post-training export: integer codes + per-row step (the 4x inference win)."""
+    if method == "pact":
+        p = 2 ** (bits - 1) - 1
+        step = table.scale / p
+    else:
+        step = table.scale
+    codes = quant.quantize_codes(table.weights, step, bits, "dr")
+    return codes, step

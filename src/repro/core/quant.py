@@ -1,0 +1,236 @@
+"""Uniform symmetric quantization primitives (paper §2.1).
+
+For m-bit quantization the code book is S = {b_0, ..., b_k}, k = 2^m - 1,
+b_i = Delta * i with integer codes in [-2^{m-1}, 2^{m-1} - 1].
+
+Two rounding functions (Eq. 3/4):
+  * deterministic rounding (DR): round-to-nearest (ties to +inf, matching Eq. 3)
+  * stochastic rounding (SR):   floor(x) + Bernoulli(frac(x))
+
+All functions support a scalar step size or a per-row step size broadcast against
+the trailing embedding dimension (feature-wise Delta, paper §3.2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Rounding = Literal["dr", "sr"]
+
+# int8 container is used for every bit width m <= 8; the *code range* is what
+# changes with m.  This matches deployment practice (sub-byte packing is a
+# storage-format detail; see kernels/sr_round.py for the packed path).
+CODE_DTYPE = jnp.int8
+
+
+def code_bounds(bits: int) -> tuple[int, int]:
+    """Inclusive integer code range [n, p] for m-bit symmetric quantization."""
+    if not 2 <= bits <= 8:
+        raise ValueError(f"bits must be in [2, 8], got {bits}")
+    return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+
+def _broadcast_step(w: jax.Array, step: jax.Array) -> jax.Array:
+    """Broadcast per-row step sizes against the trailing dim of ``w``."""
+    step = jnp.asarray(step, jnp.float32)
+    if step.ndim == 0:
+        return step
+    if step.ndim == w.ndim:
+        return step
+    if step.ndim == w.ndim - 1:
+        return step[..., None]
+    raise ValueError(f"step shape {step.shape} incompatible with weights {w.shape}")
+
+
+def round_deterministic(x: jax.Array) -> jax.Array:
+    """Eq. 3: floor(x) if frac < 0.5 else floor(x)+1 (ties round up)."""
+    return jnp.floor(x + 0.5)
+
+
+def round_stochastic(x: jax.Array, noise: jax.Array) -> jax.Array:
+    """Eq. 4 with explicit uniform noise in [0, 1): floor(x) + (frac(x) > u).
+
+    P[round up] = frac(x) exactly, so E[round(x)] = x.  Passing the noise in
+    (rather than a PRNG key) keeps the Pallas kernel and the oracle bit-exact.
+    """
+    lo = jnp.floor(x)
+    return lo + (x - lo > noise).astype(x.dtype)
+
+
+def quantize_codes(
+    w: jax.Array,
+    step: jax.Array,
+    bits: int,
+    rounding: Rounding = "sr",
+    noise: jax.Array | None = None,
+) -> jax.Array:
+    """Eq. 1: integer codes  R(clip(w / Delta, -2^{m-1}, 2^{m-1}-1)).
+
+    Returns int8 codes (valid range depends on ``bits``).
+    """
+    n, p = code_bounds(bits)
+    step = _broadcast_step(w, step)
+    scaled = jnp.clip(w.astype(jnp.float32) / step, n, p)
+    if rounding == "dr":
+        codes = round_deterministic(scaled)
+    elif rounding == "sr":
+        if noise is None:
+            raise ValueError("stochastic rounding requires noise")
+        codes = round_stochastic(scaled, noise)
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
+    # SR of a clipped value can round up to p+1 only if scaled == p exactly and
+    # frac == 0 -> never; DR of clip <= p likewise. Clip defensively anyway.
+    return jnp.clip(codes, n, p).astype(CODE_DTYPE)
+
+
+def dequantize(codes: jax.Array, step: jax.Array) -> jax.Array:
+    """Eq. 2: w_hat = Delta * w_tilde."""
+    out = codes.astype(jnp.float32)
+    step = _broadcast_step(out, step)
+    return out * step
+
+
+def quantize(
+    w: jax.Array,
+    step: jax.Array,
+    bits: int,
+    rounding: Rounding = "sr",
+    noise: jax.Array | None = None,
+) -> jax.Array:
+    """Full quantizer Q(w) = Delta * codes (Eq. 2) — returns float values in S."""
+    return dequantize(quantize_codes(w, step, bits, rounding, noise), step)
+
+
+def sr_noise(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    """Uniform [0,1) noise for stochastic rounding."""
+    return jax.random.uniform(key, shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through fake-quant + learned step size gradient (LSQ, Eq. 6/7).
+# Used by QAT baselines and by ALPT's step-size sub-step (Algorithm 1, line 4).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fake_quant_lsq(w: jax.Array, step: jax.Array, bits: int, grad_scale: float = 1.0):
+    """Forward: Q_D(w, step).  Backward: STE for w, Eq. 7 for step.
+
+    ``grad_scale`` multiplies the step-size gradient (paper §3.2: g = 1/sqrt(b*d*q)).
+    """
+    return quantize(w, step, bits, rounding="dr")
+
+
+def _fake_quant_fwd(w, step, bits, grad_scale):
+    return fake_quant_lsq(w, step, bits, grad_scale), (w, step)
+
+
+def _fake_quant_bwd(bits, grad_scale, res, g):
+    w, step = res
+    n, p = code_bounds(bits)
+    stepb = _broadcast_step(w, step)
+    scaled = w.astype(jnp.float32) / stepb
+    in_range = (scaled > n) & (scaled < p)
+    # dQ/dw: straight-through inside the clip range, 0 outside.
+    dw = (g * in_range).astype(w.dtype)
+    # dQ/dstep (Eq. 7): -2^{m-1} below, 2^{m-1}-1 above, R(w/D) - w/D inside.
+    dstep_elem = jnp.where(
+        scaled <= n,
+        float(n),
+        jnp.where(scaled >= p, float(p), round_deterministic(scaled) - scaled),
+    )
+    dstep_full = g.astype(jnp.float32) * dstep_elem * grad_scale
+    # Reduce to the shape of ``step`` (scalar or per-row).
+    step_arr = jnp.asarray(step)
+    if step_arr.ndim == 0:
+        dstep = jnp.sum(dstep_full)
+    elif step_arr.ndim == w.ndim - 1:
+        dstep = jnp.sum(dstep_full, axis=-1)
+    else:
+        dstep = dstep_full
+    return dw, dstep.astype(step_arr.dtype)
+
+
+fake_quant_lsq.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+# ---------------------------------------------------------------------------
+# PACT-style clipping (Choi et al. 2018): learnable clip value alpha,
+# uniform quantization of clip(w, -alpha, alpha) with step = alpha / (2^{m-1}-1).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fake_quant_pact(w: jax.Array, alpha: jax.Array, bits: int):
+    p = 2 ** (bits - 1) - 1
+    alpha_b = _broadcast_step(w, alpha)
+    step = alpha_b / p
+    return quantize(w, step, bits, rounding="dr")
+
+
+def _pact_fwd(w, alpha, bits):
+    return fake_quant_pact(w, alpha, bits), (w, alpha)
+
+
+def _pact_bwd(bits, res, g):
+    w, alpha = res
+    p = 2 ** (bits - 1) - 1
+    alpha_b = _broadcast_step(w, alpha)
+    inside = jnp.abs(w) < alpha_b
+    dw = (g * inside).astype(w.dtype)
+    # Outside the clip: d/dalpha clip(w,-a,a) = sign(w). Inside: 0 (PACT).
+    dalpha_full = g.astype(jnp.float32) * jnp.where(inside, 0.0, jnp.sign(w)).astype(
+        jnp.float32
+    )
+    alpha_arr = jnp.asarray(alpha)
+    if alpha_arr.ndim == 0:
+        dalpha = jnp.sum(dalpha_full)
+    elif alpha_arr.ndim == w.ndim - 1:
+        dalpha = jnp.sum(dalpha_full, axis=-1)
+    else:
+        dalpha = dalpha_full
+    return dw, dalpha.astype(alpha_arr.dtype)
+
+
+fake_quant_pact.defvjp(_pact_fwd, _pact_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Sub-byte storage: the int8 container is the compute format; for m <= 4 the
+# *storage* format packs two codes per byte (deployment detail the paper's
+# compression ratios assume at 2/4-bit).
+# ---------------------------------------------------------------------------
+
+
+def pack4(codes: jax.Array) -> jax.Array:
+    """int8 codes in [-8, 7] -> packed uint8 [n, d//2] (low nibble first)."""
+    if codes.shape[-1] % 2:
+        raise ValueError("last dim must be even to pack")
+    u = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack4(packed: jax.Array) -> jax.Array:
+    """Inverse of pack4 -> int8 codes in [-8, 7]."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    # Sign-extend 4-bit two's complement.
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def init_step_size(w: jax.Array, bits: int, per_row: bool = True) -> jax.Array:
+    """LSQ-style init: 2*mean(|w|)/sqrt(p) per row (or globally)."""
+    p = 2 ** (bits - 1) - 1
+    if per_row:
+        mean_abs = jnp.mean(jnp.abs(w), axis=-1)
+    else:
+        mean_abs = jnp.mean(jnp.abs(w))
+    return jnp.maximum(2.0 * mean_abs / jnp.sqrt(float(p)), 1e-8).astype(jnp.float32)

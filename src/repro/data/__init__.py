@@ -1,0 +1,10 @@
+from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic, criteo_like, avazu_like
+from repro.data.lm_synth import LMTokenStream
+
+__all__ = [
+    "CTRDatasetConfig",
+    "CTRSynthetic",
+    "criteo_like",
+    "avazu_like",
+    "LMTokenStream",
+]

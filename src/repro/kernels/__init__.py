@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's embedding hot spots.
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ref.py (jnp oracle),
+ops.py (jit'd wrappers with CPU interpret fallback).
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused de-quantize x int8-weight matmul (quantized LM head).
+
+Computes  y[M, N] = x[M, K] @ (Delta[N] * W~[N, K])^T  without ever writing the
+de-quantized table to HBM: each (bn, bk) int8 weight tile is scaled in VMEM
+immediately before the MXU contraction.  Used for the tied quantized output
+head (beyond-paper optimization; see DESIGN.md §2) where N = vocab.
+
+Arithmetic intensity vs. the naive path: the naive path reads 4 bytes/weight
+(fp32 dequant in HBM) or pays a separate dequant pass; this kernel reads
+1 byte/weight once.  For M=tokens, the matmul FLOPs are unchanged, so the op
+moves from memory-bound toward the compute roofline for small M (decode).
+
+Grid (M/bm, N/bn, K/bk), K innermost for accumulation in an f32 VMEM scratch;
+blocks default to 128x128x512 (MXU 128-lane aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, codes_ref, step_ref, out_ref, acc_ref, *, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    w = codes_ref[...].astype(jnp.float32) * step_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x,
+        w,
+        (((1,), (1,)), ((), ())),  # contract x's K with w's K -> (bm, bn)
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def dequant_matmul(
+    x: jax.Array,  # [M, K] f32/bf16 activations
+    codes: jax.Array,  # [N, K] int8 weight codes (row-major over output dim)
+    step: jax.Array,  # [N] f32 per-row Delta
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    n, k2 = codes.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x[{m},{k}] vs codes[{n},{k2}]")
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"({m},{n},{k}) not divisible by blocks ({bm},{bn},{bk})")
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    fn = pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, 1), lambda i, j, kk: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )
+    return fn(x, codes, step.reshape(n, 1))

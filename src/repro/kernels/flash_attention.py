@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: fused flash-attention forward (GQA + causal + SWA).
+
+This is the §Perf lever identified by the roofline analysis: the pure-JAX
+flash formulation (models/layers.py) bounds live MEMORY but its probability
+matrices still round-trip HBM in the XLA lowering; this kernel keeps the
+entire online-softmax interior in VMEM — HBM traffic collapses to q, k, v in
+and o out, which is what EXPERIMENTS.md §Roofline's fused-adjusted memory
+term models.
+
+Layout: q [BH, T, D], k/v [BKH, S, D] (batch*heads flattened so GQA group
+mapping is a pure index computation).  Grid (BH, nq, nk), kv innermost; the
+accumulator/max/denominator live in VMEM scratch across the kv sweep and the
+output block is written once on the last visited kv block.  Causal/SWA blocks
+outside the footprint are skipped with pl.when (no MXU work issued).
+
+Blocks default to (128, head_dim) — (8,128)-lane aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window, bq: int, bk: int, nk: int,
+            s_true: int, t_true: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q0 = qi * bq
+    k0 = ki * bk
+    # Static-shape footprint test is done on traced ids via pl.when.
+    in_footprint = jnp.asarray(True)
+    if causal:
+        in_footprint &= k0 <= q0 + bq - 1
+    if window is not None:
+        in_footprint &= k0 + bk - 1 >= q0 - window + 1
+
+    @pl.when(in_footprint)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale  # [bq, D]
+        k = k_ref[0].astype(jnp.float32)  # [bk, D]
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [bq, bk]
+        q_ids = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_ids = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = (k_ids < s_true) & (q_ids < t_true)
+        if causal:
+            mask &= q_ids >= k_ids
+        if window is not None:
+            mask &= q_ids - k_ids < window
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_prev = m_ref[...][:, 0]  # [bq]
+        m_new = jnp.maximum(m_prev, scores.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = (l_ref[...][:, 0] * alpha + p.sum(axis=1))[:, None]
+        v = v_ref[0].astype(jnp.float32)  # [bk, D]
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new[:, None]
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...][:, 0], 1e-20)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # [B, T, H, D]
+    k: jax.Array,  # [B, S, KH, D]
+    v: jax.Array,  # [B, S, KH, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_block: int = 128,
+    k_block: int = 128,
+    softmax_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused flash forward; returns [B, T, H, D]."""
+    b, t, h, d = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    bq = min(q_block, t)
+    bk = min(k_block, s)
+    t_pad = -(-t // bq) * bq
+    s_pad = -(-s // bk) * bk
+    # [BH, T, D] / [BKH, S, D] layouts.
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, t, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * kh, s, d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * kh, s, d)
+    if t_pad != t:
+        qf = jnp.pad(qf, ((0, 0), (0, t_pad - t), (0, 0)))
+    if s_pad != s:
+        kf = jnp.pad(kf, ((0, 0), (0, s_pad - s), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, s_pad - s), (0, 0)))
+    nq = t_pad // bq
+    nk = s_pad // bk
+
+    def kv_index(bhi):
+        return (bhi // h) * kh + (bhi % h) // g
+
+    grid = (b * h, nq, nk)
+    fn = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk,
+            nk=nk, s_true=s, t_true=t,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bhi, qi, ki: (bhi, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bhi, qi, ki: (kv_index(bhi), ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bhi, qi, ki: (kv_index(bhi), ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bhi, qi, ki: (bhi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    of = fn(qf, kf, vf)[:, :t]
+    return jnp.moveaxis(of.reshape(b, h, t, d), 1, 2)

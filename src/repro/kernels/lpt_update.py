@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused LPT update — Eq. (8) in a single VMEM pass.
+
+    codes' = SR( clip( (Delta*codes - lr*grad) / Delta' ) )
+
+De-quantize, SGD-update and re-quantize never materialize the fp32 table in
+HBM: per (row_block, col_block) tile the traffic is 1 byte/elem of codes in,
+grad + noise in, and 1 byte/elem of codes out — vs the unfused path's three
+extra fp32 round-trips (dequantized table out, updated table out, quantize
+read).  ``new_step`` lets ALPT requantize with the freshly learned Delta
+(Algorithm 1 line 5) in the same pass.
+
+This is the LPT write-back hot loop for the dense (LM vocab-table) path;
+tiles are (8,128)-aligned VMEM blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(codes_ref, step_ref, grad_ref, noise_ref, new_step_ref, lr_ref,
+            out_ref, *, lo: int, hi: int):
+    codes = codes_ref[...].astype(jnp.float32)
+    step = step_ref[...].astype(jnp.float32)  # [rb, 1]
+    w = codes * step - lr_ref[0, 0] * grad_ref[...].astype(jnp.float32)
+    ns = new_step_ref[...].astype(jnp.float32)
+    scaled = jnp.clip(w / ns, lo, hi)
+    base = jnp.floor(scaled)
+    up = (scaled - base > noise_ref[...]).astype(jnp.float32)
+    out_ref[...] = jnp.clip(base + up, lo, hi).astype(jnp.int8)
+
+
+def lpt_fused_update(
+    codes: jax.Array,  # int8 [R, C]
+    step: jax.Array,  # f32 [R] current Delta
+    grad: jax.Array,  # [R, C] gradient (any float dtype)
+    noise: jax.Array,  # f32 [R, C] uniform [0,1)
+    lr: jax.Array,  # f32 scalar
+    bits: int,
+    *,
+    new_step: jax.Array | None = None,  # f32 [R] (ALPT's Delta'); default step
+    row_block: int = 256,
+    col_block: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    rows, cols = codes.shape
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    rb, cb = min(row_block, rows), min(col_block, cols)
+    if rows % rb or cols % cb:
+        raise ValueError(f"({rows},{cols}) not divisible by ({rb},{cb})")
+    if new_step is None:
+        new_step = step
+    grid = (rows // rb, cols // cb)
+    fn = pl.pallas_call(
+        functools.partial(_kernel, lo=lo, hi=hi),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.int8),
+        interpret=interpret,
+    )
+    return fn(
+        codes, step.reshape(rows, 1), grad, noise, new_step.reshape(rows, 1),
+        jnp.asarray(lr, jnp.float32).reshape(1, 1),
+    )

@@ -1,0 +1,62 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites run everywhere;
+on TPU the compiled kernels are used.  Non-aligned shapes fall back to the
+jnp reference (the kernels demand divisible blocks by design — padding embeds
+the alignment decision in the caller's config, not silently in the op).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dequant_gather import dequant_gather as _dequant_gather
+from repro.kernels.dequant_matmul import dequant_matmul as _dequant_matmul
+from repro.kernels.sr_round import sr_round as _sr_round, sr_round_seeded
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "use_kernel"))
+def dequant_gather(codes, step, ids, *, d_block: int = 512, use_kernel: bool = True):
+    n, d = codes.shape
+    db = min(d_block, d)
+    if not use_kernel or d % db != 0:
+        return ref.dequant_gather_ref(codes, step, ids)
+    return _dequant_gather(
+        codes, step, ids, d_block=db, interpret=_default_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_kernel"))
+def sr_round(w, step, noise, bits: int = 8, *, use_kernel: bool = True):
+    rows, cols = w.shape
+    rb, cb = min(256, rows), min(512, cols)
+    if not use_kernel or rows % rb or cols % cb:
+        return ref.sr_round_ref(w, step, noise, bits)
+    return _sr_round(
+        w, step, noise, bits, row_block=rb, col_block=cb,
+        interpret=_default_interpret(),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "use_kernel")
+)
+def dequant_matmul(
+    x, codes, step, *, block_m=128, block_n=128, block_k=512, use_kernel=True
+):
+    m, k = x.shape
+    n, _ = codes.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    if not use_kernel or m % bm or n % bn or k % bk:
+        return ref.dequant_matmul_ref(x, codes, step)
+    return _dequant_matmul(
+        x, codes, step, block_m=bm, block_n=bn, block_k=bk,
+        interpret=_default_interpret(),
+    )

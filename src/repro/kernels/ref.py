@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact where noise is shared)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dequant_gather_ref(codes: jax.Array, step: jax.Array, ids: jax.Array) -> jax.Array:
+    rows = jnp.take(codes, ids, axis=0).astype(jnp.float32)
+    return rows * jnp.take(step, ids)[:, None]
+
+
+def sr_round_ref(w: jax.Array, step: jax.Array, noise: jax.Array, bits: int) -> jax.Array:
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    scaled = jnp.clip(w.astype(jnp.float32) / step[:, None], lo, hi)
+    base = jnp.floor(scaled)
+    up = (scaled - base > noise).astype(jnp.float32)
+    return jnp.clip(base + up, lo, hi).astype(jnp.int8)
+
+
+def dequant_matmul_ref(
+    x: jax.Array, codes: jax.Array, step: jax.Array, out_dtype=jnp.float32
+) -> jax.Array:
+    w = codes.astype(jnp.float32) * step[:, None]
+    return jnp.dot(x.astype(jnp.float32), w.T).astype(out_dtype)
+
+
+def lpt_fused_update_ref(
+    codes: jax.Array, step: jax.Array, grad: jax.Array, noise: jax.Array,
+    lr, bits: int, new_step: jax.Array | None = None,
+) -> jax.Array:
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    w = codes.astype(jnp.float32) * step[:, None] - lr * grad.astype(jnp.float32)
+    ns = (step if new_step is None else new_step)[:, None]
+    scaled = jnp.clip(w / ns, lo, hi)
+    base = jnp.floor(scaled)
+    up = (scaled - base > noise).astype(jnp.float32)
+    return jnp.clip(base + up, lo, hi).astype(jnp.int8)

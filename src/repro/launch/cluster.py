@@ -1,0 +1,65 @@
+"""Multi-process (real pod) bootstrap for the production mesh.
+
+On a real v5e pod slice each host runs this module, which initializes
+jax.distributed from the standard TPU environment (or explicit flags), builds
+the SAME production mesh as the dry-run, and enters launch.train's loop — the
+dry-run (launch/dryrun.py) proves every (arch x shape) lowers and compiles on
+exactly this mesh, so the only difference on hardware is real ICI instead of
+fake host devices.
+
+    # per host (GKE/GCE give COORDINATOR/NUM_PROCESSES/PROCESS_ID via env):
+    python -m repro.launch.cluster --arch qwen3-1.7b --steps 10000 \
+        --ckpt-dir gs://bucket/run1 [--multipod]
+
+Elasticity contract: restart with a different number of pods/hosts and the
+checkpoint manager re-shards state onto the new mesh (tests/test_checkpoint.py
+::test_elastic_reshard_across_device_counts exercises the mechanism).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--coordinator", default=os.environ.get("COORDINATOR_ADDRESS"))
+    ap.add_argument("--num-processes", type=int,
+                    default=int(os.environ.get("NUM_PROCESSES", "0")) or None)
+    ap.add_argument("--process-id", type=int,
+                    default=int(os.environ.get("PROCESS_ID", "-1")))
+    ap.add_argument("--multipod", action="store_true")
+    args, rest = ap.parse_known_args(argv)
+
+    import jax
+
+    if args.coordinator:
+        jax.distributed.initialize(
+            coordinator_address=args.coordinator,
+            num_processes=args.num_processes,
+            process_id=args.process_id if args.process_id >= 0 else None,
+        )
+    else:
+        # TPU pods auto-discover via the metadata server.
+        jax.distributed.initialize()
+
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multipod)
+    if jax.process_index() == 0:
+        print(f"[cluster] {jax.process_count()} processes, "
+              f"{jax.device_count()} devices, mesh {dict(mesh.shape)}")
+
+    # Hand off to the training driver with the production mesh dims.
+    from repro.launch import train
+
+    model_axis = mesh.shape["model"]
+    data_axis = jax.device_count() // model_axis
+    return train.main(
+        rest + ["--mesh-data", str(data_axis), "--mesh-model", str(model_axis)]
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,439 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any jax import (device count locks on
+# first backend init); everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh, prove memory fits, and dump the roofline inputs (EXPERIMENTS.md §Dry-run).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --multipod
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+  python -m repro.launch.dryrun --list           # show the cell matrix
+
+Each cell writes JSON to benchmarks/dryrun_results/<cell>.json; re-runs skip
+cells whose result file already exists (delete to force).
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import common
+from repro.core import lpt as lpt_mod
+from repro.dist import context as dist_ctx
+from repro.dist import sharding
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.training import lm_trainer
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_results"
+
+# TPU v5e hardware model for the roofline terms (per task spec).
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+
+def arch_dry_config(arch: str, shape_name: str,
+                    embedding: str | None = None) -> tfm.ModelConfig:
+    """Full config tuned for the dry-run: bf16, TP head padding, remat."""
+    over = dict(
+        dtype=jnp.bfloat16,
+        param_dtype=jnp.bfloat16,
+        head_pad_multiple=16,
+        remat=True,
+    )
+    if embedding:
+        over["embedding_method"] = embedding
+    cfg = configs.full_config(arch, **over)
+    return cfg
+
+
+def make_serve_step(cfg: tfm.ModelConfig):
+    def serve_step(params, table, token, cache, cache_len):
+        table_fp = (
+            lpt_mod.dense_table(table)
+            if cfg.embedding_method in ("lpt", "alpt")
+            else table
+        )
+        return tfm.decode_step(params, table_fp, token, cache, cache_len, cfg)
+
+    return serve_step
+
+
+def build_cell(arch: str, shape_name: str, mesh, policy_override=None,
+               embedding=None):
+    """Returns (jitted_fn, example_args_shapes) ready to .lower()."""
+    shape = common.SHAPES[shape_name]
+    cfg = arch_dry_config(arch, shape_name, embedding)
+    tcfg = lm_trainer.LMTrainerConfig()
+    multi_pod = "pod" in mesh.axis_names
+    pol = sharding.default_policy(arch, multi_pod=multi_pod,
+                                  override=policy_override,
+                                  model_size=mesh.shape["model"])
+    state_sds = jax.eval_shape(
+        functools.partial(lm_trainer.init_state, cfg=cfg, tcfg=tcfg),
+        jax.random.PRNGKey(0),
+    )
+    state_spec = sharding.state_pspecs(cfg, pol, tcfg, state_shapes=state_sds)
+    state_sh = sharding.to_named(state_spec, mesh)
+
+    if shape["kind"] in ("train", "prefill"):
+        # prefill lowers the same full-sequence program as training but
+        # without the optimizer; we lower train_step for 'train' and a
+        # forward-only loss for 'prefill'.
+        batch_sds = common.input_specs(cfg, shape_name)
+        batch_spec = sharding.batch_pspecs(batch_sds, cfg, pol, mesh)
+        batch_sh = sharding.to_named(batch_spec, mesh)
+        if shape["kind"] == "train":
+            fn = lm_trainer.make_train_step(cfg, tcfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, NamedSharding(mesh, P())),
+                donate_argnums=(0,),
+            )
+            args = (state_sds, batch_sds)
+        else:
+            eval_fn = lm_trainer.make_eval_step(cfg)
+            jitted = jax.jit(
+                eval_fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=NamedSharding(mesh, P()),
+            )
+            args = (state_sds, batch_sds)
+    else:  # decode
+        b, t = shape["global_batch"], shape["seq_len"]
+        cache_sds = jax.eval_shape(
+            lambda: tfm.init_cache(cfg, b, t)
+        )
+        cache_spec = sharding.cache_pspecs(cfg, pol, b, mesh)
+        cache_sh = sharding.to_named(cache_spec, mesh)
+        dp = sharding._dp_or_none(pol, b, mesh)
+        tok_sh = NamedSharding(mesh, P(dp))
+        scalar_sh = NamedSharding(mesh, P())
+        table_sh = sharding.to_named(
+            sharding.table_pspecs(cfg, pol, tcfg.row_optimizer), mesh
+        )
+        params_sh = sharding.to_named(sharding.param_pspecs(cfg, pol), mesh)
+        serve = make_serve_step(cfg)
+        jitted = jax.jit(
+            serve,
+            in_shardings=(params_sh, table_sh, tok_sh, cache_sh, scalar_sh),
+            out_shardings=(NamedSharding(mesh, P()), cache_sh),
+            donate_argnums=(3,),
+        )
+        args = (
+            state_sds.params,
+            state_sds.table,
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            cache_sds,
+            jax.ShapeDtypeStruct((), jnp.int32),
+        )
+    return cfg, pol, jitted, args
+
+
+def model_flops(cfg: tfm.ModelConfig, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N_active*D for training, 2*N_active*D for one fwd/token."""
+    shape = common.SHAPES[shape_name]
+    n_active = _active_params(cfg)
+    if shape["kind"] == "train":
+        tokens = shape["seq_len"] * shape["global_batch"]
+        return 6.0 * n_active * tokens
+    if shape["kind"] == "prefill":
+        tokens = shape["seq_len"] * shape["global_batch"]
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape["global_batch"]  # one token per sequence
+
+
+def _active_params(cfg: tfm.ModelConfig) -> float:
+    """Parameters touched per token (MoE counts top_k + shared experts only)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    hd = cfg.hd
+    total = v * d if not cfg.tie_embeddings else v * d  # embed (+head if untied)
+    if not cfg.tie_embeddings:
+        total += v * d
+    for layer in range(cfg.n_layers):
+        pos = layer % cfg.period
+        if cfg.layer_type(pos) == "attn":
+            total += d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd
+            total += cfg.n_heads * hd * d
+        else:
+            s = cfg.ssm
+            total += d * s.proj_width + s.conv_width * s.conv_dim + s.d_inner * d
+        if cfg.is_moe(pos):
+            m = cfg.moe
+            total += m.top_k * 3 * d * m.d_ff + d * m.n_experts
+            if m.n_shared_experts:
+                total += 3 * d * m.shared_hidden
+        elif f > 0:
+            total += (3 if cfg.mlp_type == "swiglu" else 2) * d * f
+    return float(total)
+
+
+def _param_bytes(cfg: tfm.ModelConfig) -> float:
+    """Total parameter bytes (bf16 dense + int8 codes + f32 Delta for LPT)."""
+    d, v = cfg.d_model, cfg.vocab_size
+    dense = 0.0
+    for layer in range(cfg.n_layers):
+        pos = layer % cfg.period
+        if cfg.layer_type(pos) == "attn":
+            h, kv = cfg.padded_heads
+            dense += d * (h + 2 * kv) * cfg.hd + h * cfg.hd * d
+        else:
+            s = cfg.ssm
+            dense += d * s.proj_width + s.conv_width * s.conv_dim + s.d_inner * d
+        if cfg.is_moe(pos):
+            m = cfg.moe
+            dense += m.n_experts * 3 * d * m.d_ff + d * m.n_experts
+            dense += 3 * d * m.shared_hidden if m.n_shared_experts else 0
+        elif cfg.d_ff > 0:
+            dense += (3 if cfg.mlp_type == "swiglu" else 2) * d * cfg.d_ff
+    if not cfg.tie_embeddings:
+        dense += v * d
+    bytes_total = dense * 2  # bf16
+    if cfg.embedding_method in ("lpt", "alpt"):
+        bytes_total += v * d * 1 + v * 4  # int8 codes + f32 Delta
+        bytes_total += v * d * 8  # row-adam mu/nu f32 (paper's Adam)
+    else:
+        bytes_total += v * d * 4
+    bytes_total += dense * 8  # dense-param Adam mu/nu f32
+    return bytes_total
+
+
+def analytic_memory(cfg: tfm.ModelConfig, shape_name: str, n_chips: int,
+                    pol) -> dict:
+    """TPU-model HBM estimate per device: parameters/optimizer sharded per
+    policy + scan-saved activations + decode cache.  The XLA:CPU
+    memory_analysis is kept alongside but its buffer assignment (f32
+    promotion, weak fusion, double-buffered wide loops) is not representative
+    of TPU HBM (DESIGN.md §7)."""
+    shape = common.SHAPES[shape_name]
+    model_shards = 16  # 'model' axis
+    data_shards = n_chips // model_shards
+    p_bytes = _param_bytes(cfg)
+    # tp: params+opt sharded over model only; fsdp_tp: over the whole mesh.
+    shard = n_chips if pol.fsdp else model_shards
+    per_dev_params = p_bytes / shard
+    act = 0.0
+    if shape["kind"] in ("train", "prefill"):
+        if pol.pure_dp:
+            data_shards = n_chips
+        b_local = max(shape["global_batch"] // data_shards, 1)
+        t = shape["seq_len"]
+        # Remat: one carry per layer group + 2 passes live working set.
+        carries = cfg.n_groups * b_local * t * cfg.d_model * 2
+        if pol.seq_parallel:
+            carries /= model_shards  # sequence-parallel saved activations
+        act += carries
+        act += 8 * b_local * t * cfg.d_model * 4  # live f32 working set
+        if shape["kind"] == "train" and cfg.embedding_method == "alpt":
+            act *= 2  # ALPT second pass conservatively not shared
+    else:
+        b = shape["global_batch"]
+        b_local = max(b // data_shards, 1) if b >= data_shards else b
+        kv_len = tfm.cache_len_for(cfg, shape["seq_len"])
+        _, kv = cfg.padded_heads
+        n_attn = sum(
+            1 for l in range(cfg.n_layers) if cfg.layer_type(l % cfg.period) == "attn"
+        )
+        hd_shard = model_shards if cfg.hd % model_shards == 0 else 1
+        act += n_attn * 2 * b_local * kv_len * kv * cfg.hd * 2 / hd_shard
+        n_mamba = cfg.n_layers - n_attn
+        if n_mamba and cfg.ssm:
+            s = cfg.ssm
+            act += n_mamba * b_local * s.n_heads * s.headdim * s.d_state * 4 / (
+                model_shards if s.n_heads % model_shards == 0 else 1
+            )
+    total = per_dev_params + act
+    return {
+        "params_bytes_per_dev": per_dev_params,
+        "activation_bytes_per_dev": act,
+        "total_bytes_per_dev": total,
+        "fits_16gb": bool(total < 16e9),
+    }
+
+
+def roofline(hlo_stats: dict, n_chips: int, cfg, shape_name: str) -> dict:
+    """Three-term roofline from the trip-count-aware HLO analysis.
+
+    All inputs are per-device per-step (the SPMD module's shapes are local):
+      compute term    = device_FLOPs / peak_FLOP/s
+      memory term     = device_HBM_bytes / HBM_bw
+      collective term = device_wire_bytes / link_bw
+    """
+    flops = hlo_stats["flops"]
+    mem = hlo_stats["hbm_bytes"]
+    interior = hlo_stats.get("attn_interior_bytes", 0.0)
+    cbytes = float(hlo_stats["collectives"].get("total", 0))
+    compute_s = flops / PEAK_FLOPS
+    # Fused-adjusted: attention/SSD interiors run in VMEM on TPU (Pallas).
+    memory_s = (mem - interior) / HBM_BW
+    collective_s = cbytes / LINK_BW
+    mf = model_flops(cfg, shape_name)
+    hlo_total = flops * n_chips
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "memory_s_raw": mem / HBM_BW,
+        "collective_s": collective_s,
+        "model_flops": mf,
+        "hlo_flops_per_chip": flops,
+        "hlo_flops_total": hlo_total,
+        "useful_flops_ratio": (mf / hlo_total) if hlo_total else 0.0,
+        "bottleneck": max(
+            [("compute", compute_s), ("memory", memory_s),
+             ("collective", collective_s)],
+            key=lambda kv: kv[1],
+        )[0],
+    }
+    dom = max(compute_s, memory_s, collective_s)
+    terms["step_time_lower_bound_s"] = dom
+    # Fraction of the chips' peak that the *useful* model FLOPs would reach if
+    # the step ran exactly at the dominant-term bound (an MFU-style score).
+    terms["roofline_fraction"] = (mf / n_chips / PEAK_FLOPS) / dom if dom else 0.0
+    return terms
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, policy=None,
+             embedding=None, save: bool = True) -> dict:
+    skip = configs.skip_shapes(arch)
+    mesh_tag = "pod512" if multi_pod else "pod256"
+    cell_id = f"{arch}__{shape_name}__{mesh_tag}" + (
+        f"__{policy}" if policy else ""
+    ) + (f"__emb-{embedding}" if embedding else "")
+    out: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                 "policy": policy, "embedding": embedding}
+    if shape_name in skip:
+        out["status"] = "skipped"
+        out["reason"] = skip[shape_name]
+        _save(cell_id, out, save)
+        return out
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cfg, pol, jitted, args = build_cell(arch, shape_name, mesh, policy,
+                                            embedding)
+        out["policy"] = pol.name
+        with mesh, dist_ctx.use(mesh, pol):
+            lowered = jitted.lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        hlo = compiled.as_text()
+        stats = hlo_analysis.analyze(hlo)
+        cost = hlo_analysis.cost_summary(compiled)  # XLA's (not trip-aware)
+        mem = hlo_analysis.memory_summary(compiled)
+        n_chips = mesh.devices.size
+        out.update(
+            status="ok",
+            lower_s=round(t_lower - t0, 1),
+            compile_s=round(t_compile - t_lower, 1),
+            n_chips=n_chips,
+            hlo_stats=stats,
+            xla_cost=cost,
+            memory=mem,
+            analytic_memory=analytic_memory(cfg, shape_name, n_chips, pol),
+            collectives=stats["collectives"],
+            roofline=roofline(stats, n_chips, cfg, shape_name),
+        )
+        out["fits_16gb_hbm"] = out["analytic_memory"]["fits_16gb"]
+        mem_total = mem.get("total_bytes_per_device")
+        if mem_total is not None:
+            out["xla_cpu_bytes_per_device"] = mem_total
+        print(f"[dryrun] {cell_id}: OK "
+              f"(lower {out['lower_s']}s, compile {out['compile_s']}s, "
+              f"bottleneck={out['roofline']['bottleneck']})")
+    except Exception as e:  # noqa: BLE001 — a failing cell is a recorded bug
+        out["status"] = "error"
+        out["error"] = f"{type(e).__name__}: {e}"
+        out["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {cell_id}: FAILED {out['error']}")
+    _save(cell_id, out, save)
+    return out
+
+
+def _save(cell_id: str, out: dict, save: bool):
+    if not save:
+        return
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{cell_id}.json").write_text(json.dumps(out, indent=2))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(configs.ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(common.SHAPES), default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument(
+        "--policy",
+        choices=["tp", "fsdp_tp", "dp", "tp_sp", "fsdp_tp_sp", "fsdp_tp_ep",
+                 "tp_ep"],
+        default=None,
+        help="sharding policy override (§Perf variants: dp = model axis as "
+             "extra data parallelism + ZeRO-1; *_sp = sequence-parallel "
+             "scan carries)",
+    )
+    ap.add_argument("--embedding", choices=["alpt", "lpt", "fp"], default=None,
+                    help="override the embedding method (amortized-ALPT "
+                         "§Perf accounting pairs an alpt cell with an lpt "
+                         "cell)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true", help="re-run cached cells")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in sorted(configs.ARCHS):
+            for shape in common.SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape, mp, None))
+    elif args.arch and args.shape:
+        cells.append((args.arch, args.shape, args.multipod, args.policy,
+                      args.embedding))
+    else:
+        ap.error("need --arch and --shape, or --all / --list")
+
+    if args.list:
+        for c in cells:
+            print(c)
+        return 0
+
+    failures = 0
+    for cell in cells:
+        arch, shape, mp, pol = cell[:4]
+        emb = cell[4] if len(cell) > 4 else None
+        mesh_tag = "pod512" if mp else "pod256"
+        cell_id = (f"{arch}__{shape}__{mesh_tag}"
+                   + (f"__{pol}" if pol else "")
+                   + (f"__emb-{emb}" if emb else ""))
+        path = RESULTS_DIR / f"{cell_id}.json"
+        if path.exists() and not args.force:
+            prev = json.loads(path.read_text())
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[dryrun] {cell_id}: cached ({prev['status']})")
+                continue
+        res = run_cell(arch, shape, multi_pod=mp, policy=pol, embedding=emb)
+        if res["status"] == "error":
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,422 @@
+"""Post-compilation HLO analysis for §Roofline: FLOPs, HBM bytes and
+collective wire-bytes PER DEVICE PER STEP, with while-loop bodies multiplied
+by their trip counts.
+
+Why not compiled.cost_analysis()?  XLA:CPU's HloCostAnalysis visits a while
+body once — a 95-layer scan would be undercounted 95x.  We parse the
+optimized (SPMD-partitioned, post-fusion) HLO text instead:
+
+  * FLOPs    — every ``dot`` (2 * output_elems * contraction_size), traversing
+    fusion bodies, x trip count of enclosing whiles.
+  * HBM bytes — per *kernel* (top-level op or fusion call): operand bytes +
+    output bytes, skipping pure-metadata ops; fusion interiors are registers,
+    not HBM traffic, so fusion bodies are NOT byte-counted.
+  * Collective wire bytes — per-device send/receive volume with ring
+    conventions: all-gather -> output, all-reduce -> 2x output,
+    reduce-scatter/all-to-all/collective-permute -> operand bytes.
+
+Shapes in the partitioned module are per-device, so every number is
+per-device per-step.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_DEF_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\(?\s*(pred|[suf]\d+|bf16|f16|c64|c128)"
+    r"\[([\d,]*)\]"
+)
+# The result type may be a tuple containing "/*index=N*/" comments, so the op
+# is simply the FIRST "word(" token after the '=' (types never have parens
+# directly after a word; operands are bare %names).
+_OP_RE = re.compile(r"=\s.*?\s([a-z][a-z0-9\-]*)\(", re.DOTALL)
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "custom-call", "copy-start", "copy-done", "send", "recv",
+    "send-done", "recv-done", "domain", "opt-barrier",
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+class _Comp:
+    def __init__(self, name):
+        self.name = name
+        self.lines: list[str] = []
+        self.symtab: dict[str, tuple[str, str]] = {}  # name -> (dtype, dims)
+
+
+def _parse(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*[(\s].*\{\s*$", line)
+            if m:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+        if cur is None:
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("//"):
+            cur = None if s == "}" else cur
+            continue
+        cur.lines.append(s)
+        dm = _DEF_RE.match(s)
+        if dm:
+            cur.symtab[dm.group(1)] = (dm.group(2), dm.group(3))
+        else:
+            # Tuple-typed results (while etc.): record name with no shape.
+            tm = re.match(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=", s)
+            if tm:
+                cur.symtab.setdefault(tm.group(1), (None, None))
+    return comps
+
+
+def _op_of(line: str) -> str | None:
+    # Strip metadata (it can contain op names in strings).
+    body = line.split(", metadata=")[0]
+    m = _OP_RE.search(body)
+    return m.group(1) if m else None
+
+
+# --------------------------------------------------------------------------
+# Fused-interior attribution.  On a real TPU the flash-attention and SSD
+# chunk interiors run as fused (Pallas) kernels whose probability / decay
+# matrices never touch HBM; the XLA:CPU lowering materializes them.  The ops
+# carry their einsum subscripts in op_name metadata, and those subscripts are
+# unique to layers.py/ssm.py interiors — we classify on them and report the
+# memory term both raw and fused-adjusted (EXPERIMENTS.md §Roofline).
+# --------------------------------------------------------------------------
+
+_INTERIOR_SIGS = (
+    # flash attention (layers.py): scores / pv / backward dp, dk, dq
+    "bqhgd,bkhd->bhgqk", "bhgqk,bkhd->bhgqd", "bhgqk,bqhgd->bkhd",
+    "bhgqk,bkhd->bqhgd",
+    # mamba2 SSD chunk interior (ssm.py): CB, decay-combine, state in/out
+    "bin,bjn->bij", "bij,bijh,bjhp->bihp", "bin,bhpn,bih->bihp",
+    "bjh,bjn,bjhp->bhpn",
+)
+
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _interior_classifier(hlo: str):
+    """Line classifier + the set of computations that are fully interior
+    (e.g. the flash kv-scan while bodies, whose every dot is signature-
+    matched — their elementwise fusions belong to the same fused kernel)."""
+
+    def line_sig(line: str) -> bool:
+        m = _OPNAME_RE.search(line)
+        return bool(m) and any(sig in m.group(1) for sig in _INTERIOR_SIGS)
+
+    return line_sig
+
+
+def _interior_comps(comps) -> set:
+    out = set()
+    for name, comp in comps.items():
+        dots = [l for l in comp.lines if _op_of(l) == "dot"]
+        if not dots:
+            continue
+        sig_dots = [l for l in dots if _OPNAME_RE.search(l)
+                    and any(s in _OPNAME_RE.search(l).group(1)
+                            for s in _INTERIOR_SIGS)]
+        if sig_dots and len(sig_dots) == len(dots):
+            out.add(name)
+    return out
+
+
+def _operand_names(line: str) -> list[str]:
+    try:
+        inner = line[line.index("(") + 1 :]
+    except ValueError:
+        return []
+    depth = 1
+    end = 0
+    for i, ch in enumerate(inner):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERANDS_RE.findall(inner[:end])
+
+
+def _bytes_of(name: str, symtab) -> int:
+    ent = symtab.get(name)
+    if not ent or ent[0] is None:
+        return 0
+    return _shape_elems(ent[1]) * _DTYPE_BYTES.get(ent[0], 4)
+
+
+def _out_bytes(line: str) -> int:
+    m = _DEF_RE.match(line)
+    if not m:
+        return 0
+    return _shape_elems(m.group(3)) * _DTYPE_BYTES.get(m.group(2), 4)
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Loop bound heuristic: the largest s32 constant in the condition (or in
+    computations it fuses into)."""
+    best = 0
+    seen = set()
+
+    def visit(name):
+        nonlocal best
+        if name in seen or name not in comps:
+            return
+        seen.add(name)
+        for line in comps[name].lines:
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                best = max(best, int(m.group(1)))
+            cm = re.search(r"calls=%?([\w.\-]+)", line)
+            if cm:
+                visit(cm.group(1))
+
+    visit(cond_name)
+    return max(best, 1)
+
+
+def _control_calls(comps, comp: _Comp) -> list[tuple[str, int, bool]]:
+    """(callee, multiplier, is_fusion) edges out of this computation."""
+    out = []
+    for line in comp.lines:
+        op = _op_of(line)
+        if op == "while":
+            cm = re.search(r"condition=%?([\w.\-]+)", line)
+            bm = re.search(r"body=%?([\w.\-]+)", line)
+            if bm:
+                trips = _trip_count(comps, cm.group(1)) if cm else 1
+                out.append((bm.group(1), trips, False))
+        elif op == "conditional":
+            bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if bm:
+                for c in bm.group(1).split(","):
+                    out.append((c.strip().lstrip("%"), 1, False))
+            tm = re.findall(r"(?:true|false)_computation=%?([\w.\-]+)", line)
+            for c in tm:
+                out.append((c, 1, False))
+        elif op == "call":
+            cm = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if cm:
+                out.append((cm.group(1), 1, False))
+        elif op == "fusion":
+            cm = re.search(r"calls=%?([\w.\-]+)", line)
+            if cm:
+                out.append((cm.group(1), 1, True))
+    return out
+
+
+def _line_flops(line: str, symtab) -> float:
+    op = _op_of(line)
+    if op != "dot":
+        return 0.0
+    out_elems = 0
+    m = _DEF_RE.match(line)
+    if m:
+        out_elems = _shape_elems(m.group(3))
+    ops = _operand_names(line)
+    if not ops:
+        return 0.0
+    lhs = symtab.get(ops[0])
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contraction = 1
+    if lhs and lhs[1] is not None and cm and cm.group(1):
+        dims = lhs[1].split(",") if lhs[1] else []
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(dims):
+                contraction *= int(dims[i])
+    return 2.0 * out_elems * contraction
+
+
+def analyze(hlo: str) -> dict:
+    """Returns {'flops', 'hbm_bytes', 'collectives': {...}} per device-step."""
+    comps = _parse(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line)
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        return {"flops": 0.0, "hbm_bytes": 0.0, "collectives": {"total": 0}}
+
+    flops_memo: dict[str, float] = {}
+
+    def flops_of(name, stack=()):
+        if name in flops_memo:
+            return flops_memo[name]
+        if name in stack or name not in comps:
+            return 0.0
+        comp = comps[name]
+        total = sum(_line_flops(l, comp.symtab) for l in comp.lines)
+        for callee, mult, _ in _control_calls(comps, comp):
+            total += mult * flops_of(callee, stack + (name,))
+        flops_memo[name] = total
+        return total
+
+    is_interior = _interior_classifier(hlo)
+    interior_comps = _interior_comps(comps)
+    bytes_memo: dict[str, tuple] = {}
+
+    def bytes_of(name, stack=()):
+        if name in bytes_memo:
+            return bytes_memo[name]
+        if name in stack or name not in comps:
+            return (0.0, 0.0)
+        comp = comps[name]
+        fully_interior = name in interior_comps
+        total = 0.0
+        interior = 0.0
+        for line in comp.lines:
+            op = _op_of(line)
+            if op is None or op in _SKIP_BYTES_OPS:
+                continue
+            # Output-only x2 accounting: every kernel result is written once
+            # and read ~once downstream.  Counting operands instead would
+            # charge scan-carried buffers (stacked saved activations, full
+            # weight stacks) wholesale to every loop iteration — reads of a
+            # slice are already captured by the slice-fusion's own output.
+            b = 2.0 * _out_bytes(line)
+            total += b
+            if fully_interior or is_interior(line):
+                interior += b
+        for callee, mult, is_fusion in _control_calls(comps, comp):
+            if is_fusion:
+                continue  # fusion interiors are registers, not HBM
+            sub_total, sub_interior = bytes_of(callee, stack + (name,))
+            total += mult * sub_total
+            # A fully-interior callee (flash kv-scan body) is interior
+            # wholesale: its elementwise fusions fuse into the same kernel.
+            interior += mult * (sub_total if callee in interior_comps
+                                else sub_interior)
+        bytes_memo[name] = (total, min(interior, total))
+        return bytes_memo[name]
+
+    coll_memo: dict[str, dict] = {}
+
+    def coll_of(name, stack=()):
+        if name in coll_memo:
+            return coll_memo[name]
+        if name in stack or name not in comps:
+            return {}
+        comp = comps[name]
+        out: dict[str, float] = defaultdict(float)
+        for line in comp.lines:
+            op = _op_of(line)
+            if op is None:
+                continue
+            kind = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+            if kind is None:
+                continue
+            operand_b = sum(_bytes_of(o, comp.symtab)
+                            for o in _operand_names(line))
+            output_b = _out_bytes(line)
+            if kind == "all-gather":
+                wire = output_b
+            elif kind == "all-reduce":
+                wire = 2 * output_b
+            else:  # reduce-scatter / all-to-all / collective-permute
+                wire = operand_b
+            out[kind] += wire
+        for callee, mult, is_fusion in _control_calls(comps, comp):
+            if is_fusion:
+                continue
+            for k, v in coll_of(callee, stack + (name,)).items():
+                out[k] += mult * v
+        coll_memo[name] = dict(out)
+        return coll_memo[name]
+
+    kinds = coll_of(entry)
+    total_b, interior_b = bytes_of(entry)
+    return {
+        "flops": flops_of(entry),
+        "hbm_bytes": total_b,
+        "attn_interior_bytes": interior_b,
+        "collectives": {"total": sum(kinds.values()), **kinds},
+    }
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Back-compat wrapper returning just the collectives dict."""
+    return analyze(hlo_text)["collectives"]
+
+
+def memory_summary(compiled) -> dict[str, float]:
+    """Bytes-per-device from compiled.memory_analysis() (None-safe)."""
+    ma = None
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        pass
+    if ma is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if out:
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0.0)
+            + out.get("output_size_in_bytes", 0.0)
+            + out.get("temp_size_in_bytes", 0.0)
+            - out.get("alias_size_in_bytes", 0.0)
+        )
+    return out
+
+
+def cost_summary(compiled) -> dict[str, float]:
+    """XLA's own cost analysis (NOT trip-count aware; kept for reference)."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if not ca:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out = {}
+    for k in ("flops", "bytes accessed", "optimal_seconds"):
+        if k in ca:
+            out[k.replace(" ", "_")] = float(ca[k])
+    return out

@@ -1,0 +1,34 @@
+"""Evaluation metrics for CTR prediction: AUC and Logloss (paper §4.1)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def auc(labels: np.ndarray, scores: np.ndarray) -> float:
+    """Mann-Whitney AUC with tie handling (average ranks)."""
+    labels = np.asarray(labels).astype(np.float64).ravel()
+    scores = np.asarray(scores).astype(np.float64).ravel()
+    pos = labels > 0.5
+    n_pos = int(pos.sum())
+    n_neg = labels.size - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return float("nan")
+    order = np.argsort(scores, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    sorted_scores = scores[order]
+    # Average ranks over ties.
+    i = 0
+    while i < len(sorted_scores):
+        j = i
+        while j + 1 < len(sorted_scores) and sorted_scores[j + 1] == sorted_scores[i]:
+            j += 1
+        ranks[order[i : j + 1]] = 0.5 * (i + j) + 1.0
+        i = j + 1
+    sum_pos_ranks = ranks[pos].sum()
+    return float((sum_pos_ranks - n_pos * (n_pos + 1) / 2.0) / (n_pos * n_neg))
+
+
+def logloss(labels: np.ndarray, probs: np.ndarray, eps: float = 1e-7) -> float:
+    labels = np.asarray(labels).astype(np.float64).ravel()
+    p = np.clip(np.asarray(probs).astype(np.float64).ravel(), eps, 1.0 - eps)
+    return float(-np.mean(labels * np.log(p) + (1.0 - labels) * np.log(1.0 - p)))

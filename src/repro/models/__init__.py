@@ -1,0 +1,1 @@
+from repro.models import ctr, embedding  # noqa: F401

@@ -1,0 +1,149 @@
+"""CTR backbones: DCN (paper §4.1, Wang et al. 2017) and DeepFM (Guo et al. 2017).
+
+Models take the already-looked-up embedding rows [B, F, d] so the same forward
+works for every embedding method in models/embedding.py (and so the trainer
+can differentiate w.r.t. the rows for LPT/ALPT).
+
+Paper Appendix B architecture: DCN with cross/deep depth 3 (widths
+1024/512/256) for Avazu, depth 5 (width 1000) for Criteo; dropout 0.2 on the
+MLP for Criteo.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DCNConfig:
+    n_fields: int
+    emb_dim: int
+    cross_depth: int = 3
+    mlp_widths: tuple[int, ...] = (1024, 512, 256)
+    dropout: float = 0.0
+
+    @property
+    def input_dim(self) -> int:
+        return self.n_fields * self.emb_dim
+
+
+def init_dcn(key: jax.Array, cfg: DCNConfig) -> dict[str, Any]:
+    d0 = cfg.input_dim
+    keys = jax.random.split(key, 2 * cfg.cross_depth + 2 * len(cfg.mlp_widths) + 1)
+    ki = iter(keys)
+    params: dict[str, Any] = {"cross_w": [], "cross_b": [], "mlp": []}
+    for _ in range(cfg.cross_depth):
+        params["cross_w"].append(
+            jax.random.normal(next(ki), (d0,), jnp.float32) / jnp.sqrt(d0)
+        )
+        params["cross_b"].append(jnp.zeros((d0,), jnp.float32))
+    prev = d0
+    for w in cfg.mlp_widths:
+        params["mlp"].append(
+            {
+                "w": jax.random.normal(next(ki), (prev, w), jnp.float32)
+                * jnp.sqrt(2.0 / prev),
+                "b": jnp.zeros((w,), jnp.float32),
+            }
+        )
+        prev = w
+    final_in = d0 + prev
+    params["out_w"] = jax.random.normal(next(ki), (final_in,), jnp.float32) / jnp.sqrt(
+        final_in
+    )
+    params["out_b"] = jnp.zeros((), jnp.float32)
+    return params
+
+
+def dcn_forward(
+    params: dict[str, Any],
+    rows: jax.Array,  # [B, F, d]
+    cfg: DCNConfig,
+    *,
+    dropout_key: jax.Array | None = None,
+) -> jax.Array:
+    """Returns logits [B]."""
+    b = rows.shape[0]
+    x0 = rows.reshape(b, -1)
+    # Cross network: x_{l+1} = x0 * (x_l . w_l) + b_l + x_l
+    x = x0
+    for w, bias in zip(params["cross_w"], params["cross_b"]):
+        xw = x @ w  # [B]
+        x = x0 * xw[:, None] + bias[None, :] + x
+    # Deep network.
+    h = x0
+    key = dropout_key
+    for layer in params["mlp"]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+        if cfg.dropout > 0.0 and key is not None:
+            key, sub = jax.random.split(key)
+            keep = jax.random.bernoulli(sub, 1.0 - cfg.dropout, h.shape)
+            h = jnp.where(keep, h / (1.0 - cfg.dropout), 0.0)
+    concat = jnp.concatenate([x, h], axis=-1)
+    return concat @ params["out_w"] + params["out_b"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    n_fields: int
+    emb_dim: int
+    mlp_widths: tuple[int, ...] = (400, 400, 400)
+    dropout: float = 0.0
+
+    @property
+    def input_dim(self) -> int:
+        return self.n_fields * self.emb_dim
+
+
+def init_deepfm(key: jax.Array, cfg: DeepFMConfig) -> dict[str, Any]:
+    keys = jax.random.split(key, len(cfg.mlp_widths) + 2)
+    ki = iter(keys)
+    params: dict[str, Any] = {"mlp": []}
+    prev = cfg.input_dim
+    for w in cfg.mlp_widths:
+        params["mlp"].append(
+            {
+                "w": jax.random.normal(next(ki), (prev, w), jnp.float32)
+                * jnp.sqrt(2.0 / prev),
+                "b": jnp.zeros((w,), jnp.float32),
+            }
+        )
+        prev = w
+    params["out_w"] = jax.random.normal(next(ki), (prev,), jnp.float32) / jnp.sqrt(prev)
+    params["out_b"] = jnp.zeros((), jnp.float32)
+    return params
+
+
+def deepfm_forward(
+    params: dict[str, Any],
+    rows: jax.Array,  # [B, F, d] — shared FM/deep embeddings
+    first_order: jax.Array,  # [B, F] — per-feature scalar weights (from a d=1 table)
+    cfg: DeepFMConfig,
+    *,
+    dropout_key: jax.Array | None = None,
+) -> jax.Array:
+    b = rows.shape[0]
+    # FM second order: 0.5 * ((sum v)^2 - sum v^2).
+    s = rows.sum(axis=1)
+    fm2 = 0.5 * ((s * s).sum(axis=-1) - (rows * rows).sum(axis=(1, 2)))
+    fm1 = first_order.sum(axis=1)
+    h = rows.reshape(b, -1)
+    key = dropout_key
+    for layer in params["mlp"]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+        if cfg.dropout > 0.0 and key is not None:
+            key, sub = jax.random.split(key)
+            keep = jax.random.bernoulli(sub, 1.0 - cfg.dropout, h.shape)
+            h = jnp.where(keep, h / (1.0 - cfg.dropout), 0.0)
+    deep = h @ params["out_w"] + params["out_b"]
+    return fm1 + fm2 + deep
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean binary cross-entropy from logits (numerically stable)."""
+    return jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

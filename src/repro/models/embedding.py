@@ -1,0 +1,139 @@
+"""One embedding-table API over all methods in paper Table 1.
+
+Methods: 'fp', 'lpt', 'alpt', 'lsq', 'pact', 'hash', 'prune'.
+
+Lookup/update semantics per method family:
+  * float-leaf methods ('fp', 'lsq', 'pact', 'hash', 'prune') — ``params()``
+    exposes differentiable leaves, updated by the caller's optimizer.
+  * integer-table methods ('lpt', 'alpt') — the table is int8 state, not a
+    differentiable leaf.  The trainer differentiates w.r.t. the *looked-up
+    rows* and calls ``apply_row_grads`` (Eq. 8 / Algorithm 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alpt, hashing, lpt, pruning, qat, quant
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingSpec:
+    method: str  # fp | lpt | alpt | lsq | pact | hash | prune
+    n: int
+    d: int
+    bits: int = 8
+    init_scale: float = 1e-2
+    # LPT (Xu et al. 2021) fixes Delta via a tuned clip value:
+    clip_value: float | None = None
+    # ALPT hyper-parameters (paper §4.1):
+    alpt: alpt.ALPTConfig = alpt.ALPTConfig()
+    row_optimizer: str = "adam"
+    hash_compression: float = 2.0
+    prune: pruning.PruneConfig = pruning.PruneConfig()
+
+    @property
+    def is_integer_table(self) -> bool:
+        return self.method in ("lpt", "alpt")
+
+
+FLOAT_METHODS = ("fp", "lsq", "pact", "hash", "prune")
+INT_METHODS = ("lpt", "alpt")
+
+
+def init_embedding(key: jax.Array, spec: EmbeddingSpec) -> Any:
+    if spec.method == "fp":
+        return jax.random.normal(key, (spec.n, spec.d), jnp.float32) * spec.init_scale
+    if spec.method in ("lpt", "alpt"):
+        return lpt.init_table(
+            key,
+            spec.n,
+            spec.d,
+            spec.bits,
+            init_scale=spec.init_scale,
+            clip_value=spec.clip_value if spec.method == "lpt" else None,
+            optimizer=spec.row_optimizer,
+        )
+    if spec.method in ("lsq", "pact"):
+        return qat.init_qat(
+            key, spec.n, spec.d, spec.bits, method=spec.method,
+            init_scale=spec.init_scale,
+        )
+    if spec.method == "hash":
+        return hashing.init_qr(
+            key, spec.n, spec.d, compression=spec.hash_compression,
+            init_scale=spec.init_scale,
+        )
+    if spec.method == "prune":
+        return pruning.init_prune(key, spec.n, spec.d, init_scale=spec.init_scale)
+    raise ValueError(f"unknown embedding method {spec.method!r}")
+
+
+def lookup(state: Any, ids: jax.Array, spec: EmbeddingSpec,
+           grad_scale: float = 1.0) -> jax.Array:
+    """De-quantized / fake-quantized / masked rows [..., d]."""
+    if spec.method == "fp":
+        return jnp.take(state, ids, axis=0)
+    if spec.method in ("lpt", "alpt"):
+        return lpt.lookup(state, ids)
+    if spec.method in ("lsq", "pact"):
+        return qat.qat_lookup(state, ids, spec.bits, method=spec.method,
+                              grad_scale=grad_scale)
+    if spec.method == "hash":
+        return hashing.qr_lookup(state, ids)
+    if spec.method == "prune":
+        return pruning.prune_lookup(state, ids)
+    raise ValueError(spec.method)
+
+
+def trainable_params(state: Any, spec: EmbeddingSpec):
+    """Differentiable leaves for float-leaf methods (None for int tables)."""
+    if spec.method == "fp":
+        return state
+    if spec.method in ("lsq", "pact"):
+        return {"weights": state.weights, "scale": state.scale}
+    if spec.method == "hash":
+        return {"remainder": state.remainder, "quotient": state.quotient}
+    if spec.method == "prune":
+        return {"weights": state.weights}
+    return None
+
+
+def with_params(state: Any, params: Any, spec: EmbeddingSpec):
+    """Rebuild state from updated differentiable leaves."""
+    if spec.method == "fp":
+        return params
+    if spec.method in ("lsq", "pact"):
+        return qat.QATTable(weights=params["weights"], scale=params["scale"])
+    if spec.method == "hash":
+        return hashing.QRTable(
+            remainder=params["remainder"], quotient=params["quotient"], r=state.r
+        )
+    if spec.method == "prune":
+        return state._replace(weights=params["weights"])
+    return state
+
+
+def memory_bytes(state: Any, spec: EmbeddingSpec, *, training: bool) -> int:
+    """Embedding-memory accounting as in paper Table 1's compression columns."""
+    n, d = spec.n, spec.d
+    fp = n * d * 4
+    if spec.method == "fp":
+        return fp
+    if spec.method in ("lpt", "alpt"):
+        return int(n * d * spec.bits / 8) + n * 4
+    if spec.method in ("lsq", "pact"):
+        # Training keeps the fp master copy; inference ships codes + step.
+        return fp + n * 4 if training else int(n * d * spec.bits / 8) + n * 4
+    if spec.method == "hash":
+        return hashing.qr_memory_bytes(state)
+    if spec.method == "prune":
+        # Unstructured sparsity: training keeps dense + mask; inference CSR-ish.
+        if training:
+            return fp + n * d // 8
+        keep = float(jnp.mean(state.mask.astype(jnp.float32)))
+        return int(fp * keep)
+    raise ValueError(spec.method)

@@ -1,0 +1,369 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, GQA/SWA attention, MLPs.
+
+All functions are pure; parameters are plain dicts of arrays.  Attention is a
+pure-JAX flash formulation (python-unrolled Q blocks, lax.scan over KV blocks
+with online softmax) so 32k/500k contexts compile with bounded live memory and
+causal/sliding-window FLOPs are not doubled by full-mask waste — this is what
+keeps the §Roofline compute term honest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- norms
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+
+
+def rope_angles(positions: jax.Array, head_dim: int, base: float = 10000.0):
+    """positions [...]-> (cos, sin) of shape [..., head_dim//2], f32."""
+    half = head_dim // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [B, T, H, D]; cos/sin [B, T, D//2] -> rotated x (split-half layout)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def mrope_angles(
+    positions3: jax.Array,  # [3, B, T] (temporal, height, width) positions
+    head_dim: int,
+    sections: tuple[int, int, int],
+    base: float = 10000.0,
+):
+    """Qwen2-VL M-RoPE: frequency bands split across 3 position streams.
+
+    sections sum to head_dim//2; band j uses positions3[s(j)] where s maps the
+    frequency index to its section.  For text tokens all three streams are
+    equal, reducing M-RoPE to standard RoPE exactly.
+    """
+    half = head_dim // 2
+    if sum(sections) != half:
+        raise ValueError(f"sections {sections} must sum to head_dim//2={half}")
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )  # [half]
+    pos = jnp.take(positions3, sec_id, axis=0)  # [half, B, T]
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # [B, T, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# ----------------------------------------------------------------- attention
+
+
+def pad_heads(n_heads: int, n_kv_heads: int, multiple: int) -> tuple[int, int]:
+    """Pad head counts so q-heads shard over ``multiple`` and divide kv-heads.
+
+    Padded heads are dead weight (zero output-projection rows), the standard
+    trick for archs like smollm (9H) / qwen2-vl (28H) on a 16-way tensor axis;
+    see DESIGN.md §5.  Returns (padded_q_heads, padded_kv_heads).
+    """
+    h = n_heads
+    if multiple > 1:
+        h = ((n_heads + multiple - 1) // multiple) * multiple
+    kv = n_kv_heads
+    while h % kv != 0:
+        kv += 1
+    return h, kv
+
+
+def _block_mask(q_ids, k_ids, s, causal, window):
+    mask = (k_ids < s)[None, :]
+    if causal:
+        mask &= q_ids[:, None] >= k_ids[None, :]
+    if window is not None:
+        mask &= q_ids[:, None] - k_ids[None, :] < window
+    return mask
+
+
+def _kv_range(q0, q1, s, causal, window, k_block, q_offset):
+    """Static KV-block footprint [k_start, k_end) of q rows [q0, q1)."""
+    k_end = min(q_offset + q1, s) if causal else s
+    k_start = 0
+    if window is not None:
+        k_start = max(0, q_offset + q0 - window + 1)
+    k_start = (k_start // k_block) * k_block
+    return k_start, k_end
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, q_block, k_block, scale,
+                    s_true):
+    """Returns (o [B,T,KH,G,D], lse [B,KH,G,T]) — the flash residuals.
+    ``s_true`` is the unpadded KV length (padding is mask-neutralized)."""
+    b, t, kh, g, d = q.shape
+    s = s_true
+    out = jnp.zeros((b, t, kh, g, d), q.dtype)
+    lse = jnp.zeros((b, kh, g, t), jnp.float32)
+    n_q = -(-t // q_block)
+    for qi in range(n_q):
+        q0, q1 = qi * q_block, min((qi + 1) * q_block, t)
+        qb = q1 - q0
+        k_start, k_end = _kv_range(q0, q1, s, causal, window, k_block, q_offset)
+        if k_end <= k_start:
+            continue
+        n_k = -(-(k_end - k_start) // k_block)
+        q_blk = q[:, q0:q1].astype(jnp.float32) * scale
+        q_ids = q_offset + jnp.arange(q0, q1)
+
+        def kv_step(carry, ki):
+            acc, m_run, l_run = carry
+            ks = k_start + ki * k_block
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ks, k_block, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ks, k_block, axis=1)
+            k_ids = ks + jnp.arange(k_block)
+            scores = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk,
+                                k_blk.astype(jnp.float32))
+            mask = _block_mask(q_ids, k_ids, s, causal, window)
+            scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+            m_new = jnp.maximum(m_run, scores.max(axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(scores - m_safe[..., None]), 0.0)
+            alpha = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0)
+            l_new = l_run * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+            return (acc * alpha[..., None] + pv, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, kh, g, qb, d), jnp.float32)
+        m0 = jnp.full((b, kh, g, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, qb), jnp.float32)
+        (acc, m_run, l_run), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                              jnp.arange(n_k))
+        o_blk = acc / jnp.maximum(l_run, 1e-20)[..., None]
+        lse_blk = m_run + jnp.log(jnp.maximum(l_run, 1e-20))
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, jnp.moveaxis(o_blk, 3, 1).astype(q.dtype), q0, axis=1
+        )
+        lse = jax.lax.dynamic_update_slice_in_dim(lse, lse_blk, q0, axis=3)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, o, lse, do, causal, window, q_offset, q_block,
+                    k_block, scale, s_true, t_true):
+    """Flash backward: outer python loop over KV blocks, inner scan over the
+    Q blocks that touch them.  Residuals are O(T*D); dq is a f32 carry.
+    dk/dv are written once per KV block (no full-size carry)."""
+    b, t, kh, g, d = q.shape  # t is the q_block-padded length
+    s_pad = k.shape[1]
+    s = s_true
+    n_q = -(-t // q_block)
+    n_k = -(-s // k_block)  # padded-tail KV blocks are fully masked; skip them
+    # delta = rowsum(do * o)  [B, KH, G, T]
+    delta = jnp.einsum("bthgd,bthgd->bhgt", do.astype(jnp.float32),
+                       o.astype(jnp.float32))
+    dq = jnp.zeros((b, t, kh, g, d), jnp.float32)
+    # Cotangents match the padded inputs; padded-tail blocks stay zero.
+    dk = jnp.zeros((b, s_pad, kh, d), jnp.float32)
+    dv = jnp.zeros((b, s_pad, kh, d), jnp.float32)
+
+    for ki in range(n_k):
+        ks = ki * k_block
+        ke = min(ks + k_block, s_pad)
+        kb = ke - ks
+        # Q rows that can see this KV block.
+        if causal:
+            q_lo = max(ks - q_offset, 0)
+        else:
+            q_lo = 0
+        q_hi = t_true
+        if window is not None:
+            q_hi = min(t_true, ke - 1 + window - q_offset + 1)
+        if q_lo >= q_hi:
+            continue
+        qi0 = q_lo // q_block
+        qi1 = -(-q_hi // q_block)
+        k_blk = k[:, ks:ke].astype(jnp.float32)
+        v_blk = v[:, ks:ke].astype(jnp.float32)
+        k_ids = ks + jnp.arange(kb)
+
+        def q_step(carry, qi):
+            dk_a, dv_a, dq_run = carry
+            q0 = qi * q_block
+            q_blk = jax.lax.dynamic_slice_in_dim(q, q0, q_block, axis=1)
+            do_blk = jax.lax.dynamic_slice_in_dim(do, q0, q_block, axis=1)
+            lse_blk = jax.lax.dynamic_slice_in_dim(lse, q0, q_block, axis=3)
+            dlt_blk = jax.lax.dynamic_slice_in_dim(delta, q0, q_block, axis=3)
+            q_ids = q_offset + q0 + jnp.arange(q_block)
+            qs = q_blk.astype(jnp.float32) * scale
+            scores = jnp.einsum("bqhgd,bkhd->bhgqk", qs, k_blk)
+            mask = _block_mask(q_ids, k_ids, s, causal, window)
+            mask = mask & (q_ids < t_true + q_offset)[:, None]  # tail q pad
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(scores - lse_blk[..., None]), 0.0)
+            do32 = do_blk.astype(jnp.float32)
+            dv_a = dv_a + jnp.einsum("bhgqk,bqhgd->bkhd", p, do32)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", do32, v_blk)
+            ds = p * (dp - dlt_blk[..., None])
+            dq_blk = jnp.einsum("bhgqk,bkhd->bqhgd", ds, k_blk) * scale
+            dk_a = dk_a + jnp.einsum("bhgqk,bqhgd->bkhd", ds, qs)
+            dq_run = jax.lax.dynamic_update_slice_in_dim(
+                dq_run,
+                jax.lax.dynamic_slice_in_dim(dq_run, q0, q_block, 1) + dq_blk,
+                q0, axis=1,
+            )
+            return (dk_a, dv_a, dq_run), None
+
+        dk_a0 = jnp.zeros((b, kb, kh, d), jnp.float32)
+        dv_a0 = jnp.zeros((b, kb, kh, d), jnp.float32)
+        (dk_a, dv_a, dq), _ = jax.lax.scan(
+            q_step, (dk_a0, dv_a0, dq), jnp.arange(qi0, qi1)
+        )
+        dk = dk.at[:, ks:ke].set(dk_a)
+        dv = dv.at[:, ks:ke].set(dv_a)
+    # dk includes the *scale on q side already (ds uses qs = q*scale for dk,
+    # and dq multiplied by scale) — consistent with scores = (q*scale).k.
+    return dq, dk, dv
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10)
+)
+def _flash_core(q, k, v, causal, window, q_offset, q_block, k_block, scale,
+                s_true, t_true):
+    o, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, q_block,
+                           k_block, scale, s_true)
+    return o
+
+
+def _flash_core_fwd(q, k, v, causal, window, q_offset, q_block, k_block, scale,
+                    s_true, t_true):
+    o, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset, q_block,
+                             k_block, scale, s_true)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_core_bwd(causal, window, q_offset, q_block, k_block, scale, s_true,
+                    t_true, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _flash_bwd_impl(
+        q, k, v, o, lse, do, causal, window, q_offset, q_block, k_block, scale,
+        s_true, t_true,
+    )
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, T, H, D]
+    k: jax.Array,  # [B, S, KH, D]
+    v: jax.Array,  # [B, S, KH, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,  # sliding-window size (None = full)
+    q_offset: int = 0,  # absolute position of q[0] (prefill continuation)
+    q_block: int = 512,
+    k_block: int = 1024,
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    """Memory-bounded attention with a flash-style custom VJP.
+
+    Forward: python-unrolled Q blocks, online-softmax scan over only the KV
+    blocks each Q block's causal/window footprint touches (HLO FLOPs ~= true
+    masked FLOPs).  Backward: custom VJP saving only (q, k, v, o, lse) —
+    O(T*D) residuals instead of the O(T^2) that autodiff-through-scan keeps.
+    """
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    kh = k.shape[2]
+    g = h // kh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    q_block = min(q_block, t)
+    k_block = min(k_block, s)
+    # Pad so every block is full-size (masks neutralize padding).
+    t_pad = -(-t // q_block) * q_block
+    s_pad = -(-s // k_block) * k_block
+    qg = q.reshape(b, t, kh, g, d)
+    if t_pad != t:
+        qg = jnp.pad(qg, [(0, 0), (0, t_pad - t), (0, 0), (0, 0), (0, 0)])
+    if s_pad != s:
+        pad = [(0, 0), (0, s_pad - s), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    o = _flash_core(qg, k, v, causal, window, q_offset, q_block, k_block,
+                    scale, s, t)
+    return o[:, :t].reshape(b, t, h, d)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, H, D]
+    k_cache: jax.Array,  # [B, S, KH, D]
+    v_cache: jax.Array,  # [B, S, KH, D]
+    cache_len: jax.Array,  # int32 [] or [B] — valid prefix length
+    *,
+    window: int | None = None,
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    """Single-token attention against a KV cache (the serve_step hot loop)."""
+    b, _, h, d = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kh, g, d).astype(jnp.float32) * scale
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32))
+    k_ids = jnp.arange(s)
+    cl = jnp.asarray(cache_len)
+    cl = cl[:, None] if cl.ndim == 1 else cl[None, None]
+    valid = k_ids[None, :] < cl  # [B or 1, S]
+    if window is not None:
+        valid &= k_ids[None, :] >= (cl - window)
+    valid = jnp.broadcast_to(valid, (b, s))
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ----------------------------------------------------------------- MLPs
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    """LLaMA-family MLP: down( silu(x @ gate) * (x @ up) )."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in, w_out: jax.Array, b_out):
+    h = jax.nn.gelu(x @ w_in + b_in)
+    return h @ w_out + b_out
+
+
+# ----------------------------------------------------------------- init
+
+
+def dense_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) / math.sqrt(fan_in)).astype(dtype)

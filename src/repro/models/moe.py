@@ -1,0 +1,212 @@
+"""Mixture-of-Experts: top-k routing with per-sample capacity dispatch.
+
+Design for GSPMD (DESIGN.md §5): the dispatch buffer keeps the batch dim
+leading — [B, E, C, d] with C = ceil(S*k/E * capacity_factor) per *sample* —
+so every routing op (cumsum, scatter, gather) is local to a data shard under
+pjit; the only collective a MoE layer induces is the same all-reduce a dense
+Megatron MLP has (contraction over the 'model'-sharded expert inner dim).
+
+Supports shared experts (DeepSeek-MoE: always-on experts added to the routed
+output) and the standard load-balance auxiliary loss.  Token order within a
+sample decides capacity drops (residual passes dropped tokens through).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.context import hint
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int  # per-expert hidden dim
+    n_shared_experts: int = 0
+    shared_d_ff: int | None = None  # defaults to d_ff * n_shared
+    capacity_factor: float = 1.25
+    normalize_gates: bool = True  # renormalize top-k probs (Mixtral-style)
+    aux_loss_coef: float = 0.01
+
+    @property
+    def shared_hidden(self) -> int:
+        if self.n_shared_experts == 0:
+            return 0
+        return self.shared_d_ff or self.d_ff * self.n_shared_experts
+
+
+def init_moe(key: jax.Array, cfg: MoEConfig, dtype=jnp.float32) -> dict[str, Any]:
+    k_r, k1, k2, k3, s1, s2, s3 = jax.random.split(key, 7)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    scale_in = 1.0 / jnp.sqrt(d)
+    scale_out = 1.0 / jnp.sqrt(f)
+    params = {
+        "router": (jax.random.normal(k_r, (d, e)) * scale_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k1, (e, d, f)) * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (e, d, f)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (e, f, d)) * scale_out).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.shared_hidden
+        params["shared"] = {
+            "w_gate": (jax.random.normal(s1, (d, fs)) * scale_in).astype(dtype),
+            "w_up": (jax.random.normal(s2, (d, fs)) * scale_in).astype(dtype),
+            "w_down": (jax.random.normal(s3, (fs, d)) * scale_out).astype(dtype),
+        }
+    return params
+
+
+def capacity(cfg: MoEConfig, seq_len: int) -> int:
+    c = int(seq_len * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(c, 1)
+
+
+def moe_forward(
+    params: dict[str, Any],
+    x: jax.Array,  # [B, S, d]
+    cfg: MoEConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B, S, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(cfg, s)
+
+    logits = x.astype(jnp.float32) @ params["router"]  # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # [B, S, k]
+    if cfg.normalize_gates:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(axis=-1, keepdims=True), 1e-9
+        )
+
+    # Position of each (token, slot) within its expert, per sample.
+    oh = jax.nn.one_hot(expert_ids, e, dtype=jnp.int32)  # [B, S, k, E]
+    oh_flat = oh.reshape(b, s * k, e)
+    pos = jnp.cumsum(oh_flat, axis=1) - oh_flat  # exclusive prefix count
+    pos_in_expert = (pos * oh_flat).sum(-1).reshape(b, s, k)  # [B, S, k]
+    keep = pos_in_expert < c
+
+    # Scatter tokens into [B, E, C, d]; dropped slots scatter out of range.
+    flat_e = expert_ids.reshape(b, s * k)
+    flat_p = jnp.where(keep.reshape(b, s * k), pos_in_expert.reshape(b, s * k), c)
+    x_rep = jnp.repeat(x[:, :, None, :], k, axis=2).reshape(b, s * k, d)
+    buf = jnp.zeros((b, e, c, d), x.dtype)
+    bidx = jnp.arange(b)[:, None]
+    buf = buf.at[bidx, flat_e, flat_p].add(x_rep, mode="drop")
+    # Under expert parallelism this constraint makes the scatter above the
+    # dispatch all-to-all and the per-expert matmuls fully local.
+    buf = hint(buf, "moe_buf")
+
+    # Per-expert SwiGLU (einsum keeps the expert dim explicit for sharding).
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    y_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])  # [B, E, C, d]
+    y_buf = hint(y_buf, "moe_buf")
+
+    # Gather back + gate-combine.
+    y_tok = y_buf[bidx, flat_e, jnp.minimum(flat_p, c - 1)]  # [B, S*k, d]
+    y_tok = y_tok * (keep.reshape(b, s * k, 1) * gate_vals.reshape(b, s * k, 1)).astype(
+        y_tok.dtype
+    )
+    y = y_tok.reshape(b, s, k, d).sum(axis=2)
+
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        hs = jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_up"])
+        y = y + hs @ sh["w_down"]
+
+    # Load-balance loss (Switch/Mixtral form): E * sum_e f_e * P_e.
+    frac_tokens = jnp.mean(
+        (oh.sum(axis=2) > 0).astype(jnp.float32), axis=(0, 1)
+    )  # [E]
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.aux_loss_coef * e * jnp.sum(frac_tokens * mean_probs)
+    return y.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert parallelism (shard_map interior).  EXPERIMENTS.md §Perf measured that
+# expressing EP through GSPMD sharding constraints alone triggers involuntary
+# full rematerialization (412 s collective term); this explicit dispatch is
+# the fix: tokens are sequence-split across the model axis, all-to-all'd to
+# their expert owners, processed fully locally, and all-to-all'd back; one
+# psum restores the replicated activation layout.
+# ---------------------------------------------------------------------------
+
+
+def moe_forward_ep(
+    params: dict[str, Any],  # w_* sharded over experts OUTSIDE; local E/n here
+    x: jax.Array,  # [B, S, d] — replicated over the model axis (local view)
+    cfg: MoEConfig,
+    axis: str,  # model-axis name inside shard_map
+) -> tuple[jax.Array, jax.Array]:
+    """Runs INSIDE shard_map(mesh, model axis = ``axis``).
+
+    Local views: x [B, S, d] (same on every model rank of a data shard);
+    params['w_*'] [E_loc, d, f] (this rank's experts); router replicated.
+    Returns the full [B, S, d] output (replicated over ``axis``) + aux loss.
+    """
+    n = jax.lax.axis_size(axis)
+    rank = jax.lax.axis_index(axis)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    e_loc = e // n
+    s_loc = s // n
+    # 1. Sequence-split the (replicated) tokens across model ranks.
+    xs = jax.lax.dynamic_slice_in_dim(x, rank * s_loc, s_loc, axis=1)
+    logits = xs.astype(jnp.float32) @ params["router"]  # [B, s_loc, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)
+    if cfg.normalize_gates:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9
+        )
+    # 2. Dispatch into a per-destination-rank buffer [n, E_loc, C, d].
+    c = max(int(s_loc * k * cfg.capacity_factor / e) + 1, 1)
+    oh = jax.nn.one_hot(expert_ids, e, dtype=jnp.int32)  # [B, s_loc, k, E]
+    oh_flat = oh.reshape(b, s_loc * k, e)
+    pos = jnp.cumsum(oh_flat, axis=1) - oh_flat
+    pos_in_expert = (pos * oh_flat).sum(-1).reshape(b, s_loc * k)
+    keep = pos_in_expert < c
+    flat_e = expert_ids.reshape(b, s_loc * k)
+    flat_p = jnp.where(keep, pos_in_expert, c)
+    x_rep = jnp.repeat(xs[:, :, None, :], k, axis=2).reshape(b, s_loc * k, d)
+    send = jnp.zeros((n, e_loc, b, c, d), x.dtype)
+    dest_rank = flat_e // e_loc
+    dest_exp = flat_e % e_loc
+    bidx = jnp.arange(b)[:, None]
+    send = send.at[dest_rank, dest_exp, bidx, flat_p].add(x_rep, mode="drop")
+    # 3. All-to-all: rank r receives every rank's slice for ITS experts.
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    # recv [n(source), e_loc, b, c, d] — tokens for this rank's experts.
+    h = jax.nn.silu(jnp.einsum("sebcd,edf->sebcf", recv, params["w_gate"]))
+    h = h * jnp.einsum("sebcd,edf->sebcf", recv, params["w_up"])
+    y_buf = jnp.einsum("sebcf,efd->sebcd", h, params["w_down"])
+    # 4. Return trip + combine into this rank's token slice.
+    back = jax.lax.all_to_all(y_buf, axis, split_axis=0, concat_axis=0,
+                              tiled=False)  # [n(dest->home), e_loc, b, c, d]
+    y_tok = back[dest_rank, dest_exp, bidx, jnp.minimum(flat_p, c - 1)]
+    y_tok = y_tok * (keep[..., None] * gate_vals.reshape(b, s_loc * k, 1)
+                     ).astype(y_tok.dtype)
+    ys = y_tok.reshape(b, s_loc, k, d).sum(axis=2)
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        hs = jax.nn.silu(xs @ sh["w_gate"]) * (xs @ sh["w_up"])
+        ys = ys + hs @ sh["w_down"]
+    # 5. Restore the replicated [B, S, d] layout with one psum.
+    full = jnp.zeros((b, s, d), x.dtype)
+    full = jax.lax.dynamic_update_slice_in_dim(full, ys.astype(x.dtype),
+                                               rank * s_loc, axis=1)
+    y = jax.lax.psum(full, axis)
+    frac_tokens = jnp.mean((oh.sum(axis=2) > 0).astype(jnp.float32),
+                           axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.aux_loss_coef * e * jnp.sum(frac_tokens * mean_probs)
+    aux = jax.lax.pmean(aux, axis)
+    return y, aux

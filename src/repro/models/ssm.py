@@ -1,0 +1,248 @@
+"""Mamba2 (state-space duality / SSD) blocks — arXiv:2405.21060.
+
+Chunked SSD for train/prefill (lax.scan over chunks carries the inter-chunk
+state, so live memory is one chunk's pairwise decay matrix and the HLO is
+O(1) in sequence length), recurrent form for decode (O(1) state per token —
+this is what makes ``long_500k`` runnable where full attention is not).
+
+Tensor-parallel layout: the monolithic mamba in_proj is split into per-stream
+projections (z, x, B, C, dt) so each can carry its own PartitionSpec —
+z/x/dt shard over heads ('model' axis), B/C are head-shared and replicated
+(DESIGN.md §5).  Shapes: d_inner = expand * d_model, H = d_inner / headdim
+heads, state N, B/C shared across heads (ngroups = 1 as released).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:  # total conv channels (x | B | C)
+        return self.d_inner + 2 * self.d_state
+
+    @property
+    def proj_width(self) -> int:  # total input-projection columns
+        return 2 * self.d_inner + 2 * self.d_state + self.n_heads
+
+
+def init_ssm(key: jax.Array, cfg: SSMConfig, dtype=jnp.float32) -> dict[str, Any]:
+    kz, kx, kb, kc, kdt, kcv, ko, kdtb = jax.random.split(key, 8)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    s = 1.0 / jnp.sqrt(d)
+    dt_init = jnp.exp(
+        jax.random.uniform(kdtb, (h,))
+        * (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min))
+        + jnp.log(cfg.dt_min)
+    )
+    return {
+        "wz": (jax.random.normal(kz, (d, di)) * s).astype(dtype),
+        "wx": (jax.random.normal(kx, (d, di)) * s).astype(dtype),
+        "wB": (jax.random.normal(kb, (d, n)) * s).astype(dtype),
+        "wC": (jax.random.normal(kc, (d, n)) * s).astype(dtype),
+        "wdt": (jax.random.normal(kdt, (d, h)) * s).astype(dtype),
+        # Depthwise causal conv over (x | B | C), stored per stream.
+        "conv_x": (jax.random.normal(kcv, (cfg.conv_width, di)) * 0.1).astype(dtype),
+        "conv_B": jnp.zeros((cfg.conv_width, n), dtype) + 0.1,
+        "conv_C": jnp.zeros((cfg.conv_width, n), dtype) + 0.1,
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_bB": jnp.zeros((n,), dtype),
+        "conv_bC": jnp.zeros((n,), dtype),
+        # softplus(dt_bias) spans [dt_min, dt_max] (mamba2 init).
+        "dt_bias": jnp.log(jnp.expm1(dt_init)).astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(ko, (di, d)) / jnp.sqrt(di)).astype(dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: out_t = silu(b + sum_i w[i] * x_{t-W+1+i})."""
+    wdt = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (wdt - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(wdt):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, T, H, P]
+    dt: jax.Array,  # [B, T, H] (post-softplus)
+    A: jax.Array,  # [H] (negative)
+    B_: jax.Array,  # [B, T, N]
+    C_: jax.Array,  # [B, T, N]
+    chunk: int,
+    ssm_state: jax.Array | None = None,  # [B, H, P, N]
+):
+    """Returns (y [B, T, H, P], final_state [B, H, P, N])."""
+    b, t, h, p = x.shape
+    n = B_.shape[-1]
+    if t % chunk:
+        raise ValueError(f"seq {t} must divide chunk {chunk}")
+    nc = t // chunk
+    q = chunk
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B_.reshape(b, nc, q, n)
+    Cc = C_.reshape(b, nc, q, n)
+    dA = dtc * A  # [b, nc, q, h] (negative)
+    cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log decay
+
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if ssm_state is None
+        else ssm_state.astype(jnp.float32)
+    )
+
+    def chunk_step(state, inp):
+        xq, dtq, Bq, Cq, csq = inp
+        xdt = (xq * dtq[..., None]).astype(jnp.float32)  # [b, q, h, p]
+        # Intra: Y[i] = sum_{j<=i} (C_i.B_j) * exp(cs_i - cs_j) * xdt_j
+        cb = jnp.einsum("bin,bjn->bij", Cq.astype(jnp.float32), Bq.astype(jnp.float32))
+        seg = csq[:, :, None, :] - csq[:, None, :, :]  # [b, i, j, h]
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cb, decay, xdt)
+        # Inter: Y[i] += C_i . state * exp(cs_i)
+        y_inter = jnp.einsum(
+            "bin,bhpn,bih->bihp", Cq.astype(jnp.float32), state, jnp.exp(csq)
+        )
+        # State: S' = exp(total) * S + sum_j exp(cs_end - cs_j) B_j (x) xdt_j
+        total = csq[:, -1, :]  # [b, h]
+        decay_to_end = jnp.exp(total[:, None, :] - csq)  # [b, q, h]
+        s_local = jnp.einsum(
+            "bjh,bjn,bjhp->bhpn", decay_to_end, Bq.astype(jnp.float32), xdt
+        )
+        state = jnp.exp(total)[:, :, None, None] * state + s_local
+        return state, (y_intra + y_inter).astype(x.dtype)
+
+    xs = tuple(
+        jnp.moveaxis(a, 1, 0) for a in (xc, dtc, Bc, Cc, cs)
+    )
+    final_state, yc = jax.lax.scan(chunk_step, s0, xs)
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, t, h, p)
+    return y, final_state
+
+
+def _project(params, u):
+    """Split projections. u [B,T,d] -> z, x_raw, B_raw, C_raw, dt_raw."""
+    return (
+        u @ params["wz"],
+        u @ params["wx"],
+        u @ params["wB"],
+        u @ params["wC"],
+        u @ params["wdt"],
+    )
+
+
+def ssm_forward(
+    params: dict[str, Any],
+    u: jax.Array,  # [B, T, d_model]
+    cfg: SSMConfig,
+    ssm_state: jax.Array | None = None,
+    return_cache: bool = False,
+):
+    """Full mamba2 mixer. Returns (out, cache|None)."""
+    b, t, _ = u.shape
+    z, x_raw, B_raw, C_raw, dt_raw = _project(params, u)
+    x = _causal_conv(x_raw, params["conv_x"], params["conv_bx"])
+    B_ = _causal_conv(B_raw, params["conv_B"], params["conv_bB"])
+    C_ = _causal_conv(C_raw, params["conv_C"], params["conv_bC"])
+    x = x.reshape(b, t, cfg.n_heads, cfg.headdim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    chunk = min(cfg.chunk, t)
+    y, state = ssd_chunked(x, dt, A, B_, C_, chunk, ssm_state)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * x
+    y = y.reshape(b, t, cfg.d_inner)
+    from repro.models.layers import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    out = y @ params["out_proj"]
+    if not return_cache:
+        return out, None
+    w = cfg.conv_width - 1
+    cache = {
+        "conv_x": x_raw[:, -w:].astype(u.dtype),
+        "conv_B": B_raw[:, -w:].astype(u.dtype),
+        "conv_C": C_raw[:, -w:].astype(u.dtype),
+        "ssm": state,
+    }
+    return out, cache
+
+
+def _conv_step(window: jax.Array, new: jax.Array, w: jax.Array, b: jax.Array):
+    """One causal-conv step: window [B, W-1, c] + new [B, c]."""
+    full = jnp.concatenate([window, new[:, None, :]], axis=1)  # [B, W, c]
+    out = jax.nn.silu(jnp.einsum("bwc,wc->bc", full, w) + b)
+    return out, full[:, 1:]
+
+
+def ssm_decode_step(
+    params: dict[str, Any],
+    u: jax.Array,  # [B, 1, d_model]
+    cfg: SSMConfig,
+    cache: dict[str, jax.Array],
+):
+    """O(1) recurrent step. Returns (out [B,1,d], new_cache)."""
+    b = u.shape[0]
+    z, x_raw, B_raw, C_raw, dt_raw = _project(params, u)
+    x1, conv_x = _conv_step(cache["conv_x"], x_raw[:, 0], params["conv_x"],
+                            params["conv_bx"])
+    B1, conv_B = _conv_step(cache["conv_B"], B_raw[:, 0], params["conv_B"],
+                            params["conv_bB"])
+    C1, conv_C = _conv_step(cache["conv_C"], C_raw[:, 0], params["conv_C"],
+                            params["conv_bC"])
+    x = x1.reshape(b, cfg.n_heads, cfg.headdim)
+    dt1 = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt1 * A)  # [B, H]
+    xdt = (x * dt1[..., None]).astype(jnp.float32)
+    new_state = a[:, :, None, None] * cache["ssm"] + jnp.einsum(
+        "bn,bhp->bhpn", B1.astype(jnp.float32), xdt
+    )
+    y = jnp.einsum("bn,bhpn->bhp", C1.astype(jnp.float32), new_state)
+    y = y.astype(u.dtype) + params["D"].astype(u.dtype)[None, :, None] * x
+    y = y.reshape(b, 1, cfg.d_inner)
+    from repro.models.layers import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    new_cache = {
+        "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C, "ssm": new_state,
+    }
+    return y @ params["out_proj"], new_cache
+
+
+def init_ssm_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    w = cfg.conv_width - 1
+    return {
+        "conv_x": jnp.zeros((batch, w, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, w, cfg.d_state), dtype),
+        "conv_C": jnp.zeros((batch, w, cfg.d_state), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.headdim, cfg.d_state), jnp.float32),
+    }

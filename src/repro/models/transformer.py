@@ -1,0 +1,563 @@
+"""Unified LM backbone covering all 10 assigned architectures.
+
+One config describes dense (llama-style), GQA/SWA/qk-norm attention, MoE
+(routed + shared experts), Mamba2 SSD, hybrid interleaves (Jamba), encoder-
+only (HuBERT) and M-RoPE VLM backbones (Qwen2-VL).
+
+Layer stacking: layers are grouped into *periods* (``layer_types`` is the
+period pattern, e.g. Jamba's ``(m m m m attn m m m)``); parameters are stacked
+[n_groups, ...] per period position and the forward scans over groups — the
+HLO is O(period), not O(n_layers), which is what lets deepseek-67b (95 layers)
+lower+compile quickly on the 512-device dry-run mesh.
+
+Embedding: the vocab table is a quantized LPT/ALPT table (the paper's
+technique, DESIGN.md §4) or fp.  The forward takes the *de-quantized* table as
+an explicit argument so trainers can differentiate w.r.t. it and run the
+paper's integer-table update (lpt.dense_apply / alpt_dense_step).  The tied
+head contracts int8-as-float codes and applies the per-row step AFTER the
+matmul (logits[v] = step[v] * <h, codes[v]>), so quantized tying costs no
+extra HBM traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.context import hint
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    # Period pattern: layer l has type layer_types[l % period].
+    layer_types: tuple[str, ...] = ("attn",)  # 'attn' | 'mamba'
+    moe_pattern: tuple[bool, ...] = (False,)  # per period position: routed MoE?
+    moe: moe_mod.MoEConfig | None = None
+    ssm: ssm_mod.SSMConfig | None = None
+    # Attention flavor.
+    qk_norm: bool = False
+    attn_bias: bool = False
+    sliding_window: int | None = None
+    rope_base: float = 10000.0
+    mrope_sections: tuple[int, int, int] | None = None
+    causal: bool = True  # False -> encoder-only (hubert)
+    mlp_type: str = "swiglu"  # 'swiglu' | 'gelu' (hubert) — d_ff == 0: no MLP
+    # Embedding / head (the paper's technique lives here).
+    embedding_method: str = "alpt"  # 'fp' | 'lpt' | 'alpt'
+    embedding_bits: int = 8
+    tie_embeddings: bool = False
+    input_mode: str = "tokens"  # 'tokens' | 'embeds' | 'mixed'
+    visual_prefix: int = 0  # 'mixed': number of patch-embedding positions
+    # Numerics / sharding-shape knobs.
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    head_pad_multiple: int = 1  # pad q-heads to a multiple (16 for TP dry-run)
+    ce_chunk: int = 512
+    attn_q_block: int = 512
+    attn_k_block: int = 1024
+    remat: bool = False  # checkpoint each period group in the scan
+
+    @property
+    def period(self) -> int:
+        return len(self.layer_types)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.period == 0, (self.n_layers, self.period)
+        return self.n_layers // self.period
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_heads(self) -> tuple[int, int]:
+        return L.pad_heads(self.n_heads, self.n_kv_heads, self.head_pad_multiple)
+
+    def layer_type(self, pos: int) -> str:
+        return self.layer_types[pos % self.period]
+
+    def is_moe(self, pos: int) -> bool:
+        return self.moe_pattern[pos % self.period] if self.moe is not None else False
+
+
+# --------------------------------------------------------------------- init
+
+
+def _init_attn(key, cfg: ModelConfig):
+    h, kv = cfg.padded_heads
+    hd = cfg.hd
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], (d, h * hd), dtype=cfg.param_dtype),
+        "wk": L.dense_init(ks[1], (d, kv * hd), dtype=cfg.param_dtype),
+        "wv": L.dense_init(ks[2], (d, kv * hd), dtype=cfg.param_dtype),
+        "wo": L.dense_init(ks[3], (h * hd, d), dtype=cfg.param_dtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h * hd,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((kv * hd,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((kv * hd,), cfg.param_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.param_dtype)
+    return p
+
+
+def _init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_type == "gelu":
+        return {
+            "w_in": L.dense_init(k1, (d, f), dtype=cfg.param_dtype),
+            "b_in": jnp.zeros((f,), cfg.param_dtype),
+            "w_out": L.dense_init(k2, (f, d), dtype=cfg.param_dtype),
+            "b_out": jnp.zeros((d,), cfg.param_dtype),
+        }
+    return {
+        "w_gate": L.dense_init(k1, (d, f), dtype=cfg.param_dtype),
+        "w_up": L.dense_init(k2, (d, f), dtype=cfg.param_dtype),
+        "w_down": L.dense_init(k3, (f, d), dtype=cfg.param_dtype),
+    }
+
+
+def _init_block(key, cfg: ModelConfig, pos: int):
+    """One period-position block (norms + mixer + mlp/moe)."""
+    kind = cfg.layer_type(pos)
+    k_mix, k_mlp = jax.random.split(key)
+    p: dict[str, Any] = {
+        "norm1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "norm2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if kind == "attn":
+        p["attn"] = _init_attn(k_mix, cfg)
+    elif kind == "mamba":
+        p["mamba"] = ssm_mod.init_ssm(k_mix, cfg.ssm, dtype=cfg.param_dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.is_moe(pos):
+        p["moe"] = moe_mod.init_moe(k_mlp, cfg.moe, dtype=cfg.param_dtype)
+    elif cfg.d_ff > 0:
+        p["mlp"] = _init_mlp(k_mlp, cfg)
+    else:
+        del p["norm2"]  # pure-mamba blocks (mamba2) have no MLP sub-layer
+    return p
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict[str, Any]:
+    """Returns {'blocks': [period][stacked over groups], 'final_norm', 'head'...}.
+
+    The embedding table is NOT here — it is a quantized LPT table owned by the
+    trainer (see repro.training.lm_trainer) and passed to the forward
+    de-quantized.  Untied archs get a float 'head' [V, d].
+    """
+    keys = jax.random.split(key, cfg.period + 2)
+    blocks = []
+    for pos in range(cfg.period):
+        gkeys = jax.random.split(keys[pos], cfg.n_groups)
+        stacked = jax.vmap(lambda k: _init_block(k, cfg, pos))(gkeys)
+        blocks.append(stacked)
+    params: dict[str, Any] = {
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(
+            keys[-1], (cfg.vocab_size, cfg.d_model), fan_in=cfg.d_model,
+            dtype=cfg.param_dtype,
+        )
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------- blocks
+
+
+def _attn_block(p, x, cfg: ModelConfig, *, positions, cache=None, cache_len=None,
+                return_kv=False):
+    """Pre-norm attention. cache=None: full-sequence; else single-token decode.
+    ``return_kv``: full-sequence prefill returns the rope'd (k, v) for caching.
+    """
+    b, t, d = x.shape
+    h, kv = cfg.padded_heads
+    hd = cfg.hd
+    a = p["attn"]
+    y = L.rms_norm(x, p["norm1"])
+    q = y @ a["wq"]
+    k = y @ a["wk"]
+    v = y @ a["wv"]
+    if cfg.attn_bias:
+        q, k, v = q + a["bq"], k + a["bk"], v + a["bv"]
+    q = hint(q.reshape(b, t, h, hd), "q_heads")
+    k = hint(k.reshape(b, t, kv, hd), "kv_heads")
+    v = hint(v.reshape(b, t, kv, hd), "kv_heads")
+    if cfg.qk_norm:
+        q = L.rms_norm(q, a["q_norm"])
+        k = L.rms_norm(k, a["k_norm"])
+    if cfg.mrope_sections is not None:
+        cos, sin = L.mrope_angles(positions, hd, cfg.mrope_sections, cfg.rope_base)
+    else:
+        cos, sin = L.rope_angles(positions, hd, cfg.rope_base)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+
+    if cache is None:
+        o = L.flash_attention(
+            q, k, v,
+            causal=cfg.causal,
+            window=cfg.sliding_window,
+            q_block=cfg.attn_q_block,
+            k_block=cfg.attn_k_block,
+        )
+        new_cache = (k, v) if return_kv else None
+    else:
+        # SWA caches are window-sized ring buffers (slot = position % size) —
+        # this is what bounds long_500k memory for mixtral/h2o-danube.
+        cache_size = cache["k"].shape[1]
+        ring = cfg.sliding_window is not None and cache_size <= cfg.sliding_window
+        write_idx = cache_len % cache_size if ring else cache_len
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, write_idx, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, write_idx, 1)
+        valid_len = jnp.minimum(cache_len + 1, cache_size) if ring else cache_len + 1
+        o = L.decode_attention(
+            q, k_cache, v_cache, valid_len,
+            window=None if ring else cfg.sliding_window,
+        )
+        new_cache = {"k": k_cache, "v": v_cache}
+    o = o.reshape(b, t, h * hd) @ a["wo"]
+    return x + o, new_cache
+
+
+def _mamba_block(p, x, cfg: ModelConfig, *, cache=None, return_cache=False):
+    y = L.rms_norm(x, p["norm1"])
+    if cache is None:
+        out, c = ssm_mod.ssm_forward(
+            p["mamba"], y, cfg.ssm, return_cache=return_cache
+        )
+        return x + out, c
+    out, new_cache = ssm_mod.ssm_decode_step(p["mamba"], y, cfg.ssm, cache)
+    return x + out, new_cache
+
+
+def _moe_apply(p_moe, y, cfg: ModelConfig):
+    """Dense (GSPMD) MoE, or the explicit shard_map EP dispatch when the
+    active policy requests it (EXPERIMENTS.md §Perf, deepseek-moe cell)."""
+    from repro.dist.context import moe_ep_context
+
+    ctx = moe_ep_context()
+    if ctx is None or cfg.moe.n_experts % ctx.policy.model_size != 0:
+        return moe_mod.moe_forward(p_moe, y, cfg.moe)
+    from jax.sharding import PartitionSpec as P
+
+    pol = ctx.policy
+    m = pol.model_axis
+    dp = pol.dp_spec
+    all_axes = tuple(pol.data_axes) + (m,)
+    w_specs = {
+        "router": P(None, None),
+        "w_gate": P(m, None, None),
+        "w_up": P(m, None, None),
+        "w_down": P(m, None, None),
+    }
+    if cfg.moe.n_shared_experts:
+        w_specs["shared"] = {
+            "w_gate": P(None, None), "w_up": P(None, None),
+            "w_down": P(None, None),
+        }
+
+    def inner(p_local, y_local):
+        out, aux = moe_mod.moe_forward_ep(p_local, y_local, cfg.moe, axis=m)
+        return out, jax.lax.pmean(aux, all_axes)
+
+    fn = jax.shard_map(
+        inner, mesh=ctx.mesh,
+        in_specs=(w_specs, P(dp, None, None)),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )
+    return fn(p_moe, y)
+
+
+def _mlp_block(p, x, cfg: ModelConfig, pos: int):
+    if not cfg.is_moe(pos) and cfg.d_ff == 0:
+        return x, jnp.zeros((), jnp.float32)
+    y = L.rms_norm(x, p["norm2"])
+    if cfg.is_moe(pos):
+        out, aux = _moe_apply(p["moe"], y, cfg)
+        return x + out, aux
+    if cfg.mlp_type == "gelu":
+        out = L.gelu_mlp(
+            y, p["mlp"]["w_in"], p["mlp"]["b_in"], p["mlp"]["w_out"],
+            p["mlp"]["b_out"],
+        )
+    else:
+        out = L.swiglu(y, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return x + out, jnp.zeros((), jnp.float32)
+
+
+def _period_fwd(period_params, x, cfg: ModelConfig, positions):
+    """Apply one period (cfg.period consecutive layers). Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = hint(x, "carry")
+    for pos in range(cfg.period):
+        p = period_params[pos]
+        if cfg.layer_type(pos) == "attn":
+            x, _ = _attn_block(p, x, cfg, positions=positions)
+        else:
+            x, _ = _mamba_block(p, x, cfg)
+        x, a = _mlp_block(p, x, cfg, pos)
+        aux = aux + a
+    return x, aux
+
+
+# --------------------------------------------------------------------- fwd
+
+
+def backbone(
+    params: dict[str, Any],
+    embeds: jax.Array,  # [B, T, d] (already embedded / modality stub)
+    cfg: ModelConfig,
+    positions: jax.Array,  # [B, T] or [3, B, T] for M-RoPE
+) -> tuple[jax.Array, jax.Array]:
+    """Scan over period groups. Returns (hidden [B,T,d], moe_aux scalar)."""
+    x = hint(embeds.astype(cfg.dtype), "activation")
+
+    def group_step(carry, group_params):
+        x, aux = carry
+        fwd = _period_fwd
+        if cfg.remat:
+            fwd = jax.checkpoint(
+                _period_fwd, static_argnums=(2,), prevent_cse=False
+            )
+        x, a = fwd(group_params, x, cfg, positions)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        group_step, (x, jnp.zeros((), jnp.float32)), params["blocks"]
+    )
+    return L.rms_norm(x, params["final_norm"]), aux
+
+
+def embed_tokens(table_fp: jax.Array, tokens: jax.Array, cfg: ModelConfig):
+    emb = jnp.take(table_fp, tokens, axis=0).astype(cfg.dtype)
+    # Standard embedding scale keeps quantized-table variance usable.
+    return emb
+
+
+def head_logits(params, table_fp, h, cfg: ModelConfig):
+    """Logits [.., V]; tied head contracts the (de-quantized) table.
+
+    The hint reshards the weight to vocab-sharded at the matmul: for untied
+    heads it is a no-op / FSDP gather; for the tied quantized table it is the
+    d-sharded -> vocab-sharded reshard, paid in cfg.dtype (bf16) bytes.
+    """
+    w = table_fp if cfg.tie_embeddings else params["head"]
+    w = hint(w.astype(cfg.dtype), "head_weight")
+    return jnp.einsum("...d,vd->...v", h, w).astype(jnp.float32)
+
+
+def chunked_ce_loss(
+    params,
+    table_fp,
+    h: jax.Array,  # [B, T, d]
+    labels: jax.Array,  # [B, T] int32; -1 = ignore
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Cross-entropy without materializing [B, T, V]: scan over T chunks."""
+    b, t, d = h.shape
+    chunk = min(cfg.ce_chunk, t)
+    if t % chunk:
+        chunk = t  # fall back to single chunk for odd lengths
+    nc = t // chunk
+    hc = h.reshape(b, nc, chunk, d)
+    lc = labels.reshape(b, nc, chunk)
+
+    def piece(h_blk, l_blk):
+        logits = head_logits(params, table_fp, h_blk, cfg)  # [B, chunk, V] f32
+        logits = hint(logits, "logits")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l_blk, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (l_blk >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    piece = jax.checkpoint(piece)
+
+    def scan_fn(carry, xs):
+        tot, cnt = carry
+        s, c = piece(xs[0], xs[1])
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        scan_fn,
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)),
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def default_positions(b: int, t: int, cfg: ModelConfig, offset: int = 0):
+    pos = jnp.arange(offset, offset + t, dtype=jnp.int32)[None, :].repeat(b, 0)
+    if cfg.mrope_sections is not None:
+        return jnp.stack([pos, pos, pos], axis=0)  # text: all streams equal
+    return pos
+
+
+def assemble_embeds(table_fp, batch: dict[str, jax.Array], cfg: ModelConfig):
+    """Input embedding for every input_mode; returns [B, T, d]."""
+    if cfg.input_mode == "embeds":
+        return batch["embeds"].astype(cfg.dtype)
+    tok_emb = embed_tokens(table_fp, batch["tokens"], cfg)
+    if cfg.input_mode == "mixed" and cfg.visual_prefix > 0:
+        prefix = batch["prefix_embeds"].astype(cfg.dtype)  # [B, P, d]
+        p = cfg.visual_prefix
+        return jnp.concatenate([prefix, tok_emb[:, p:]], axis=1)
+    return tok_emb
+
+
+def loss_fn(
+    params: dict[str, Any],
+    table_fp: jax.Array,  # [V, d] de-quantized embedding table
+    batch: dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """Full training loss (CE + MoE aux). Returns (loss, aux_loss)."""
+    embeds = assemble_embeds(table_fp, batch, cfg)
+    b, t, _ = embeds.shape
+    positions = batch.get("positions", default_positions(b, t, cfg))
+    h, aux = backbone(params, embeds, cfg, positions)
+    ce = chunked_ce_loss(params, table_fp, h, batch["labels"], cfg)
+    return ce + aux, aux
+
+
+# --------------------------------------------------------------------- decode
+
+
+def cache_len_for(cfg: ModelConfig, max_len: int) -> int:
+    """KV slots per attention layer: SWA archs get a window-sized ring buffer —
+    this is what bounds long_500k memory for mixtral/h2o-danube."""
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> list:
+    """Decode cache: one entry per period position, stacked over groups.
+
+    Matches the scan layout of params['blocks'] so decode_step/prefill scan
+    over (params, cache) jointly — the lowered HLO is O(period), not O(depth)
+    (95-layer deepseek-67b decode compiles as one scan body).
+    """
+    _, kv = cfg.padded_heads
+    hd = cfg.hd
+    kv_len = cache_len_for(cfg, max_len)
+    g = cfg.n_groups
+    caches = []
+    for pos in range(cfg.period):
+        if cfg.layer_type(pos) == "attn":
+            caches.append(
+                {
+                    "k": jnp.zeros((g, batch, kv_len, kv, hd), cfg.dtype),
+                    "v": jnp.zeros((g, batch, kv_len, kv, hd), cfg.dtype),
+                }
+            )
+        else:
+            one = ssm_mod.init_ssm_cache(cfg.ssm, batch, cfg.dtype)
+            caches.append(
+                jax.tree.map(lambda a: jnp.zeros((g,) + a.shape, a.dtype), one)
+            )
+    return caches
+
+
+def decode_step(
+    params,
+    table_fp,
+    token: jax.Array,  # [B] int32 current token
+    cache: list,
+    cache_len: jax.Array,  # scalar int32 — tokens already in cache
+    cfg: ModelConfig,
+):
+    """One serve_step: returns (logits [B, V], new_cache)."""
+    b = token.shape[0]
+    x = embed_tokens(table_fp, token[:, None], cfg)
+    # RoPE positions are the absolute index of the new token.
+    positions = default_positions(b, 1, cfg, offset=0) + cache_len
+
+    def group_step(x, xs):
+        gparams, gcache = xs
+        new_c = []
+        for pos in range(cfg.period):
+            p = gparams[pos]
+            if cfg.layer_type(pos) == "attn":
+                x, c = _attn_block(
+                    p, x, cfg, positions=positions, cache=gcache[pos],
+                    cache_len=cache_len,
+                )
+            else:
+                x, c = _mamba_block(p, x, cfg, cache=gcache[pos])
+            x, _ = _mlp_block(p, x, cfg, pos)
+            new_c.append(c)
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(group_step, x, (params["blocks"], cache))
+    h = L.rms_norm(x, params["final_norm"])
+    logits = head_logits(params, table_fp, h[:, 0], cfg)
+    return logits, new_cache
+
+
+def prefill(
+    params, table_fp, tokens: jax.Array, cfg: ModelConfig, max_len: int
+):
+    """Run the full prompt, build the decode cache. Returns (logits_last, cache)."""
+    b, t = tokens.shape
+    x = embed_tokens(table_fp, tokens, cfg)
+    positions = default_positions(b, t, cfg)
+    kv_len = cache_len_for(cfg, max_len)
+    # Ring layout: position p lives in slot p % kv_len; for t <= kv_len this is
+    # the identity. Only the last kv_len positions survive (unique slots).
+    n_keep = min(t, kv_len)
+    slots = jnp.arange(t - n_keep, t) % kv_len
+
+    def group_step(x, gparams):
+        new_c = []
+        for pos in range(cfg.period):
+            p = gparams[pos]
+            if cfg.layer_type(pos) == "attn":
+                x, (k, v) = _attn_block(
+                    p, x, cfg, positions=positions, return_kv=True
+                )
+                kc = jnp.zeros((b, kv_len) + k.shape[2:], cfg.dtype)
+                vc = jnp.zeros((b, kv_len) + v.shape[2:], cfg.dtype)
+                new_c.append(
+                    {
+                        "k": kc.at[:, slots].set(k[:, -n_keep:]),
+                        "v": vc.at[:, slots].set(v[:, -n_keep:]),
+                    }
+                )
+            else:
+                x, c = _mamba_block(p, x, cfg, return_cache=True)
+                new_c.append(c)
+            x, _ = _mlp_block(p, x, cfg, pos)
+        return x, new_c
+
+    x, cache = jax.lax.scan(group_step, x, params["blocks"])
+    h_final = L.rms_norm(x, params["final_norm"])
+    logits = head_logits(params, table_fp, h_final[:, -1], cfg)
+    return logits, cache

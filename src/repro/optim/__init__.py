@@ -1,0 +1,29 @@
+from repro.optim.adam import (
+    OptState,
+    adam_init,
+    adam_update,
+    clip_by_global_norm,
+    sgd_init,
+    sgd_update,
+    make_optimizer,
+)
+from repro.optim.schedule import (
+    constant_schedule,
+    step_decay_schedule,
+    cosine_schedule,
+    warmup_cosine_schedule,
+)
+
+__all__ = [
+    "OptState",
+    "adam_init",
+    "adam_update",
+    "clip_by_global_norm",
+    "sgd_init",
+    "sgd_update",
+    "make_optimizer",
+    "constant_schedule",
+    "step_decay_schedule",
+    "cosine_schedule",
+    "warmup_cosine_schedule",
+]

@@ -1,0 +1,98 @@
+"""Minimal pytree optimizers (Adam/AdamW/SGD) — no external deps.
+
+The paper trains with Adam (lr 1e-3) and decoupled weight decay on embeddings;
+we reproduce that and reuse the same machinery for the LM substrates.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # scalar int32
+    mu: Any  # first moment pytree (Adam) or None-like empty tuple (SGD)
+    nu: Any  # second moment pytree
+
+
+def _zeros_like_f32(p):
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def adam_init(params) -> OptState:
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(_zeros_like_f32, params),
+        nu=jax.tree.map(_zeros_like_f32, params),
+    )
+
+
+def adam_update(
+    grads,
+    state: OptState,
+    params,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    """One AdamW step. Returns (new_params, new_state)."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g32
+        v = b2 * v + (1.0 - b2) * jnp.square(g32)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, mu=new_m, nu=new_v)
+
+
+def sgd_init(params) -> OptState:
+    return OptState(step=jnp.zeros((), jnp.int32), mu=(), nu=())
+
+
+def sgd_update(grads, state: OptState, params, lr, *, weight_decay: float = 0.0):
+    def upd(p, g):
+        g32 = g.astype(jnp.float32)
+        if weight_decay:
+            g32 = g32 + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * g32).astype(p.dtype)
+
+    return jax.tree.map(upd, params, grads), OptState(
+        step=state.step + 1, mu=(), nu=()
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def make_optimizer(name: str):
+    """Returns (init_fn, update_fn) for 'adam' | 'adamw' | 'sgd'."""
+    if name in ("adam", "adamw"):
+        return adam_init, adam_update
+    if name == "sgd":
+        return sgd_init, sgd_update
+    raise ValueError(f"unknown optimizer {name!r}")

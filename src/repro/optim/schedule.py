@@ -1,0 +1,57 @@
+"""Learning-rate schedules, including the paper's step decay.
+
+Paper §4.1: lr 1e-3, reduce tenfold after epochs 6 and 9; the theory (§3.1)
+assumes eta_t = eta / sqrt(t), which ``inv_sqrt_schedule`` provides for the
+synthetic experiment.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return fn
+
+
+def step_decay_schedule(lr: float, boundaries: tuple[int, ...], factor: float = 0.1):
+    """Paper's schedule: multiply by ``factor`` at each boundary step."""
+
+    def fn(step):
+        mult = jnp.asarray(1.0, jnp.float32)
+        for b in boundaries:
+            mult = mult * jnp.where(step >= b, factor, 1.0)
+        return lr * mult
+
+    return fn
+
+
+def inv_sqrt_schedule(lr: float):
+    """eta_t = eta / sqrt(t) (t is 1-indexed) — the theory's schedule."""
+
+    def fn(step):
+        return lr / jnp.sqrt(jnp.maximum(step.astype(jnp.float32), 1.0))
+
+    return fn
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine_schedule(lr: float, warmup: int, total_steps: int, final_frac=0.1):
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / jnp.maximum(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return fn

@@ -1,0 +1,3 @@
+from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+
+__all__ = ["CTRTrainer", "TrainerConfig"]

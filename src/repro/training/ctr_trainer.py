@@ -1,0 +1,281 @@
+"""End-to-end CTR training for every embedding method in paper Table 1.
+
+One trainer, one DCN/DeepFM backbone, seven embedding methods — the only
+thing that changes per method is how the table is looked up and updated:
+
+  fp/lsq/pact/hash/prune : joint Adam over (embedding leaves, dense params)
+  lpt                    : Eq. 8 — rows de-quantized, row-Adam, requantize
+  alpt                   : Algorithm 1 — + learned Delta via second forward
+
+This mirrors the paper's experimental protocol (§4.1): Adam lr 1e-3, tenfold
+decay boundaries, decoupled weight decay on embeddings, Delta lr 2e-5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import metrics
+from repro.core import alpt as alpt_mod
+from repro.core import lpt as lpt_mod
+from repro.core import pruning
+from repro.models import ctr as ctr_models
+from repro.models import embedding as emb_mod
+from repro.optim import adam_init, adam_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    spec: emb_mod.EmbeddingSpec
+    model: str = "dcn"  # 'dcn' | 'deepfm'
+    dcn: ctr_models.DCNConfig | None = None
+    deepfm: ctr_models.DeepFMConfig | None = None
+    lr: float = 1e-3
+    emb_weight_decay: float = 5e-8
+    lr_boundaries: tuple[int, ...] = ()  # steps at which lr /= 10
+    seed: int = 0
+
+
+class TrainState(NamedTuple):
+    emb_state: Any
+    dense_params: Any
+    dense_opt: Any
+    emb_opt: Any  # Adam state over float embedding leaves (None for int tables)
+    step: jax.Array
+    rng: jax.Array
+
+
+class CTRTrainer:
+    def __init__(self, cfg: TrainerConfig):
+        self.cfg = cfg
+        self.spec = cfg.spec
+        if cfg.model == "dcn":
+            assert cfg.dcn is not None
+            self.model_cfg = cfg.dcn
+            self._forward = ctr_models.dcn_forward
+            self._init_model = ctr_models.init_dcn
+        else:
+            assert cfg.deepfm is not None
+            self.model_cfg = cfg.deepfm
+            self._forward = ctr_models.deepfm_forward
+            self._init_model = ctr_models.init_deepfm
+        self._train_step = self._build_train_step()
+        self._eval_logits = jax.jit(self._logits_fn)
+
+    # ------------------------------------------------------------ init
+
+    def init_state(self, key: jax.Array | None = None) -> TrainState:
+        key = jax.random.PRNGKey(self.cfg.seed) if key is None else key
+        k_emb, k_dense, k_rng = jax.random.split(key, 3)
+        emb_state = emb_mod.init_embedding(k_emb, self.spec)
+        dense_params = self._init_model(k_dense, self.model_cfg)
+        dense_opt = adam_init(dense_params)
+        emb_params = emb_mod.trainable_params(emb_state, self.spec)
+        emb_opt = adam_init(emb_params) if emb_params is not None else None
+        return TrainState(
+            emb_state=emb_state,
+            dense_params=dense_params,
+            dense_opt=dense_opt,
+            emb_opt=emb_opt,
+            step=jnp.zeros((), jnp.int32),
+            rng=k_rng,
+        )
+
+    # ------------------------------------------------------------ lr
+
+    def _lr_at(self, step: jax.Array) -> jax.Array:
+        lr = jnp.asarray(self.cfg.lr, jnp.float32)
+        for b in self.cfg.lr_boundaries:
+            lr = lr * jnp.where(step >= b, 0.1, 1.0)
+        return lr
+
+    # ------------------------------------------------------------ forward
+
+    def _logits_fn(self, emb_state, dense_params, ids, *, dropout_key=None):
+        if self.cfg.model == "deepfm":
+            rows_all = emb_mod.lookup(emb_state, ids, self.spec)
+            rows, first = rows_all[..., :-1], rows_all[..., -1]
+            return self._forward(
+                dense_params, rows, first, self.model_cfg, dropout_key=dropout_key
+            )
+        rows = emb_mod.lookup(emb_state, ids, self.spec)
+        return self._forward(dense_params, rows, self.model_cfg, dropout_key=dropout_key)
+
+    def _logits_from_rows(self, rows, dense_params, dropout_key=None):
+        if self.cfg.model == "deepfm":
+            r, first = rows[..., :-1], rows[..., -1]
+            return self._forward(
+                dense_params, r, first, self.model_cfg, dropout_key=dropout_key
+            )
+        return self._forward(dense_params, rows, self.model_cfg, dropout_key=dropout_key)
+
+    # ------------------------------------------------------------ train step
+
+    def _build_train_step(self):
+        spec = self.spec
+        method = spec.method
+
+        if method in emb_mod.FLOAT_METHODS:
+
+            @jax.jit
+            def step_fn(state: TrainState, ids, labels):
+                lr = self._lr_at(state.step)
+                rng, kd = jax.random.split(state.rng)
+                emb_params = emb_mod.trainable_params(state.emb_state, spec)
+
+                def loss_fn(emb_params, dense_params):
+                    emb_state = emb_mod.with_params(state.emb_state, emb_params, spec)
+                    logits = self._logits_fn(
+                        emb_state, dense_params, ids, dropout_key=kd
+                    )
+                    return ctr_models.bce_loss(logits, labels)
+
+                loss, (g_emb, g_dense) = jax.value_and_grad(loss_fn, (0, 1))(
+                    emb_params, state.dense_params
+                )
+                new_dense, dense_opt = adam_update(
+                    g_dense, state.dense_opt, state.dense_params, lr
+                )
+                new_emb_params, emb_opt = adam_update(
+                    g_emb, state.emb_opt, emb_params, lr,
+                    weight_decay=self.cfg.emb_weight_decay,
+                )
+                emb_state = emb_mod.with_params(state.emb_state, new_emb_params, spec)
+                return (
+                    TrainState(emb_state, new_dense, dense_opt, emb_opt,
+                               state.step + 1, rng),
+                    {"loss": loss, "lr": lr},
+                )
+
+            if method == "prune":
+                update_mask = jax.jit(
+                    lambda s: pruning.update_mask(s, spec.prune)
+                )
+                inner = step_fn
+
+                def step_with_mask(state, ids, labels):
+                    state, m = inner(state, ids, labels)
+                    step = int(state.step)
+                    emb = state.emb_state._replace(
+                        step=jnp.asarray(step, jnp.int32)
+                    )
+                    if step % spec.prune.update_every == 0:
+                        emb = update_mask(emb)
+                    return state._replace(emb_state=emb), m
+
+                return step_with_mask
+            return step_fn
+
+        if method == "lpt":
+
+            @jax.jit
+            def step_fn(state: TrainState, ids, labels):
+                lr = self._lr_at(state.step)
+                rng, kd, kn = jax.random.split(state.rng, 3)
+                rows0 = lpt_mod.lookup(state.emb_state, ids)
+
+                def loss_fn(rows, dense_params):
+                    logits = self._logits_from_rows(rows, dense_params, kd)
+                    return ctr_models.bce_loss(logits, labels)
+
+                loss, (g_rows, g_dense) = jax.value_and_grad(loss_fn, (0, 1))(
+                    rows0, state.dense_params
+                )
+                new_dense, dense_opt = adam_update(
+                    g_dense, state.dense_opt, state.dense_params, lr
+                )
+                emb_state = lpt_mod.sparse_apply(
+                    state.emb_state, ids, g_rows,
+                    lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
+                    noise_key=kn, optimizer=spec.row_optimizer,
+                    weight_decay=self.cfg.emb_weight_decay,
+                )
+                return (
+                    TrainState(emb_state, new_dense, dense_opt, None,
+                               state.step + 1, rng),
+                    {"loss": loss, "lr": lr},
+                )
+
+            return step_fn
+
+        if method == "alpt":
+
+            @jax.jit
+            def step_fn(state: TrainState, ids, labels):
+                lr = self._lr_at(state.step)
+                rng, kd, kn = jax.random.split(state.rng, 3)
+                rows0 = lpt_mod.lookup(state.emb_state, ids)
+
+                def loss_rows_dense(rows, dense_params):
+                    logits = self._logits_from_rows(rows, dense_params, kd)
+                    return ctr_models.bce_loss(logits, labels)
+
+                # Dense update (Algorithm 1 line 3) shares step 1's backward.
+                loss, g_dense = jax.value_and_grad(
+                    lambda dp: loss_rows_dense(rows0, dp)
+                )(state.dense_params)
+                new_dense, dense_opt = adam_update(
+                    g_dense, state.dense_opt, state.dense_params, lr
+                )
+                emb_state, loss2, aux = alpt_mod.alpt_step(
+                    state.emb_state,
+                    ids,
+                    lambda rows: loss_rows_dense(rows, state.dense_params),
+                    cfg=spec.alpt._replace(
+                        weight_decay=self.cfg.emb_weight_decay,
+                        optimizer=spec.row_optimizer,
+                    ),
+                    lr=lr,
+                    noise_key=kn,
+                    loss_fn_step2=lambda rows: loss_rows_dense(rows, new_dense),
+                )
+                return (
+                    TrainState(emb_state, new_dense, dense_opt, None,
+                               state.step + 1, rng),
+                    {"loss": loss2, "lr": lr, **aux},
+                )
+
+            return step_fn
+
+        raise ValueError(f"unknown method {method!r}")
+
+    # ------------------------------------------------------------ api
+
+    def train_step(self, state: TrainState, ids: np.ndarray, labels: np.ndarray):
+        return self._train_step(state, jnp.asarray(ids), jnp.asarray(labels))
+
+    def evaluate(self, state: TrainState, batches) -> dict[str, float]:
+        all_labels, all_probs = [], []
+        for ids, labels in batches:
+            logits = self._eval_logits(
+                state.emb_state, state.dense_params, jnp.asarray(ids)
+            )
+            all_probs.append(np.asarray(jax.nn.sigmoid(logits)))
+            all_labels.append(labels)
+        labels = np.concatenate(all_labels)
+        probs = np.concatenate(all_probs)
+        return {
+            "auc": metrics.auc(labels, probs),
+            "logloss": metrics.logloss(labels, probs),
+        }
+
+    def fit(self, data, *, steps: int, batch_size: int, eval_every: int = 0,
+            eval_batches: int = 20, log=None):
+        state = self.init_state()
+        history = []
+        for i in range(steps):
+            ids, labels = data.batch("train", i, batch_size)
+            state, m = self.train_step(state, ids, labels)
+            if eval_every and (i + 1) % eval_every == 0:
+                ev = self.evaluate(
+                    state, data.batches("valid", batch_size, eval_batches)
+                )
+                history.append({"step": i + 1, **ev, "loss": float(m["loss"])})
+                if log:
+                    log(history[-1])
+        return state, history

@@ -1,0 +1,161 @@
+"""LM training step with quantized (LPT/ALPT) vocab embeddings.
+
+The embedding table is integer state (codes + per-row Delta); each step:
+
+  1. de-quantize the table (dense, vocab-sharded under pjit),
+  2. differentiate the LM loss w.r.t. (table_fp, dense params),
+  3. AdamW the dense params; LPT/ALPT row-update + SR-requantize the table
+     (untouched rows stay bit-identical — lpt.dense_apply semantics),
+  4. (ALPT only) learn Delta via the second fake-quant forward (Algorithm 1).
+
+This is the paper's training paradigm transplanted onto an LM vocab table;
+the same function lowers on the 512-device production mesh (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alpt as alpt_mod
+from repro.core import lpt as lpt_mod
+from repro.models import transformer as tfm
+from repro.optim import adam_init, adam_update, clip_by_global_norm
+
+
+class LMTrainState(NamedTuple):
+    params: Any  # transformer blocks (+ untied head)
+    opt: Any  # Adam state for params
+    table: Any  # lpt.LPTTable (int methods) | f32 [V, d] (fp)
+    table_opt: Any  # Adam state when table is fp, else None
+    step: jax.Array
+    rng: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LMTrainerConfig:
+    lr: float = 3e-4
+    weight_decay: float = 0.01
+    emb_weight_decay: float = 5e-8  # paper's embedding decay
+    grad_clip: float = 1.0
+    row_optimizer: str = "adam"
+    alpt_step_lr: float = 2e-5
+    # ALPT's Delta substep doubles the forward cost; 'every_k' amortizes it
+    # (beyond-paper knob; k=1 == faithful Algorithm 1).
+    alpt_every: int = 1
+
+
+def init_state(key: jax.Array, cfg: tfm.ModelConfig, tcfg: LMTrainerConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = tfm.init_params(k1, cfg)
+    opt = adam_init(params)
+    if cfg.embedding_method in ("lpt", "alpt"):
+        table = lpt_mod.init_table(
+            k2, cfg.vocab_size, cfg.d_model, cfg.embedding_bits,
+            init_scale=cfg.d_model**-0.5, optimizer=tcfg.row_optimizer,
+        )
+        table_opt = None
+    else:
+        table = (
+            jax.random.normal(k2, (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * cfg.d_model**-0.5
+        )
+        table_opt = adam_init(table)
+    return LMTrainState(
+        params=params, opt=opt, table=table, table_opt=table_opt,
+        step=jnp.zeros((), jnp.int32), rng=k3,
+    )
+
+
+def table_fp_of(state: LMTrainState, cfg: tfm.ModelConfig) -> jax.Array:
+    if cfg.embedding_method in ("lpt", "alpt"):
+        return lpt_mod.dense_table(state.table)
+    return state.table
+
+
+def make_train_step(
+    cfg: tfm.ModelConfig,
+    tcfg: LMTrainerConfig,
+    lr_schedule: Callable[[jax.Array], jax.Array] | None = None,
+):
+    """Returns train_step(state, batch) -> (state, metrics). jit/pjit-ready."""
+
+    def lr_at(step):
+        if lr_schedule is None:
+            return jnp.asarray(tcfg.lr, jnp.float32)
+        return lr_schedule(step)
+
+    def train_step(state: LMTrainState, batch: dict[str, jax.Array]):
+        lr = lr_at(state.step)
+        rng, kn = jax.random.split(state.rng)
+
+        table_fp = table_fp_of(state, cfg)
+
+        def loss_of(table_fp, params):
+            loss, aux = tfm.loss_fn(params, table_fp, batch, cfg)
+            return loss, aux
+
+        (loss, aux), (g_table, g_params) = jax.value_and_grad(
+            loss_of, argnums=(0, 1), has_aux=True
+        )(table_fp, state.params)
+
+        g_params, gnorm = clip_by_global_norm(g_params, tcfg.grad_clip)
+        new_params, new_opt = adam_update(
+            g_params, state.opt, state.params, lr,
+            weight_decay=tcfg.weight_decay,
+        )
+
+        method = cfg.embedding_method
+        if method == "fp":
+            new_table, new_table_opt = adam_update(
+                g_table, state.table_opt, state.table, lr,
+                weight_decay=tcfg.emb_weight_decay,
+            )
+        elif method == "lpt":
+            new_table = lpt_mod.dense_apply(
+                state.table, g_table, lr=lr, bits=cfg.embedding_bits,
+                rounding="sr", noise_key=kn, optimizer=tcfg.row_optimizer,
+                weight_decay=tcfg.emb_weight_decay,
+            )
+            new_table_opt = None
+        else:  # alpt
+            acfg = alpt_mod.ALPTConfig(
+                bits=cfg.embedding_bits, rounding="sr",
+                optimizer=tcfg.row_optimizer,
+                weight_decay=tcfg.emb_weight_decay,
+                step_lr=tcfg.alpt_step_lr,
+            )
+            new_table = alpt_mod.alpt_dense_step(
+                state.table, g_table,
+                # Algorithm 1 line 4: loss at the UPDATED dense params.
+                lambda t: tfm.loss_fn(new_params, t, batch, cfg)[0],
+                cfg=acfg, lr=lr, noise_key=kn,
+            )
+            new_table_opt = None
+
+        metrics = {
+            "loss": loss,
+            "aux_loss": aux,
+            "grad_norm": gnorm,
+            "lr": lr,
+        }
+        return (
+            LMTrainState(
+                params=new_params, opt=new_opt, table=new_table,
+                table_opt=new_table_opt, step=state.step + 1, rng=rng,
+            ),
+            metrics,
+        )
+
+    return train_step
+
+
+def make_eval_step(cfg: tfm.ModelConfig):
+    def eval_step(state: LMTrainState, batch):
+        table_fp = table_fp_of(state, cfg)
+        loss, aux = tfm.loss_fn(state.params, table_fp, batch, cfg)
+        return {"loss": loss, "aux_loss": aux}
+
+    return eval_step

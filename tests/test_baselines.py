@@ -1,0 +1,135 @@
+"""Tests for the paper's baseline methods: QAT (LSQ/PACT), QR hashing, pruning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core import hashing, pruning, qat, quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------- QAT
+
+
+def test_qat_lookup_is_fake_quantized():
+    t = qat.init_qat(jax.random.PRNGKey(0), 32, 8, 8, method="lsq")
+    rows = qat.qat_lookup(t, jnp.array([0, 5]), 8, method="lsq")
+    # Every value must sit on its row's lattice.
+    steps = np.asarray(t.scale)[[0, 5]]
+    codes = np.asarray(rows) / steps[:, None]
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+
+
+def test_qat_master_weights_get_gradients():
+    t = qat.init_qat(jax.random.PRNGKey(0), 16, 4, 8, method="lsq")
+    ids = jnp.array([1, 2])
+
+    def loss(w):
+        rows = qat.qat_lookup(qat.QATTable(w, t.scale), ids, 8, method="lsq")
+        return jnp.sum(rows**2)
+
+    g = jax.grad(loss)(t.weights)
+    assert float(jnp.abs(g[jnp.array([1, 2])]).sum()) > 0.0
+    assert float(jnp.abs(g[jnp.array([0, 3])]).sum()) == 0.0
+
+
+@pytest.mark.parametrize("method", ["lsq", "pact"])
+def test_qat_trains_toward_target(method):
+    t = qat.init_qat(jax.random.PRNGKey(1), 8, 4, 8, method=method)
+    ids = jnp.arange(8)
+    target = 0.11
+
+    @jax.jit
+    def step(t):
+        def loss(tbl):
+            rows = qat.qat_lookup(tbl, ids, 8, method=method)
+            return jnp.sum((rows - target) ** 2)
+
+        g = jax.grad(lambda w, s: loss(qat.QATTable(w, s)), argnums=(0, 1))(
+            t.weights, t.scale
+        )
+        return qat.QATTable(t.weights - 0.05 * g[0], t.scale - 1e-3 * g[1])
+
+    for _ in range(200):
+        t = step(t)
+    rows = qat.qat_lookup(t, ids, 8, method=method)
+    assert float(jnp.mean(jnp.abs(rows - target))) < 0.01
+
+
+def test_qat_export_roundtrip():
+    t = qat.init_qat(jax.random.PRNGKey(2), 16, 8, 8, method="lsq")
+    codes, step = qat.export_int8(t, 8, method="lsq")
+    assert codes.dtype == jnp.int8
+    recon = quant.dequantize(codes, step)
+    fq = qat.qat_lookup(t, jnp.arange(16), 8, method="lsq")
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(fq), atol=1e-6)
+
+
+# ---------------------------------------------------------------- QR hashing
+
+
+def test_qr_compression_ratio():
+    t = hashing.init_qr(jax.random.PRNGKey(0), n=100000, d=16, compression=2.0)
+    total_rows = t.remainder.shape[0] + t.quotient.shape[0]
+    ratio = 100000 / total_rows
+    assert 1.8 < ratio < 2.6  # ~2x as in paper Table 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(100, 5000), ids=st.lists(st.integers(0, 99), min_size=1, max_size=8))
+def test_qr_index_decomposition_unique(n, ids):
+    """(id % r, id // r) is injective over [0, n) — no two features collide."""
+    t = hashing.init_qr(jax.random.PRNGKey(0), n=n, d=4)
+    seen = set()
+    for i in range(min(n, 500)):
+        pair = (i % t.r, i // t.r)
+        assert pair not in seen
+        seen.add(pair)
+
+
+def test_qr_lookup_is_product():
+    t = hashing.init_qr(jax.random.PRNGKey(0), n=64, d=4)
+    ids = jnp.array([0, 7, 63])
+    out = hashing.qr_lookup(t, ids)
+    expect = np.asarray(t.remainder)[np.asarray(ids) % t.r] * np.asarray(t.quotient)[
+        np.asarray(ids) // t.r
+    ]
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- pruning
+
+
+def test_prune_ratio_schedule():
+    cfg = pruning.PruneConfig(target_sparsity=0.5, warmup_steps=10, damping=0.9,
+                              damping_steps=100)
+    assert float(pruning.prune_ratio(cfg, jnp.asarray(0))) == 0.0
+    r_mid = float(pruning.prune_ratio(cfg, jnp.asarray(200)))
+    r_late = float(pruning.prune_ratio(cfg, jnp.asarray(5000)))
+    assert 0.0 < r_mid < r_late <= 0.5 + 1e-6
+
+
+def test_prune_mask_and_regrowth():
+    cfg = pruning.PruneConfig(target_sparsity=0.5, warmup_steps=0, damping=0.5,
+                              damping_steps=1)
+    s = pruning.init_prune(jax.random.PRNGKey(0), 64, 8)
+    s = s._replace(step=jnp.asarray(1000, jnp.int32))
+    s = pruning.update_mask(s, cfg)
+    sp = float(pruning.sparsity(s))
+    assert 0.4 < sp < 0.6
+    # Regrowth: boost pruned weights' magnitude; a fresh mask must re-admit them.
+    big = jnp.where(s.mask, s.weights, 10.0)
+    s2 = pruning.update_mask(s._replace(weights=big), cfg)
+    regrown = jnp.mean((~s.mask & s2.mask).astype(jnp.float32))
+    assert float(regrown) > 0.2
+
+
+def test_prune_lookup_applies_mask():
+    s = pruning.init_prune(jax.random.PRNGKey(0), 16, 4)
+    mask = s.mask.at[3].set(False)
+    s = s._replace(mask=mask)
+    rows = pruning.prune_lookup(s, jnp.array([3]))
+    np.testing.assert_array_equal(np.asarray(rows), np.zeros((1, 4)))

@@ -1,0 +1,185 @@
+"""Behaviour tests for LPT (Eq. 8) and ALPT (Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import alpt, lpt, quant, theory
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_table(n=32, d=8, bits=8, optimizer="sgd", **kw):
+    return lpt.init_table(jax.random.PRNGKey(0), n, d, bits, optimizer=optimizer, **kw)
+
+
+def test_lookup_shapes():
+    t = make_table()
+    ids = jnp.array([[0, 1], [2, 3]])
+    rows = lpt.lookup(t, ids)
+    assert rows.shape == (2, 2, 8)
+    assert rows.dtype == jnp.float32
+
+
+def test_untouched_rows_bit_stable():
+    """LPT must not drift rows that a batch does not touch."""
+    t = make_table(optimizer="adam")
+    ids = jnp.array([1, 3])
+    g = jnp.ones((2, 8), jnp.float32)
+    t2 = lpt.sparse_apply(
+        t, ids, g, lr=0.1, bits=8, rounding="sr",
+        noise_key=jax.random.PRNGKey(1), optimizer="adam",
+    )
+    untouched = [i for i in range(32) if i not in (1, 3)]
+    np.testing.assert_array_equal(
+        np.asarray(t.codes)[untouched], np.asarray(t2.codes)[untouched]
+    )
+    # Touched rows did change.
+    assert not np.array_equal(np.asarray(t.codes)[[1, 3]], np.asarray(t2.codes)[[1, 3]])
+
+
+def test_duplicate_ids_sum_gradients():
+    """Duplicate ids in a batch behave like a scatter-add (one summed update)."""
+    t = make_table(optimizer="sgd", step_size=0.001)
+    ids_dup = jnp.array([5, 5])
+    g = jnp.ones((2, 8), jnp.float32) * 0.01
+    t_dup = lpt.sparse_apply(
+        t, ids_dup, g, lr=1.0, bits=8, rounding="dr", optimizer="sgd"
+    )
+    ids_one = jnp.array([5])
+    t_one = lpt.sparse_apply(
+        t, ids_one, jnp.ones((1, 8)) * 0.02, lr=1.0, bits=8, rounding="dr",
+        optimizer="sgd",
+    )
+    np.testing.assert_array_equal(np.asarray(t_dup.codes[5]), np.asarray(t_one.codes[5]))
+
+
+def test_sparse_vs_dense_equivalence():
+    """The CTR (sparse) path and the LM (dense) path implement one update rule."""
+    t = make_table(n=16, d=4, optimizer="adam")
+    ids = jnp.array([2, 7, 11])
+    g_rows = jax.random.normal(jax.random.PRNGKey(5), (3, 4))
+    key = jax.random.PRNGKey(9)
+    t_sparse = lpt.sparse_apply(
+        t, ids, g_rows, lr=0.05, bits=8, rounding="dr", optimizer="adam",
+        noise_key=key,
+    )
+    g_dense = jnp.zeros((16, 4)).at[ids].add(g_rows)
+    t_dense = lpt.dense_apply(
+        t, g_dense, lr=0.05, bits=8, rounding="dr", optimizer="adam", noise_key=key
+    )
+    np.testing.assert_array_equal(np.asarray(t_sparse.codes), np.asarray(t_dense.codes))
+    np.testing.assert_allclose(
+        np.asarray(t_sparse.mu), np.asarray(t_dense.mu), atol=1e-6
+    )
+
+
+def test_lpt_under_jit():
+    t = make_table()
+
+    @jax.jit
+    def step(t, ids, g, key):
+        return lpt.sparse_apply(
+            t, ids, g, lr=0.1, bits=8, rounding="sr", noise_key=key, optimizer="sgd"
+        )
+
+    t2 = step(t, jnp.array([0, 1, 1]), jnp.ones((3, 8)), jax.random.PRNGKey(0))
+    assert t2.codes.shape == t.codes.shape
+
+
+def test_lpt_convergence_sr_beats_dr():
+    """Remark 1 on a real table: small-gradient regime stalls DR, not SR.
+
+    Target rows pulled toward 0.5 with decaying lr; SR keeps moving, DR freezes.
+    """
+    bits = 8
+    delta = 0.01
+
+    def run(rounding, iters=300):
+        t = make_table(n=4, d=8, step_size=delta, optimizer="sgd")
+        ids = jnp.arange(4)
+        key = jax.random.PRNGKey(7)
+        for i in range(1, iters + 1):
+            rows = lpt.lookup(t, ids)
+            g = 2.0 * (rows - 0.5)
+            key, kn = jax.random.split(key)
+            t = lpt.sparse_apply(
+                t, ids, g, lr=0.3 / np.sqrt(i), bits=bits, rounding=rounding,
+                noise_key=kn, optimizer="sgd",
+            )
+        return float(jnp.mean(jnp.abs(lpt.lookup(t, ids) - 0.5)))
+
+    err_sr = run("sr")
+    err_dr = run("dr")
+    assert err_sr < 0.008  # SR converges to the quantization floor
+    assert err_dr > 0.008  # DR stalls above it (Remark 1)
+    assert err_dr > 2.0 * err_sr
+
+
+def test_theorem_bounds_dr_geq_sr():
+    for T in (10, 100, 10000):
+        for delta in (0.1, 0.01, 0.001):
+            b_sr = theory.sr_bound(D=1.0, G=1.0, eta=0.5, d=16, delta=delta, T=T)
+            b_dr = theory.dr_bound(D=1.0, G=1.0, eta=0.5, d=16, delta=delta, T=T)
+            assert b_dr >= b_sr - 1e-9
+
+
+def test_synthetic_experiment_fig3():
+    """Reproduce Fig 3: SR ~ FP convergence; DR stalls with ~100% small updates."""
+    fp = theory.synthetic_experiment("fp", iters=1000)
+    sr = theory.synthetic_experiment("sr", iters=1000)
+    dr = theory.synthetic_experiment("dr", iters=1000)
+    assert float(fp.mean_abs_err[-1]) < 0.02
+    assert float(sr.mean_abs_err[-1]) < 0.02  # similar-or-faster than FP (paper)
+    assert float(dr.mean_abs_err[-1]) > 5 * float(sr.mean_abs_err[-1])  # stalled
+    # Fig 3(d): after ~10 iters all DR updates are below Delta/2.
+    assert float(dr.stalled_frac[50]) > 0.95
+
+
+def test_alpt_step_runs_and_learns_delta():
+    cfg = alpt.ALPTConfig(bits=8, step_lr=1e-2, weight_decay=0.0, optimizer="sgd")
+    t = make_table(n=16, d=8, step_size=0.01, optimizer="sgd")
+    ids = jnp.array([1, 2, 3, 3])
+    target = jnp.ones((4, 8)) * 0.3
+
+    def loss_fn(rows):
+        return jnp.sum((rows - target) ** 2)
+
+    step_before = np.asarray(t.step).copy()
+    losses = []
+    key = jax.random.PRNGKey(0)
+    for i in range(30):
+        key, kn = jax.random.split(key)
+        t, loss, aux = alpt_step_jitted(t, ids, loss_fn, cfg, kn)
+        losses.append(float(loss))
+    # Loss decreased and the touched step sizes moved.
+    assert losses[-1] < losses[0] * 0.5
+    touched = np.array([1, 2, 3])
+    assert not np.allclose(np.asarray(t.step)[touched], step_before[touched])
+    untouched = np.array([0, 5, 10])
+    np.testing.assert_array_equal(np.asarray(t.step)[untouched], step_before[untouched])
+
+
+def alpt_step_jitted(t, ids, loss_fn, cfg, key):
+    @jax.jit
+    def _step(t, key):
+        return alpt.alpt_step(t, ids, loss_fn, cfg=cfg, lr=0.1, noise_key=key)
+
+    return _step(t, key)
+
+
+def test_alpt_grad_scale_factor():
+    cfg = alpt.ALPTConfig(bits=8, grad_scale="bdq")
+    g = alpt.grad_scale_factor(cfg, batch_rows=100, dim=16)
+    assert abs(g - 1.0 / np.sqrt(100 * 16 * 127)) < 1e-9
+    cfg1 = cfg._replace(grad_scale="1")
+    assert alpt.grad_scale_factor(cfg1, 100, 16) == 1.0
+
+
+def test_memory_accounting():
+    t = make_table(n=1000, d=16, bits=8)
+    fp_bytes = 1000 * 16 * 4
+    lpt_bytes = lpt.memory_bytes(t, bits=8)
+    # 4x on codes; the per-row Delta costs one extra f32 per row (paper §4.2).
+    assert lpt_bytes == 1000 * 16 * 1 + 1000 * 4
+    assert fp_bytes / lpt_bytes > 3.0

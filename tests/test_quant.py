@@ -1,0 +1,147 @@
+"""Unit + property tests for repro.core.quant (paper §2.1, Eqs. 1-4, 6-7)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_code_bounds():
+    assert quant.code_bounds(8) == (-128, 127)
+    assert quant.code_bounds(4) == (-8, 7)
+    assert quant.code_bounds(2) == (-2, 1)
+    with pytest.raises(ValueError):
+        quant.code_bounds(1)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_codes_in_range(bits):
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64, 16)) * 10.0  # force clipping
+    step = jnp.full((64,), 0.01)
+    noise = quant.sr_noise(jax.random.PRNGKey(1), w.shape)
+    for rounding, nz in [("dr", None), ("sr", noise)]:
+        codes = quant.quantize_codes(w, step, bits, rounding, nz)
+        n, p = quant.code_bounds(bits)
+        assert codes.dtype == jnp.int8
+        assert int(codes.min()) >= n and int(codes.max()) <= p
+
+
+def test_dr_rounding_half_up():
+    # Eq. 3: frac < 0.5 -> floor, frac >= 0.5 -> floor + 1.
+    x = jnp.array([0.4, 0.5, 0.6, -0.4, -0.5, -0.6, 2.5])
+    out = quant.round_deterministic(x)
+    np.testing.assert_array_equal(np.asarray(out), [0.0, 1.0, 1.0, 0.0, 0.0, -1.0, 3.0])
+
+
+def test_dr_roundtrip_error_bound():
+    """DR quantization error <= Delta/2 inside the clip range."""
+    key = jax.random.PRNGKey(2)
+    step = 0.02
+    w = jax.random.uniform(key, (1000,), minval=-1.0, maxval=1.0)
+    q = quant.quantize(w, step, 8, "dr")
+    n, p = quant.code_bounds(8)
+    inside = (w / step > n) & (w / step < p)
+    err = jnp.abs(q - w)
+    assert float(err[inside].max()) <= step / 2 + 1e-6
+
+
+def test_sr_unbiased():
+    """E[Q_S(w)] == w for w inside the representable range (key SR property)."""
+    w = jnp.full((200000,), 0.01234)
+    step = 0.01
+    noise = quant.sr_noise(jax.random.PRNGKey(3), w.shape)
+    q = quant.quantize(w, step, 8, "sr", noise)
+    assert abs(float(q.mean()) - 0.01234) < 2e-5
+
+
+def test_sr_identity_on_lattice():
+    """SR of an exact lattice point never moves it (LPT untouched-row stability)."""
+    codes = jnp.arange(-128, 128, dtype=jnp.int8).reshape(16, 16)
+    step = jnp.full((16,), 0.03125)  # power of two -> exact float lattice
+    w = quant.dequantize(codes, step)
+    noise = quant.sr_noise(jax.random.PRNGKey(4), w.shape)
+    codes2 = quant.quantize_codes(w, step, 8, "sr", noise)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes2))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    step=st.floats(1e-3, 1.0),
+    val=st.floats(-5.0, 5.0),
+)
+def test_quantize_is_lattice_point(bits, step, val):
+    """Q(w) is always Delta * integer within the code range."""
+    q = float(quant.quantize(jnp.array([val]), step, bits, "dr")[0])
+    code = q / step
+    n, p = quant.code_bounds(bits)
+    assert abs(code - round(code)) < 1e-4
+    assert n - 0.01 <= code <= p + 0.01
+
+
+def test_per_row_step_broadcast():
+    w = jnp.ones((4, 8)) * 0.5
+    step = jnp.array([0.1, 0.2, 0.5, 1.0])
+    q = quant.quantize(w, step, 8, "dr")
+    np.testing.assert_allclose(np.asarray(q[0]), 0.5, atol=1e-6)  # 0.5/0.1 = 5 exactly
+    np.testing.assert_allclose(np.asarray(q[2]), 0.5, atol=1e-6)  # code 1 * 0.5
+    np.testing.assert_allclose(np.asarray(q[3]), 1.0, atol=1e-6)  # 0.5 ties up -> 1
+
+
+def test_lsq_step_gradient_matches_eq7():
+    """Eq. 7: dQ/dDelta piecewise — check all three branches."""
+    bits = 8
+    n, p = quant.code_bounds(bits)
+    step = jnp.array(0.1)
+    w = jnp.array([-100.0, 100.0, 0.0314])  # below, above, inside
+    grads = jax.grad(lambda s: jnp.sum(quant.fake_quant_lsq(w, s, bits, 1.0)))(step)
+    scaled = 0.0314 / 0.1
+    expected_inside = round(scaled) - scaled
+    expected = n + p + expected_inside
+    assert abs(float(grads) - expected) < 1e-4
+
+
+def test_lsq_ste_weight_gradient():
+    """STE: dQ/dw = 1 inside the clip range, 0 outside."""
+    bits = 8
+    step = jnp.array(0.1)
+    w = jnp.array([-100.0, 0.05, 100.0])
+    g = jax.grad(lambda x: jnp.sum(quant.fake_quant_lsq(x, step, bits, 1.0)))(w)
+    np.testing.assert_allclose(np.asarray(g), [0.0, 1.0, 0.0], atol=1e-6)
+
+
+def test_lsq_grad_scale_applies_to_step_only():
+    bits = 8
+    step = jnp.array(0.1)
+    w = jnp.array([0.0314])
+    g1 = jax.grad(lambda s: jnp.sum(quant.fake_quant_lsq(w, s, bits, 1.0)))(step)
+    g2 = jax.grad(lambda s: jnp.sum(quant.fake_quant_lsq(w, s, bits, 0.5)))(step)
+    assert abs(float(g2) - 0.5 * float(g1)) < 1e-6
+    gw1 = jax.grad(lambda x: jnp.sum(quant.fake_quant_lsq(x, step, bits, 1.0)))(w)
+    gw2 = jax.grad(lambda x: jnp.sum(quant.fake_quant_lsq(x, step, bits, 0.5)))(w)
+    np.testing.assert_allclose(np.asarray(gw1), np.asarray(gw2))
+
+
+def test_pact_gradients():
+    bits = 8
+    alpha = jnp.array(1.0)
+    w = jnp.array([-2.0, 0.5, 2.0])
+    ga = jax.grad(lambda a: jnp.sum(quant.fake_quant_pact(w, a, bits)))(alpha)
+    # Outside: sign(w) -> -1 + 1 = 0; inside contributes 0.
+    assert abs(float(ga) - 0.0) < 1e-6
+    gw = jax.grad(lambda x: jnp.sum(quant.fake_quant_pact(x, alpha, bits)))(w)
+    np.testing.assert_allclose(np.asarray(gw), [0.0, 1.0, 0.0], atol=1e-6)
+
+
+def test_init_step_size_positive():
+    w = jnp.zeros((8, 4))
+    s = quant.init_step_size(w, 8)
+    assert s.shape == (8,)
+    assert float(s.min()) > 0.0
