@@ -1,0 +1,36 @@
+"""repro — ALPT (AAAI 2023) reproduction + mesh-parallel LM/CTR training.
+
+Platform selection: containers in this project often carry a ``libtpu``
+plugin whose TPU discovery retries a cloud metadata server for ~8 minutes
+before giving up and falling back to CPU, which breaks every
+subprocess-based test (they spawn with clean environments and 300 s
+timeouts).  jax initializes its backend lazily — so pinning the platform
+here, at package-import time, takes effect for any program that imports
+``repro`` before its first jax operation (jax itself may already be
+imported; ``jax.config.update`` still applies pre-initialization).  We only
+pin ``cpu`` when the user has not chosen a platform explicitly and no TPU
+device is visible on the host.
+"""
+import os as _os
+
+
+def _tpu_plausible() -> bool:
+    if _os.environ.get("TPU_NAME") or _os.environ.get("TPU_WORKER_ID"):
+        return True
+    for dev in ("/dev/accel0", "/dev/vfio/0"):
+        if _os.path.exists(dev):
+            return True
+    return False
+
+
+if "JAX_PLATFORMS" not in _os.environ and not _tpu_plausible():
+    # For our own child processes (dry-run cells, serve workers).
+    _os.environ["JAX_PLATFORMS"] = "cpu"
+    try:  # For this process, even if jax was imported first.
+        import jax as _jax
+
+        _jax.config.update("jax_platforms", "cpu")
+    except Exception:  # backend already initialized — leave it alone
+        pass
+
+del _os

@@ -1,0 +1,134 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` package.
+
+Installed by ``tests/conftest.py`` ONLY when the real package cannot be
+imported (offline containers).  It covers exactly the API surface the test
+suite uses — ``given``, ``settings``, ``assume`` and the ``integers`` /
+``floats`` / ``sampled_from`` / ``booleans`` / ``lists`` strategies — by
+running each property against a deterministic pseudo-random sample of the
+strategy space (seeded from the test name, so failures reproduce).  It does
+no shrinking and no coverage-guided search; it is a fallback, not a
+replacement — ``requirements.txt`` declares the real dependency.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+import zlib
+
+
+class _Unsatisfied(Exception):
+    """Raised by ``assume(False)``; the example is skipped."""
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> Strategy:
+    pool = list(elements)
+    return Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda rng: value)
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+
+    return Strategy(draw)
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records ``max_examples`` on the decorated function; other knobs are
+    accepted and ignored."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def assume(condition) -> None:
+    if not condition:
+        raise _Unsatisfied
+
+
+def given(**strategies):
+    def deco(fn):
+        def wrapper():
+            n = getattr(
+                wrapper, "_stub_max_examples",
+                getattr(fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES),
+            )
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < 10 * n:
+                attempts += 1
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(**drawn)
+                except _Unsatisfied:
+                    continue
+                except BaseException as e:
+                    raise AssertionError(
+                        f"property {fn.__name__} falsified by {drawn!r}"
+                    ) from e
+                ran += 1
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # Zero-arg signature so pytest doesn't mistake drawn params for
+        # fixtures (real hypothesis does the same signature surgery).
+        import inspect
+
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register stub ``hypothesis`` / ``hypothesis.strategies`` modules."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None
+    )
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans", "just",
+                 "lists"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -135,6 +135,7 @@ def alpt_dense_step(
     cfg: ALPTConfig,
     lr: jax.Array,
     noise_key: jax.Array,
+    batch_rows: int,
 ):
     """pjit-friendly ALPT: dense gradients + dense Delta learning.
 
@@ -142,6 +143,12 @@ def alpt_dense_step(
     ``loss_fn_q(table_fp) -> scalar`` re-evaluates the loss from a dense float
     table (used for the Delta gradient via fake-quant).  Untouched rows keep
     codes and Delta bit-identical.
+
+    ``batch_rows`` is the paper's b — the number of table-row lookups the
+    batch performed (token count for an LM) — feeding the Delta gradient
+    scale g = 1/sqrt(b*d*q).  It matches the sparse path's ``ids.size``; the
+    table's total row count is NOT a substitute (it over-damps the Delta
+    learning rate by sqrt(V/b)).
     """
     touched = jnp.any(grad_table != 0.0, axis=-1)
     w = lpt.dense_table(table)
@@ -150,7 +157,7 @@ def alpt_dense_step(
     w_new, mu_new, nu_new = lpt._row_update(
         w, grad_table, table.mu, table.nu, t, lr, cfg.optimizer, cfg.weight_decay
     )
-    gscale = grad_scale_factor(cfg, batch_rows=int(jnp.size(touched)), dim=table.dim)
+    gscale = grad_scale_factor(cfg, batch_rows=int(batch_rows), dim=table.dim)
 
     def loss_wrt_step(step_vec):
         table_q = quant.fake_quant_lsq(

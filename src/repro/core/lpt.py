@@ -183,12 +183,10 @@ def sparse_apply(
     w = quant.dequantize(jnp.take(table.codes, safe, axis=0), jnp.take(table.step, safe))
     count = table.count + 1
     t = count.astype(jnp.float32)
-    if optimizer == "adam":
-        mu = jnp.take(table.mu, safe, axis=0)
-        nu = jnp.take(table.nu, safe, axis=0)
-    else:
-        mu = jnp.take(table.mu, safe, axis=0)
-        nu = jnp.take(table.nu, safe, axis=0)
+    # Slot layout is optimizer-dependent ([k, d] adam / [k] otherwise) but the
+    # gather is row-indexed either way.
+    mu = jnp.take(table.mu, safe, axis=0)
+    nu = jnp.take(table.nu, safe, axis=0)
     w_new, mu_new, nu_new = _row_update(
         w, g_sum, mu, nu, t, lr, optimizer, weight_decay
     )

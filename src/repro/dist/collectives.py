@@ -1,0 +1,69 @@
+"""Compressed cross-replica collectives built on the paper's SR quantizer.
+
+``compressed_psum_local`` is an int8 all-reduce for gradients: every rank
+SR-quantizes its local shard against a *shared* step size (a pmax of the
+per-rank absmax, so codes are comparable across ranks), the integer codes are
+psum'd in int32 (no overflow for <= 2^24 ranks), and the sum is de-quantized
+once.  Stochastic rounding keeps the reduction unbiased —
+E[Q_sr(g)] = g (quant.round_stochastic) — so compression noise averages out
+across ranks instead of accumulating as bias; this is Li et al.'s embedding
+quantizer applied to communication, in the spirit of Guan et al.'s 4-bit
+embedding tables.
+
+Runs INSIDE ``jax.shard_map`` (it uses named-axis collectives).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def _linear_rank(axis) -> jax.Array:
+    """This rank's linear index over (possibly multiple) named axes."""
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    rank = jnp.zeros((), jnp.int32)
+    for a in axes:
+        rank = rank * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return rank
+
+
+def compressed_psum_local(
+    grad: jax.Array,
+    axis,
+    key: jax.Array,
+    bits: int = 8,
+) -> jax.Array:
+    """SR-quantized psum of ``grad`` over the named mesh axis ``axis``.
+
+    Returns the (approximate) sum in float32.  Per-element error is bounded by
+    ``n_ranks * step`` with ``step = pmax(|grad|) / (2^{bits-1} - 1)`` — under
+    2% relative for int8 — and is mean-zero because each rank folds its rank
+    index into ``key`` (decorrelated SR noise).
+    """
+    _, p = quant.code_bounds(bits)
+    # One shared step size per reduction: pmax so every rank scales alike.
+    absmax = jax.lax.pmax(jnp.max(jnp.abs(grad.astype(jnp.float32))), axis)
+    step = jnp.maximum(absmax / p, jnp.float32(1e-30))
+    noise = quant.sr_noise(
+        jax.random.fold_in(key, _linear_rank(axis)), grad.shape
+    )
+    codes = quant.quantize_codes(grad, step, bits, "sr", noise)
+    total = jax.lax.psum(codes.astype(jnp.int32), axis)
+    return total.astype(jnp.float32) * step
+
+
+def compressed_pmean_local(
+    grad: jax.Array,
+    axis,
+    key: jax.Array,
+    bits: int = 8,
+) -> jax.Array:
+    """Mean-reducing variant of :func:`compressed_psum_local`."""
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    total = compressed_psum_local(grad, axis, key, bits=bits)
+    size = 1
+    for a in axes:
+        size = size * jax.lax.axis_size(a)
+    return total / jnp.float32(size)

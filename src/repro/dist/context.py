@@ -1,0 +1,124 @@
+"""Ambient distribution context: logical-name sharding constraints.
+
+Models never mention mesh axes.  They call ``hint(x, kind)`` with a *logical*
+kind (``q_heads``, ``carry``, ``logits``, ...) and the active
+``(mesh, policy)`` context — installed by ``use(mesh, policy)`` around the
+jit trace — decides the physical ``PartitionSpec``.  With no active context
+``hint`` is the identity, so the exact same model code runs single-device.
+
+Kinds and their canonical layouts:
+
+  q_heads     [B, T, H, hd]   heads over 'model', batch over data axes
+  kv_heads    [B, T, KV, hd]  (same, KV may be smaller than H under GQA)
+  carry       [B, T, d]       scan carry; T over 'model' iff seq-parallel
+  activation  [B, T, d]       block input/output
+  head_weight [V, d]          vocab over 'model' (fallback: d over 'model')
+  embed_table [V, d]          de-quantized LPT/ALPT table + its gradient
+  logits      [B, C, V]       vocab over 'model', batch over data axes
+  moe_buf     [B, E, C, d]    experts over 'model' (GSPMD MoE dispatch)
+
+Every placement is divisibility-guarded: an axis that does not evenly divide
+the corresponding dimension is dropped (e.g. hubert's vocab=504 head on a
+16-way model axis stays replicated) — degenerate shapes degrade to coarser
+sharding instead of erroring.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Any  # jax.sharding.Mesh
+    policy: Any  # repro.dist.sharding.Policy
+
+
+_STACK: list[DistContext] = []
+
+
+@contextlib.contextmanager
+def use(mesh, policy):
+    """Install ``(mesh, policy)`` as the ambient distribution context.
+
+    Wrap the jit *trace* (the ``jax.jit(...)`` call), not just execution —
+    ``hint`` reads the stack at trace time.  Contexts nest; the innermost
+    wins.
+    """
+    _STACK.append(DistContext(mesh=mesh, policy=policy))
+    try:
+        yield _STACK[-1]
+    finally:
+        _STACK.pop()
+
+
+def current() -> DistContext | None:
+    return _STACK[-1] if _STACK else None
+
+
+def moe_ep_context() -> DistContext | None:
+    """The active context iff the policy requests explicit expert-parallel
+    dispatch (shard_map all-to-all instead of GSPMD MoE)."""
+    ctx = current()
+    if ctx is None or not getattr(ctx.policy, "ep", False):
+        return None
+    return ctx
+
+
+# --------------------------------------------------------------------- hints
+
+# One divisibility guard shared with the pspec builders, so hint() and
+# batch/state specs can never disagree about what fits an axis.
+from repro.dist.sharding import _dp_or_none as _dp_entry  # noqa: E402
+from repro.dist.sharding import model_or_none as _model_entry  # noqa: E402
+
+
+def _spec_for(kind: str, shape, pol, mesh) -> P | None:
+    nd = len(shape)
+    if kind in ("q_heads", "kv_heads"):
+        if nd != 4:
+            return None
+        return P(_dp_entry(pol, shape[0], mesh), None,
+                 _model_entry(pol, shape[2], mesh), None)
+    if kind in ("carry", "activation"):
+        if nd != 3:
+            return None
+        seq = _model_entry(pol, shape[1], mesh) if pol.seq_parallel else None
+        return P(_dp_entry(pol, shape[0], mesh), seq, None)
+    if kind in ("head_weight", "embed_table"):
+        if nd != 2:
+            return None
+        vocab = _model_entry(pol, shape[0], mesh)
+        if vocab is not None:
+            return P(vocab, None)
+        return P(None, _model_entry(pol, shape[1], mesh))
+    if kind == "logits":
+        if nd < 2:
+            return None
+        mid = [None] * (nd - 2)
+        return P(_dp_entry(pol, shape[0], mesh), *mid,
+                 _model_entry(pol, shape[-1], mesh))
+    if kind == "moe_buf":
+        if nd != 4:
+            return None
+        return P(_dp_entry(pol, shape[0], mesh),
+                 _model_entry(pol, shape[1], mesh), None, None)
+    raise ValueError(f"unknown sharding hint kind {kind!r}")
+
+
+def hint(x, kind: str):
+    """Constrain ``x`` to the active policy's layout for ``kind``.
+
+    Identity when no context is active or no mesh axis fits the shape.
+    """
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = _spec_for(kind, x.shape, ctx.policy, ctx.mesh)
+    if spec is None or all(e is None for e in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

@@ -1,0 +1,349 @@
+"""Sharding policies and PartitionSpec builders for every trainer pytree.
+
+A ``Policy`` names the parallelism style (tp / fsdp_tp / dp / *_sp / *_ep) and
+carries the mesh-shape facts the spec builders need.  Builders return
+PartitionSpec pytrees that mirror the runtime pytrees exactly (params,
+optimizer state, quantized LPT/ALPT tables, batches, decode caches), with
+divisibility-guarded placement: an axis that does not evenly divide a
+dimension is dropped rather than erroring, so degenerate shapes (hubert's
+vocab=504 head on a 16-way model axis, odd head counts, tiny smoke configs)
+degrade to replication instead of failing to lower.
+
+Layout rules (DESIGN.md §5, Megatron-style):
+
+* attention/MLP in-projections are column-parallel (output dim over 'model'),
+  out-projections row-parallel (input dim over 'model');
+* MoE expert stacks shard the expert dim over 'model' (expert parallelism);
+* the quantized vocab table (codes, Delta, row-Adam slots) shards vocab over
+  'model', falling back to the feature dim when vocab doesn't divide;
+* fsdp_* additionally shards the non-model matrix dim over the data axes;
+* dp replicates parameters and uses the model axis as extra data parallelism,
+  while still sharding optimizer moments over 'model' (ZeRO-1-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.lpt import LPTTable
+from repro.optim.adam import OptState
+
+# ------------------------------------------------------------------- policy
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Parallelism policy: axis names + shape facts + feature flags."""
+
+    name: str
+    data_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    model_size: int = 1
+    # Total data-parallel way-count (product over data_axes); None = unknown,
+    # which disables fsdp placement (it can't be divisibility-checked).
+    data_size: int | None = None
+    fsdp: bool = False
+    seq_parallel: bool = False
+    ep: bool = False  # explicit shard_map expert-parallel MoE dispatch
+    pure_dp: bool = False  # model axis reused as extra data parallelism
+
+    @property
+    def dp_spec(self):
+        """PartitionSpec entry for a batch dimension."""
+        axes = tuple(self.data_axes)
+        if self.pure_dp:
+            axes = axes + (self.model_axis,)
+        return axes[0] if len(axes) == 1 else axes
+
+
+def policy_from_name(
+    name: str,
+    *,
+    data_axes: tuple[str, ...] = ("data",),
+    model_size: int = 1,
+    data_size: int | None = None,
+) -> Policy:
+    parts = name.split("_")
+    return Policy(
+        name=name,
+        data_axes=data_axes,
+        model_size=model_size,
+        data_size=data_size,
+        fsdp="fsdp" in parts,
+        seq_parallel="sp" in parts,
+        ep="ep" in parts,
+        pure_dp=name == "dp",
+    )
+
+
+# MoE archs get explicit EP dispatch (EXPERIMENTS.md §Perf: GSPMD-only EP
+# triggers involuntary remat); other multi-billion-param archs get fsdp_tp.
+_EP_ARCHS = frozenset({"mixtral-8x7b", "deepseek-moe-16b", "jamba-v0.1-52b"})
+_FSDP_ARCHS = frozenset({"deepseek-67b", "qwen2-vl-7b"})
+
+
+def default_policy(
+    arch: str,
+    *,
+    multi_pod: bool = False,
+    model_size: int = 16,
+    override: str | None = None,
+    data_size: int | None = None,
+) -> Policy:
+    name = override
+    if name is None:
+        if arch in _EP_ARCHS:
+            name = "fsdp_tp_ep"
+        elif arch in _FSDP_ARCHS:
+            name = "fsdp_tp"
+        else:
+            name = "tp"
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    if data_size is None:
+        # Production meshes are 16-way data per pod (launch/mesh.py).
+        data_size = 32 if multi_pod else 16
+    return policy_from_name(
+        name, data_axes=data_axes, model_size=model_size, data_size=data_size
+    )
+
+
+# ------------------------------------------------------------- leaf placing
+
+
+def _leaf_spec(shape, placements: dict[int, str], pol: Policy) -> P:
+    """Build a spec from wanted ``{dim (may be negative): 'model'|'fsdp'}``.
+
+    Drops any placement whose axis size doesn't divide the dimension (or is
+    unknown / 1).
+    """
+    entries: list[Any] = [None] * len(shape)
+    for idx, which in placements.items():
+        i = idx % len(shape) if shape else 0
+        if which == "model":
+            names: Any = pol.model_axis
+            size = pol.model_size
+        else:  # fsdp over the data axes
+            if not pol.fsdp or not pol.data_size:
+                continue
+            axes = tuple(pol.data_axes)
+            names = axes[0] if len(axes) == 1 else axes
+            size = pol.data_size
+        if size and size > 1 and shape[i] % size == 0:
+            entries[i] = names
+    return P(*entries)
+
+
+# Column-parallel (output dim over 'model', optional fsdp on the input dim).
+_COL_PARALLEL = frozenset({"wq", "wk", "wv", "w_gate", "w_up", "w_in",
+                           "wz", "wx", "wdt"})
+# Row-parallel (input dim over 'model', optional fsdp on the output dim).
+_ROW_PARALLEL = frozenset({"wo", "w_down", "w_out", "out_proj"})
+# Vectors / conv stacks living in the model-sharded inner dimension.
+_MODEL_LAST = frozenset({"bq", "bk", "bv", "b_in", "conv_x", "conv_bx",
+                         "norm_w", "dt_bias", "A_log", "D"})
+
+
+def _param_placements(path_names: tuple[str, ...]) -> dict[int, str]:
+    name = path_names[-1]
+    if "moe" in path_names:
+        if "shared" in path_names or name == "router":
+            return {}
+        if name in ("w_gate", "w_up", "w_down"):
+            return {-3: "model"}  # [..., E, d, f] / [..., E, f, d]: expert dim
+        return {}
+    if name in _COL_PARALLEL:
+        return {-1: "model", -2: "fsdp"}
+    if name in _ROW_PARALLEL:
+        return {-2: "model", -1: "fsdp"}
+    if name in _MODEL_LAST:
+        return {-1: "model"}
+    return {}  # norms, router, B/C streams, biases on d_model
+
+
+def _head_spec(shape, pol: Policy) -> P:
+    """Untied LM head [V, d]: vocab over 'model'; replicate the vocab dim and
+    shard d instead when V doesn't divide (hubert's 504-way head on 16)."""
+    v, d = shape
+    m = pol.model_axis
+    if pol.model_size > 1 and v % pol.model_size == 0:
+        return P(m, None)
+    if pol.model_size > 1 and d % pol.model_size == 0:
+        return P(None, m)
+    return P(None, None)
+
+
+def _key_name(entry) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def _param_spec_tree(params_shapes, pol: Policy):
+    def one(path, leaf):
+        names = tuple(_key_name(e) for e in path)
+        if names and names[-1] == "head":
+            return _head_spec(leaf.shape, pol)
+        if pol.pure_dp:
+            return P()
+        return _leaf_spec(leaf.shape, _param_placements(names), pol)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+# --------------------------------------------------------------- public API
+
+
+def _eval_param_shapes(cfg):
+    from repro.models import transformer as tfm
+
+    return jax.eval_shape(
+        functools.partial(tfm.init_params, cfg=cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+
+
+def param_pspecs(cfg, pol: Policy, param_shapes=None):
+    """PartitionSpec tree mirroring ``transformer.init_params(cfg)``."""
+    if param_shapes is None:
+        param_shapes = _eval_param_shapes(cfg)
+    return _param_spec_tree(param_shapes, pol)
+
+
+def _table_axes(cfg, pol: Policy):
+    """(row_entry, col_entry) for the [V, d] embedding table family."""
+    m = pol.model_axis
+    if pol.model_size > 1 and cfg.vocab_size % pol.model_size == 0:
+        return m, None
+    if pol.model_size > 1 and cfg.d_model % pol.model_size == 0:
+        return None, m
+    return None, None
+
+
+def table_pspecs(cfg, pol: Policy, row_optimizer: str = "adam"):
+    """Specs for the embedding table state: ``LPTTable`` for lpt/alpt methods
+    (codes + Delta + row-optimizer slots), a plain [V, d] spec for fp."""
+    row, col = _table_axes(cfg, pol)
+    if cfg.embedding_method not in ("lpt", "alpt"):
+        return P(row, col)
+    slot = P(row, col) if row_optimizer == "adam" else P(row)
+    return LPTTable(
+        codes=P(row, col), step=P(row), mu=slot, nu=slot, count=P()
+    )
+
+
+def state_pspecs(cfg, pol: Policy, tcfg, state_shapes=None):
+    """Spec tree mirroring ``lm_trainer.LMTrainState`` exactly."""
+    from repro.training import lm_trainer
+
+    if state_shapes is None:
+        state_shapes = jax.eval_shape(
+            functools.partial(lm_trainer.init_state, cfg=cfg, tcfg=tcfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+    params_spec = _param_spec_tree(state_shapes.params, pol)
+    # Optimizer moments mirror the params; under pure dp they still shard over
+    # the model axis (ZeRO-1-style optimizer-state sharding).
+    opt_pol = dataclasses.replace(pol, pure_dp=False) if pol.pure_dp else pol
+    moment_spec = _param_spec_tree(state_shapes.params, opt_pol)
+    opt_spec = OptState(step=P(), mu=moment_spec, nu=moment_spec)
+    table_spec = table_pspecs(cfg, pol, tcfg.row_optimizer)
+    if cfg.embedding_method in ("lpt", "alpt"):
+        table_opt_spec = None
+    else:
+        fp_spec = table_pspecs(cfg, pol, tcfg.row_optimizer)
+        table_opt_spec = OptState(step=P(), mu=fp_spec, nu=fp_spec)
+    return lm_trainer.LMTrainState(
+        params=params_spec,
+        opt=opt_spec,
+        table=table_spec,
+        table_opt=table_opt_spec,
+        step=P(),
+        rng=P(),
+    )
+
+
+def mesh_axes_size(mesh, axes) -> int:
+    shape = dict(mesh.shape)
+    size = 1
+    for a in axes:
+        size *= int(shape.get(a, 1))
+    return size
+
+
+def _dp_or_none(pol: Policy, batch_dim: int, mesh):
+    """The data-parallel spec entry for a concrete batch dim on ``mesh``,
+    or None when the dp way-count doesn't divide it."""
+    spec = pol.dp_spec
+    axes = spec if isinstance(spec, tuple) else (spec,)
+    size = mesh_axes_size(mesh, axes)
+    if size <= 1 or batch_dim % size:
+        return None
+    return spec
+
+
+def model_or_none(pol: Policy, dim: int, mesh):
+    """The model-axis spec entry for ``dim`` on ``mesh``, or None when the
+    axis is absent/trivial or doesn't divide it."""
+    size = mesh_axes_size(mesh, (pol.model_axis,))
+    if size <= 1 or dim % size:
+        return None
+    return pol.model_axis
+
+
+def batch_pspecs(batch_shapes, cfg, pol: Policy, mesh):
+    """Specs for a model-input batch dict: batch dim over the data axes.
+
+    ``positions`` may be [3, B, T] (M-RoPE streams lead) — its batch dim is
+    axis 1; every other input leads with batch.
+    """
+    specs = {}
+    for name, sds in batch_shapes.items():
+        shape = sds.shape
+        if name == "positions" and len(shape) == 3:
+            specs[name] = P(None, _dp_or_none(pol, shape[1], mesh), None)
+        else:
+            dp = _dp_or_none(pol, shape[0], mesh) if shape else None
+            specs[name] = P(dp, *([None] * (len(shape) - 1)))
+    return specs
+
+
+def cache_pspecs(cfg, pol: Policy, batch: int, mesh):
+    """Specs mirroring ``transformer.init_cache``: one entry per period
+    position, each stacked [n_groups, batch, ...]."""
+    dp = _dp_or_none(pol, batch, mesh)
+
+    def model_if(dim: int):
+        if pol.model_size > 1 and dim % pol.model_size == 0:
+            return pol.model_axis
+        return None
+
+    _, kv = cfg.padded_heads
+    caches = []
+    for pos in range(cfg.period):
+        if cfg.layer_type(pos) == "attn":
+            kv_spec = P(None, dp, None, model_if(kv), None)
+            caches.append({"k": kv_spec, "v": kv_spec})
+        else:
+            s = cfg.ssm
+            caches.append({
+                "conv_x": P(None, dp, None, model_if(s.d_inner)),
+                "conv_B": P(None, dp, None, None),
+                "conv_C": P(None, dp, None, None),
+                "ssm": P(None, dp, model_if(s.n_heads), None, None),
+            })
+    return caches
+
+
+def to_named(spec_tree, mesh):
+    """Map a PartitionSpec tree to NamedShardings on ``mesh``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

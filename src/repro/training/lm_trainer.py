@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import alpt as alpt_mod
 from repro.core import lpt as lpt_mod
+from repro.dist.context import hint
 from repro.models import transformer as tfm
 from repro.optim import adam_init, adam_update, clip_by_global_norm
 
@@ -91,7 +92,9 @@ def make_train_step(
         lr = lr_at(state.step)
         rng, kn = jax.random.split(state.rng)
 
-        table_fp = table_fp_of(state, cfg)
+        # Keep the de-quantized table and its gradient vocab-sharded through
+        # the whole update (hint is the identity off-mesh).
+        table_fp = hint(table_fp_of(state, cfg), "embed_table")
 
         def loss_of(table_fp, params):
             loss, aux = tfm.loss_fn(params, table_fp, batch, cfg)
@@ -100,6 +103,7 @@ def make_train_step(
         (loss, aux), (g_table, g_params) = jax.value_and_grad(
             loss_of, argnums=(0, 1), has_aux=True
         )(table_fp, state.params)
+        g_table = hint(g_table, "embed_table")
 
         g_params, gnorm = clip_by_global_norm(g_params, tcfg.grad_clip)
         new_params, new_opt = adam_update(
@@ -132,6 +136,8 @@ def make_train_step(
                 # Algorithm 1 line 4: loss at the UPDATED dense params.
                 lambda t: tfm.loss_fn(new_params, t, batch, cfg)[0],
                 cfg=acfg, lr=lr, noise_key=kn,
+                # Paper's b: table-row lookups in this batch (= token count).
+                batch_rows=int(batch["labels"].size),
             )
             new_table_opt = None
 

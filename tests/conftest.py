@@ -1,0 +1,11 @@
+"""Suite-wide conftest.
+
+Provides a minimal ``hypothesis`` stand-in when the real package is absent
+(offline CI containers can't pip install); see repro._compat.hypothesis_stub.
+"""
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro._compat import hypothesis_stub
+
+    hypothesis_stub.install()

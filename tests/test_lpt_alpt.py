@@ -183,3 +183,78 @@ def test_memory_accounting():
     # 4x on codes; the per-row Delta costs one extra f32 per row (paper §4.2).
     assert lpt_bytes == 1000 * 16 * 1 + 1000 * 4
     assert fp_bytes / lpt_bytes > 3.0
+
+
+# ------------------------------------------------- dedup sentinel semantics
+
+
+def test_dedup_ids_sentinel_padding_and_inverse():
+    """dedup_ids pads with the out-of-range sentinel n_rows and maps every
+    occurrence back to its unique slot."""
+    uniq, inv = lpt.dedup_ids(jnp.array([3, 3, 5]), 16)
+    assert uniq.shape == (3,)  # jit-stable: size == number of occurrences
+    np.testing.assert_array_equal(np.asarray(uniq), [3, 5, 16])
+    np.testing.assert_array_equal(np.asarray(inv), [0, 0, 1])
+
+
+def test_sparse_apply_sentinel_inert_and_duplicates_sum_once():
+    """Padding rows (sentinel id n_rows) must scatter inertly (mode='drop')
+    and duplicated ids must receive their SUMMED gradient exactly once."""
+    n, d, lr = 16, 4, 0.5
+    t = make_table(n=n, d=d, optimizer="sgd", step_size=0.01)
+    ids = jnp.array([3, 3, 5])
+    g = jnp.ones((3, d), jnp.float32)
+    t2 = lpt.sparse_apply(t, ids, g, lr=lr, bits=8, rounding="dr",
+                          optimizer="sgd")
+    w0 = np.asarray(lpt.dense_table(t))
+    step = np.asarray(t.step)
+    # Row 3: two occurrences -> one update with the summed gradient (2.0).
+    want3 = quant.quantize_codes(jnp.asarray(w0[3] - lr * 2.0), step[3], 8, "dr")
+    np.testing.assert_array_equal(np.asarray(t2.codes[3]), np.asarray(want3))
+    # Row 5: single occurrence.
+    want5 = quant.quantize_codes(jnp.asarray(w0[5] - lr * 1.0), step[5], 8, "dr")
+    np.testing.assert_array_equal(np.asarray(t2.codes[5]), np.asarray(want5))
+    # Everything else — including the rows the sentinel gather touched (0 and
+    # n-1) — is bit-identical.
+    untouched = [i for i in range(n) if i not in (3, 5)]
+    np.testing.assert_array_equal(
+        np.asarray(t.codes)[untouched], np.asarray(t2.codes)[untouched]
+    )
+    np.testing.assert_array_equal(np.asarray(t.step), np.asarray(t2.step))
+
+
+# -------------------------------------- dense/sparse ALPT grad-scale parity
+
+
+def test_alpt_dense_step_uses_batch_rows_not_table_rows():
+    """Regression: both ALPT paths must scale the Delta gradient by the
+    paper's b = rows-in-the-batch.  The dense path used to pass the table's
+    total row count, damping Delta learning by sqrt(V/b) relative to the
+    sparse path on identical data."""
+    n, d = 32, 8
+    key = jax.random.PRNGKey(0)
+    table = make_table(n=n, d=d, optimizer="sgd")
+    ids = jnp.array([1, 4, 9])
+    c = jax.random.normal(jax.random.PRNGKey(1), (3, d))
+    cfg = alpt.ALPTConfig(bits=8, rounding="dr", optimizer="sgd",
+                          weight_decay=0.0, step_lr=1e-3, grad_scale="bdq")
+    lr = jnp.asarray(0.01, jnp.float32)
+
+    def loss_rows(rows):  # sparse path: per-occurrence rows [3, d]
+        return jnp.sum(rows * c)
+
+    t_sparse, _, _ = alpt.alpt_step(table, ids, loss_rows, cfg=cfg, lr=lr,
+                                    noise_key=key)
+
+    def loss_dense(tab):  # dense path: full de-quantized table [n, d]
+        return jnp.sum(tab[ids] * c)
+
+    g_dense = jax.grad(loss_dense)(lpt.dense_table(table))
+    t_dense = alpt.alpt_dense_step(table, g_dense, loss_dense, cfg=cfg, lr=lr,
+                                   noise_key=key, batch_rows=int(ids.size))
+
+    sel = np.asarray(ids)
+    np.testing.assert_allclose(np.asarray(t_sparse.step)[sel],
+                               np.asarray(t_dense.step)[sel], rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(t_sparse.codes)[sel],
+                                  np.asarray(t_dense.codes)[sel])
