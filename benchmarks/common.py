@@ -9,7 +9,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from repro.core.alpt import ALPTConfig
 from repro.core.pruning import PruneConfig

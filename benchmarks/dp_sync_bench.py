@@ -1,0 +1,134 @@
+"""Data-parallel gradient-sync benchmark: step time, wire bytes, final AUC.
+
+Trains the paper's CTR setup (DCN on the Avazu-shaped synthetic set, LPT int8
+embeddings) data-parallel on an 8-fake-device CPU mesh, sweeping the gradient
+sync bit width ``sync_bits in {32, 8, 4}``:
+
+  * 32 — exact fp32 mean (the baseline the compressed paths must track);
+  * 8/4 — SR-compressed int codes (repro.dist.collectives), the paper's
+    stochastic quantizer applied to communication.
+
+Emits the usual ``name,us_per_call,derived`` CSV rows *and* writes a JSON
+report (``--out``) so CI can upload the wire-byte / step-time / AUC
+trajectory as an artifact.  ``--smoke`` shrinks steps for the per-PR CI run.
+
+Run directly (sets the fake-device flag before jax initializes):
+
+    PYTHONPATH=src python -m benchmarks.dp_sync_bench --smoke --out dp.json
+"""
+import argparse
+import json
+import os
+import sys
+
+if "jax" not in sys.modules:
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+    )
+
+import jax
+
+from benchmarks.common import AVAZU_MINI, BATCH, EVAL_BATCHES, dcn_for, emit
+from repro.core.alpt import ALPTConfig
+from repro.data.ctr_synth import CTRSynthetic
+from repro.models import embedding as emb_mod
+from repro.training import data_parallel as dp_mod
+from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+
+SYNC_BITS = (32, 8, 4)
+
+
+def _make_trainer(data_cfg, sync_bits: int) -> CTRTrainer:
+    spec = emb_mod.EmbeddingSpec(
+        method="lpt", n=data_cfg.n_features, d=16, bits=8, init_scale=0.05,
+        clip_value=0.1, alpt=ALPTConfig(bits=8),
+    )
+    return CTRTrainer(TrainerConfig(
+        spec=spec, model="dcn", dcn=dcn_for(data_cfg), lr=3e-3,
+        dp_sync_bits=sync_bits,
+    ))
+
+
+def run(steps: int | None = None, out: str | None = None, batch: int = BATCH):
+    import time
+
+    steps = 200 if steps is None else steps
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        emit("dp_sync/skip", 0.0, f"needs >=2 devices, have {n_dev}")
+        return None
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    data_cfg = AVAZU_MINI
+    data = CTRSynthetic(data_cfg)
+    rows = []
+    fp32_bytes = None
+    for bits in SYNC_BITS:
+        tr = _make_trainer(data_cfg, bits)
+        step_fn = dp_mod.make_ctr_dp_step(tr, mesh)
+        state = tr.init_state()
+        shapes = dp_mod.ctr_grad_shapes(tr, state, batch // n_dev,
+                                        data_cfg.n_fields)
+        report = dp_mod.wire_report(shapes, bits)
+        fp32_bytes = report["fp32_wire_bytes_per_step"]
+        ids, labels = data.batch("train", 0, batch)
+        state, m = step_fn(state, ids, labels)  # compile + warm-up
+        jax.block_until_ready(m["loss"])
+        t0 = time.time()
+        for i in range(1, steps):
+            ids, labels = data.batch("train", i, batch)
+            state, m = step_fn(state, ids, labels)
+        jax.block_until_ready(m["loss"])
+        us_per_step = (time.time() - t0) / max(steps - 1, 1) * 1e6
+        # Evaluate on the host copy (the mesh state is replicated).
+        ev = tr.evaluate(jax.device_get(state),
+                         data.batches("test", batch, EVAL_BATCHES))
+        row = {
+            "sync_bits": bits,
+            "us_per_step": us_per_step,
+            "wire_bytes_per_step": report["wire_bytes_per_step"],
+            "compression_ratio": report["compression_ratio"],
+            "auc": ev["auc"],
+            "logloss": ev["logloss"],
+            "final_loss": float(m["loss"]),
+        }
+        rows.append(row)
+        emit(
+            f"dp_sync/bits{bits}",
+            us_per_step,
+            f"auc={ev['auc']:.4f} logloss={ev['logloss']:.4f} "
+            f"wire_B={report['wire_bytes_per_step']} "
+            f"ratio={report['compression_ratio']:.2f}x",
+        )
+    result = {
+        "bench": "dp_sync",
+        "mesh_devices": n_dev,
+        "method": "lpt",
+        "steps": steps,
+        "batch": batch,
+        "fp32_wire_bytes_per_step": fp32_bytes,
+        "rows": rows,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"# wrote {out}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: fewer steps, smaller batch")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--out", default=None, help="write JSON report here")
+    args = ap.parse_args(argv)
+    steps = args.steps
+    batch = BATCH
+    if args.smoke and steps is None:
+        steps, batch = 40, 128
+    print("name,us_per_call,derived")
+    run(steps=steps, out=args.out, batch=batch)
+
+
+if __name__ == "__main__":
+    main()

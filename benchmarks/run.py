@@ -4,8 +4,13 @@ Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks training steps
 (CI mode); the full run reproduces the paper's orderings at reduced scale.
 """
 import argparse
-import sys
+import os
 import time
+
+# Before any benchmark imports jax: the dp_sync suite needs a multi-device
+# (fake CPU) mesh, and the flag must be set before the backend initializes.
+# Single-device benchmarks are unaffected (they run on device 0).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 
 def main(argv=None) -> None:
@@ -15,7 +20,7 @@ def main(argv=None) -> None:
         "--only",
         default=None,
         help="comma list from: table1,table2,table3,fig3,fig4,kernels,serve,"
-             "roofline",
+             "roofline,dp_sync",
     )
     args = ap.parse_args(argv)
     steps = 120 if args.quick else None
@@ -58,6 +63,10 @@ def main(argv=None) -> None:
         from benchmarks import roofline
 
         roofline.run()
+    if on("dp_sync"):
+        from benchmarks import dp_sync_bench
+
+        dp_sync_bench.run(steps=steps)
     print(f"# total_wall_s={time.time()-t0:.1f}")
 
 

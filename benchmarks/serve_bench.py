@@ -6,13 +6,11 @@ cache/table bytes that transfer to TPU).
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
 from repro import configs
 from repro.launch.serve import ContinuousBatcher, Request
-from repro.models import transformer as tfm
 from repro.training import lm_trainer
 
 ARCHS = ["smollm-135m", "mixtral-8x7b", "mamba2-370m"]

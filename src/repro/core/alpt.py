@@ -127,6 +127,87 @@ def alpt_step(
     return new_table, loss, aux
 
 
+class DenseWeightUpdate(NamedTuple):
+    """Intermediate of the dense ALPT weight sub-step (Algorithm 1 lines 1-3),
+    handed between :func:`dense_weight_update` and :func:`dense_finish` so a
+    data-parallel caller can interleave gradient synchronization."""
+
+    w_new: jax.Array  # f32 [n, d] float-updated rows
+    mu_new: jax.Array
+    nu_new: jax.Array
+    touched: jax.Array  # bool [n]
+    count: jax.Array  # int32 scalar
+
+
+def dense_weight_update(
+    table: lpt.LPTTable,
+    grad_table: jax.Array,
+    *,
+    cfg: ALPTConfig,
+    lr: jax.Array,
+) -> DenseWeightUpdate:
+    """Dense float weight update (Algorithm 1 line 2) without the write-back."""
+    touched = jnp.any(grad_table != 0.0, axis=-1)
+    w = lpt.dense_table(table)
+    count = table.count + 1
+    t = count.astype(jnp.float32)
+    w_new, mu_new, nu_new = lpt._row_update(
+        w, grad_table, table.mu, table.nu, t, lr, cfg.optimizer, cfg.weight_decay
+    )
+    return DenseWeightUpdate(
+        w_new=w_new, mu_new=mu_new, nu_new=nu_new, touched=touched, count=count
+    )
+
+
+def dense_delta_grad(
+    w_new: jax.Array,
+    step_vec: jax.Array,
+    loss_fn_q: Callable[[jax.Array], jax.Array],
+    *,
+    cfg: ALPTConfig,
+    gscale: float,
+) -> jax.Array:
+    """Delta gradient (Algorithm 1 line 4): differentiate the fake-quant
+    forward of the *updated* rows w.r.t. the step vector."""
+
+    def loss_wrt_step(step_vec):
+        table_q = quant.fake_quant_lsq(
+            jax.lax.stop_gradient(w_new), step_vec, cfg.bits, gscale
+        )
+        return loss_fn_q(table_q)
+
+    return jax.grad(loss_wrt_step)(step_vec)
+
+
+def dense_finish(
+    table: lpt.LPTTable,
+    upd: DenseWeightUpdate,
+    g_step: jax.Array,
+    *,
+    cfg: ALPTConfig,
+    noise_key: jax.Array,
+) -> lpt.LPTTable:
+    """Delta update + SR re-quantization (Algorithm 1 line 5), touched-row
+    masked so untouched rows keep codes and Delta bit-identical."""
+    new_step = table.step - cfg.step_lr * (g_step + cfg.step_weight_decay * table.step)
+    new_step = jnp.maximum(new_step, 1e-8)
+    new_step = jnp.where(upd.touched, new_step, table.step)
+
+    noise = quant.sr_noise(jax.random.fold_in(noise_key, 1), upd.w_new.shape)
+    codes_new = quant.quantize_codes(
+        upd.w_new, new_step, cfg.bits, cfg.rounding, noise
+    )
+    mask = upd.touched[:, None]
+    codes = jnp.where(mask, codes_new, table.codes)
+    if table.mu.ndim == 2:
+        mu = jnp.where(mask, upd.mu_new, table.mu)
+        nu = jnp.where(mask, upd.nu_new, table.nu)
+    else:
+        mu = jnp.where(upd.touched, upd.mu_new, table.mu)
+        nu = jnp.where(upd.touched, upd.nu_new, table.nu)
+    return table._replace(codes=codes, step=new_step, mu=mu, nu=nu, count=upd.count)
+
+
 def alpt_dense_step(
     table: lpt.LPTTable,
     grad_table: jax.Array,
@@ -149,35 +230,14 @@ def alpt_dense_step(
     scale g = 1/sqrt(b*d*q).  It matches the sparse path's ``ids.size``; the
     table's total row count is NOT a substitute (it over-damps the Delta
     learning rate by sqrt(V/b)).
+
+    Composed from :func:`dense_weight_update` / :func:`dense_delta_grad` /
+    :func:`dense_finish`; the data-parallel trainer calls the pieces directly
+    so it can all-reduce ``grad_table`` and the Delta gradient in between.
     """
-    touched = jnp.any(grad_table != 0.0, axis=-1)
-    w = lpt.dense_table(table)
-    count = table.count + 1
-    t = count.astype(jnp.float32)
-    w_new, mu_new, nu_new = lpt._row_update(
-        w, grad_table, table.mu, table.nu, t, lr, cfg.optimizer, cfg.weight_decay
-    )
+    upd = dense_weight_update(table, grad_table, cfg=cfg, lr=lr)
     gscale = grad_scale_factor(cfg, batch_rows=int(batch_rows), dim=table.dim)
-
-    def loss_wrt_step(step_vec):
-        table_q = quant.fake_quant_lsq(
-            jax.lax.stop_gradient(w_new), step_vec, cfg.bits, gscale
-        )
-        return loss_fn_q(table_q)
-
-    g_step = jax.grad(loss_wrt_step)(table.step)
-    new_step = table.step - cfg.step_lr * (g_step + cfg.step_weight_decay * table.step)
-    new_step = jnp.maximum(new_step, 1e-8)
-    new_step = jnp.where(touched, new_step, table.step)
-
-    noise = quant.sr_noise(jax.random.fold_in(noise_key, 1), w_new.shape)
-    codes_new = quant.quantize_codes(w_new, new_step, cfg.bits, cfg.rounding, noise)
-    mask = touched[:, None]
-    codes = jnp.where(mask, codes_new, table.codes)
-    if table.mu.ndim == 2:
-        mu = jnp.where(mask, mu_new, table.mu)
-        nu = jnp.where(mask, nu_new, table.nu)
-    else:
-        mu = jnp.where(touched, mu_new, table.mu)
-        nu = jnp.where(touched, nu_new, table.nu)
-    return table._replace(codes=codes, step=new_step, mu=mu, nu=nu, count=count)
+    g_step = dense_delta_grad(
+        upd.w_new, table.step, loss_fn_q, cfg=cfg, gscale=gscale
+    )
+    return dense_finish(table, upd, g_step, cfg=cfg, noise_key=noise_key)

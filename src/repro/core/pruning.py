@@ -46,7 +46,6 @@ def update_mask(state: PruneState, cfg: PruneConfig) -> PruneState:
     """Recompute the magnitude mask at the scheduled ratio (regrowth allowed)."""
     ratio = prune_ratio(cfg, state.step)
     flat = jnp.abs(state.weights).reshape(-1)
-    k = flat.shape[0]
     # Threshold = ratio-quantile of |w|; quantile of 0 keeps everything.
     thresh = jnp.quantile(flat, ratio)
     mask = jnp.abs(state.weights) > thresh

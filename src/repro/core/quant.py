@@ -178,7 +178,6 @@ def _pact_fwd(w, alpha, bits):
 
 def _pact_bwd(bits, res, g):
     w, alpha = res
-    p = 2 ** (bits - 1) - 1
     alpha_b = _broadcast_step(w, alpha)
     inside = jnp.abs(w) < alpha_b
     dw = (g * inside).astype(w.dtype)

@@ -67,3 +67,112 @@ def compressed_pmean_local(
     for a in axes:
         size = size * jax.lax.axis_size(a)
     return total / jnp.float32(size)
+
+
+def exact_pmean_local(grad: jax.Array, axis) -> jax.Array:
+    """Uncompressed fp32 mean over ``axis`` with a *deterministic* reduction.
+
+    ``lax.pmean`` leaves the cross-replica summation order to the backend's
+    all-reduce schedule, so its low-order bits can differ from any
+    single-device emulation.  Here every rank all-gathers the shards into a
+    rank-ordered stack and applies one ordinary ``jnp.mean`` over the leading
+    axis — the identical reduction a single device performs on the same stack
+    (:func:`exact_pmean_stacked`).  This is what makes the ``sync_bits=32``
+    data-parallel path bitwise-reproducible against the single-device
+    microbatched trainer.  Runs inside ``jax.shard_map``.
+    """
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    stack = grad.astype(jnp.float32)
+    for a in reversed(axes):
+        stack = jax.lax.all_gather(stack, a, axis=0, tiled=False)
+    for _ in axes[1:]:
+        stack = stack.reshape((-1,) + stack.shape[2:])
+    return jnp.mean(stack, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Single-device emulations over a stacked rank axis.
+#
+# These mirror the collectives above *arithmetic-for-arithmetic* on a
+# ``[n_ranks, ...]`` stack, so a one-device microbatched trainer reproduces
+# the n-device shard_map trainer bit-for-bit:
+#   * the compressed path psums int32 codes — integer addition is associative,
+#     so any summation order gives the same total, and pmax == jnp.max;
+#   * the exact path reduces the same rank-ordered stack with the same
+#     ``jnp.mean``.
+# tests/test_data_parallel.py holds this contract at 32, 8 and 4 bits.
+# ---------------------------------------------------------------------------
+
+
+def exact_pmean_stacked(grad_stack: jax.Array) -> jax.Array:
+    """Single-device twin of :func:`exact_pmean_local` on a [n, ...] stack."""
+    return jnp.mean(grad_stack.astype(jnp.float32), axis=0)
+
+
+def compressed_psum_stacked(
+    grad_stack: jax.Array,
+    key: jax.Array,
+    bits: int = 8,
+) -> jax.Array:
+    """Single-device twin of :func:`compressed_psum_local`.
+
+    ``grad_stack[r]`` plays the role of rank ``r``'s local shard; the SR noise
+    is keyed by ``fold_in(key, r)`` exactly as ``_linear_rank`` does on the
+    mesh, and the int32 code sum is order-independent by construction.
+    """
+    _, p = quant.code_bounds(bits)
+    n = grad_stack.shape[0]
+    absmax = jnp.max(jnp.abs(grad_stack.astype(jnp.float32)))
+    step = jnp.maximum(absmax / p, jnp.float32(1e-30))
+    ranks = jnp.arange(n, dtype=jnp.int32)
+    keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(ranks)
+    noise = jax.vmap(lambda k, g: quant.sr_noise(k, g.shape))(keys, grad_stack)
+    codes = quant.quantize_codes(grad_stack, step, bits, "sr", noise)
+    total = jnp.sum(codes.astype(jnp.int32), axis=0)
+    return total.astype(jnp.float32) * step
+
+
+def compressed_pmean_stacked(
+    grad_stack: jax.Array,
+    key: jax.Array,
+    bits: int = 8,
+) -> jax.Array:
+    """Single-device twin of :func:`compressed_pmean_local`."""
+    total = compressed_psum_stacked(grad_stack, key, bits=bits)
+    return total / jnp.float32(grad_stack.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Wire-byte accounting.
+# ---------------------------------------------------------------------------
+
+
+def sync_wire_bytes(grads, bits: int) -> int:
+    """Per-rank gradient payload (bytes) put on the wire for one sync.
+
+    ``grads`` is a pytree of arrays or ``ShapeDtypeStruct``s.  The fp32
+    baseline ships 4 bytes per element; the compressed path ships the
+    ``bits``-bit codes in their packed wire format (sub-byte widths pack two
+    codes per byte, ``quant.pack4``) plus one fp32 step scalar per tensor for
+    the shared-absmax (pmax) exchange.  Ring-schedule constant factors
+    (2(n-1)/n hops) multiply both paths equally and cancel in the ratio, so
+    they are left out.
+    """
+    if not 2 <= bits <= 8 and bits != 32:
+        raise ValueError(f"sync_bits must be 32 or in [2, 8], got {bits}")
+    total = 0
+    for leaf in jax.tree.leaves(grads):
+        size = 1
+        for dim in leaf.shape:
+            size *= int(dim)
+        if bits == 32:
+            total += size * 4
+        else:
+            # Packed codes round up to whole bytes per tensor.
+            total += -(-size * bits // 8) + 4
+    return total
+
+
+def sync_compression_ratio(grads, bits: int) -> float:
+    """fp32 wire bytes / compressed wire bytes for one gradient sync."""
+    return sync_wire_bytes(grads, 32) / max(sync_wire_bytes(grads, bits), 1)

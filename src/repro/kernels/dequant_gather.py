@@ -15,7 +15,6 @@ Block shape: (1, d_block) per grid step, d_block = min(d, 512) lanes
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

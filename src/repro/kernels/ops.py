@@ -10,12 +10,12 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.dequant_gather import dequant_gather as _dequant_gather
 from repro.kernels.dequant_matmul import dequant_matmul as _dequant_matmul
-from repro.kernels.sr_round import sr_round as _sr_round, sr_round_seeded
+from repro.kernels.sr_round import sr_round as _sr_round
+from repro.kernels.sr_round import sr_round_seeded as sr_round_seeded  # re-export
 
 
 def _default_interpret() -> bool:

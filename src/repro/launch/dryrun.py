@@ -19,7 +19,6 @@ Each cell writes JSON to benchmarks/dryrun_results/<cell>.json; re-runs skip
 cells whose result file already exists (delete to force).
 """
 import argparse
-import dataclasses
 import functools
 import json
 import pathlib

@@ -18,6 +18,7 @@ Fault-tolerance contract (DESIGN.md §6):
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import functools
 import json
@@ -36,7 +37,7 @@ from repro.data.lm_synth import LMTokenStream
 from repro.dist import context as dist_ctx
 from repro.dist import sharding
 from repro.launch.mesh import make_host_mesh
-from repro.training import lm_trainer
+from repro.training import data_parallel, lm_trainer
 
 
 class GracefulShutdown:
@@ -87,36 +88,107 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument(
+        "--dp-compress-bits", type=int, default=None, metavar="BITS",
+        help="data-parallel mode: replicate the state over a --mesh-data-way "
+        "'data' axis (shard_map) and sync gradients at this bit width "
+        "(32 = exact fp32 mean, 8/4/2 = SR-compressed codes); requires "
+        "--mesh-model 1",
+    )
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
     cfg = configs.smoke_config(args.arch) if args.smoke else configs.full_config(args.arch)
     if args.embedding_method:
         cfg = dataclasses.replace(cfg, embedding_method=args.embedding_method)
-    tcfg = lm_trainer.LMTrainerConfig(lr=args.lr)
+    dp_mode = args.dp_compress_bits is not None
+    tcfg = lm_trainer.LMTrainerConfig(
+        lr=args.lr,
+        dp_sync_bits=args.dp_compress_bits if dp_mode else 32,
+    )
 
+    if dp_mode and args.mesh_model != 1:
+        ap.error("--dp-compress-bits is pure data parallelism; use --mesh-model 1")
+    if dp_mode and args.dp_compress_bits != 32 and not 2 <= args.dp_compress_bits <= 8:
+        ap.error("--dp-compress-bits must be 32 (exact) or in [2, 8] "
+                 f"(SR-compressed), got {args.dp_compress_bits}")
+    if dp_mode and args.mesh_data == 1 and tcfg.dp_sync_bits != 32:
+        print("[train] WARNING: --dp-compress-bits < 32 with --mesh-data 1 "
+              "injects quantization noise with nothing to communicate")
     mesh = make_host_mesh(args.mesh_data, args.mesh_model)
     pol = sharding.Policy(name="tp", data_axes=("data",),
                           model_size=args.mesh_model)
-    state_spec = sharding.state_pspecs(cfg, pol, tcfg)
+    if dp_mode:
+        # Replicated state, batch sharded over 'data', compressed sync.
+        state_spec = jax.tree.map(
+            lambda _: jax.sharding.PartitionSpec(),
+            sharding.state_pspecs(cfg, pol, tcfg),
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+        )
+    else:
+        state_spec = sharding.state_pspecs(cfg, pol, tcfg)
     state_sh = sharding.to_named(state_spec, mesh)
 
     data = LMTokenStream(cfg.vocab_size, args.seq, seed=17)
     shutdown = GracefulShutdown()
     watchdog = StragglerWatchdog()
 
-    with mesh, dist_ctx.use(mesh, pol):
+    def make_batch(step: int) -> dict:
+        full = data.batch(step, args.batch)
+        batch = {
+            "tokens": jnp.asarray(full[:, :-1]),
+            "labels": jnp.asarray(full[:, 1:]),
+        }
+        if cfg.input_mode == "embeds":
+            emb = np.random.RandomState(step).normal(
+                0, 1, (args.batch, args.seq, cfg.d_model)
+            )
+            batch = {
+                "embeds": jnp.asarray(emb, cfg.dtype),
+                "labels": jnp.asarray(full[:, 1:] % cfg.vocab_size),
+            }
+        elif cfg.input_mode == "mixed":
+            emb = np.random.RandomState(step).normal(
+                0, 1, (args.batch, cfg.visual_prefix, cfg.d_model)
+            )
+            batch["prefix_embeds"] = jnp.asarray(emb, cfg.dtype)
+            pos = jnp.arange(args.seq, dtype=jnp.int32)[None].repeat(args.batch, 0)
+            batch["positions"] = jnp.stack([pos, pos, pos], 0)
+        return batch
+
+    # In DP mode the state is replicated and the step runs under shard_map,
+    # where hint()'s with_sharding_constraint must not fire (the mesh axes are
+    # manual there) — so the ambient dist context stays uninstalled.
+    amb = contextlib.nullcontext() if dp_mode else dist_ctx.use(mesh, pol)
+    with mesh, amb:
         init = jax.jit(
             functools.partial(lm_trainer.init_state, cfg=cfg, tcfg=tcfg),
             out_shardings=state_sh,
         )
         state = init(jax.random.PRNGKey(0))
-        step_fn = jax.jit(
-            lm_trainer.make_train_step(cfg, tcfg),
-            in_shardings=(state_sh, None),
-            out_shardings=(state_sh, None),
-            donate_argnums=(0,),
-        )
+        if dp_mode:
+            if cfg.input_mode == "mixed":
+                ap.error("--dp-compress-bits does not support mixed-input "
+                         "(M-RoPE positions) archs")
+            step_fn = data_parallel.make_lm_dp_step(cfg, tcfg, mesh)
+            # Probe the wire bytes with the shapes of a real loop batch (one
+            # throwaway host batch at startup — negligible next to init()).
+            probe = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                make_batch(0),
+            )
+            grad_shapes = data_parallel.lm_grad_shapes(cfg, tcfg, state, probe)
+            report = data_parallel.wire_report(grad_shapes, tcfg.dp_sync_bits)
+            print(f"[train] dp sync_bits={tcfg.dp_sync_bits} "
+                  f"wire_bytes/step={report['wire_bytes_per_step']} "
+                  f"({report['compression_ratio']:.2f}x vs fp32)")
+        else:
+            step_fn = jax.jit(
+                lm_trainer.make_train_step(cfg, tcfg),
+                in_shardings=(state_sh, None),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
 
         start_step = 0
         ckpt = None
@@ -134,27 +206,7 @@ def main(argv=None) -> int:
 
         losses = []
         for step in range(start_step, args.steps):
-            inputs, labels = data.batch(step, args.batch)[:, :-1], None
-            full = data.batch(step, args.batch)
-            batch = {
-                "tokens": jnp.asarray(full[:, :-1]),
-                "labels": jnp.asarray(full[:, 1:]),
-            }
-            if cfg.input_mode == "embeds":
-                emb = np.random.RandomState(step).normal(
-                    0, 1, (args.batch, args.seq, cfg.d_model)
-                )
-                batch = {
-                    "embeds": jnp.asarray(emb, cfg.dtype),
-                    "labels": jnp.asarray(full[:, 1:] % cfg.vocab_size),
-                }
-            elif cfg.input_mode == "mixed":
-                emb = np.random.RandomState(step).normal(
-                    0, 1, (args.batch, cfg.visual_prefix, cfg.d_model)
-                )
-                batch["prefix_embeds"] = jnp.asarray(emb, cfg.dtype)
-                pos = jnp.arange(args.seq, dtype=jnp.int32)[None].repeat(args.batch, 0)
-                batch["positions"] = jnp.stack([pos, pos, pos], 0)
+            batch = make_batch(step)
             t0 = time.time()
             state, metrics = step_fn(state, batch)
             loss = float(metrics["loss"])  # blocks; also the step barrier

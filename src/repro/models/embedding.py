@@ -17,7 +17,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import alpt, hashing, lpt, pruning, qat, quant
+from repro.core import alpt, hashing, lpt, pruning, qat
 
 
 @dataclasses.dataclass(frozen=True)

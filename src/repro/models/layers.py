@@ -8,10 +8,8 @@ keeps the §Roofline compute term honest.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -178,7 +176,6 @@ def _flash_bwd_impl(q, k, v, o, lse, do, causal, window, q_offset, q_block,
     b, t, kh, g, d = q.shape  # t is the q_block-padded length
     s_pad = k.shape[1]
     s = s_true
-    n_q = -(-t // q_block)
     n_k = -(-s // k_block)  # padded-tail KV blocks are fully masked; skip them
     # delta = rowsum(do * o)  [B, KH, G, T]
     delta = jnp.einsum("bthgd,bthgd->bhgt", do.astype(jnp.float32),

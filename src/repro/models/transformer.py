@@ -21,7 +21,6 @@ extra HBM traffic.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax

@@ -13,7 +13,6 @@ decay boundaries, decoupled weight decay on embeddings, Delta lr 2e-5.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -23,7 +22,7 @@ import numpy as np
 from repro import metrics
 from repro.core import alpt as alpt_mod
 from repro.core import lpt as lpt_mod
-from repro.core import pruning
+from repro.core import pruning, quant
 from repro.models import ctr as ctr_models
 from repro.models import embedding as emb_mod
 from repro.optim import adam_init, adam_update
@@ -39,6 +38,9 @@ class TrainerConfig:
     emb_weight_decay: float = 5e-8
     lr_boundaries: tuple[int, ...] = ()  # steps at which lr /= 10
     seed: int = 0
+    # Gradient-sync bit width for data-parallel training
+    # (repro.training.data_parallel): 32 = exact fp32, 2..8 = SR-compressed.
+    dp_sync_bits: int = 32
 
 
 class TrainState(NamedTuple):
@@ -153,22 +155,7 @@ class CTRTrainer:
                 )
 
             if method == "prune":
-                update_mask = jax.jit(
-                    lambda s: pruning.update_mask(s, spec.prune)
-                )
-                inner = step_fn
-
-                def step_with_mask(state, ids, labels):
-                    state, m = inner(state, ids, labels)
-                    step = int(state.step)
-                    emb = state.emb_state._replace(
-                        step=jnp.asarray(step, jnp.int32)
-                    )
-                    if step % spec.prune.update_every == 0:
-                        emb = update_mask(emb)
-                    return state._replace(emb_state=emb), m
-
-                return step_with_mask
+                return self.wrap_prune_mask_update(step_fn)
             return step_fn
 
         if method == "lpt":
@@ -243,6 +230,191 @@ class CTRTrainer:
             return step_fn
 
         raise ValueError(f"unknown method {method!r}")
+
+    # ------------------------------------------- grad/apply split (DP hooks)
+    #
+    # The fused step above is the paper-faithful single-device path (sparse
+    # row updates for lpt/alpt).  The data-parallel wrapper
+    # (repro.training.data_parallel) needs to all-reduce gradients *between*
+    # backward and update, so the same math is also exposed as a
+    # (grad_fn, apply_fn) pair.  Integer-table methods switch to the dense
+    # formulation there (dense table gradient + lpt.dense_apply /
+    # alpt dense pieces): it is the only shape that is rank-invariant — every
+    # replica sees the same [n, d] gradient tensor — and the dense/sparse
+    # update parity is regression-tested in tests/test_lpt_alpt.py.
+
+    def build_grad_fn(self):
+        """Per-(micro)batch backward: (state, ids, labels, kd) -> (loss, grads).
+
+        ``grads`` is ``(g_emb, g_dense)`` where ``g_emb`` is the trainable
+        embedding-params pytree for float methods or the dense [n, d]
+        de-quantized-table gradient for lpt/alpt.
+        """
+        spec = self.spec
+
+        if spec.method in emb_mod.FLOAT_METHODS:
+
+            def grad_fn(state: TrainState, ids, labels, kd):
+                emb_params = emb_mod.trainable_params(state.emb_state, spec)
+
+                def loss_fn(emb_params, dense_params):
+                    emb_state = emb_mod.with_params(state.emb_state, emb_params, spec)
+                    logits = self._logits_fn(
+                        emb_state, dense_params, ids, dropout_key=kd
+                    )
+                    return ctr_models.bce_loss(logits, labels)
+
+                return jax.value_and_grad(loss_fn, (0, 1))(
+                    emb_params, state.dense_params
+                )
+
+            return grad_fn
+
+        def grad_fn(state: TrainState, ids, labels, kd):
+            table_fp = lpt_mod.dense_table(state.emb_state)
+
+            def loss_fn(table_fp, dense_params):
+                rows = jnp.take(table_fp, ids, axis=0)
+                logits = self._logits_from_rows(rows, dense_params, kd)
+                return ctr_models.bce_loss(logits, labels)
+
+            return jax.value_and_grad(loss_fn, (0, 1))(
+                table_fp, state.dense_params
+            )
+
+        return grad_fn
+
+    def build_apply_fn(self):
+        """Post-sync update: consumes the (synced) gradients from
+        :meth:`build_grad_fn` and returns ``(new_state, metrics)``.
+
+        Signature: ``apply_fn(state, loss, grads, *, lr, rng, kn,
+        delta_grad=None, batch_rows=None)``.  ``kn`` keys the SR write-back
+        noise (int tables); ``delta_grad(w_new, step_vec, dense_params,
+        gscale) -> g_step`` supplies the (synced) ALPT Delta gradient;
+        ``batch_rows`` is the paper's b for the Delta gradient scale — the
+        GLOBAL batch's table-row lookups, so the scale is independent of how
+        the batch is sharded over replicas.
+        """
+        spec = self.spec
+        method = spec.method
+
+        if method in emb_mod.FLOAT_METHODS:
+
+            def apply_fn(state, loss, grads, *, lr, rng, kn=None,
+                         delta_grad=None, batch_rows=None):
+                g_emb, g_dense = grads
+                new_dense, dense_opt = adam_update(
+                    g_dense, state.dense_opt, state.dense_params, lr
+                )
+                emb_params = emb_mod.trainable_params(state.emb_state, spec)
+                new_emb_params, emb_opt = adam_update(
+                    g_emb, state.emb_opt, emb_params, lr,
+                    weight_decay=self.cfg.emb_weight_decay,
+                )
+                emb_state = emb_mod.with_params(
+                    state.emb_state, new_emb_params, spec
+                )
+                return (
+                    TrainState(emb_state, new_dense, dense_opt, emb_opt,
+                               state.step + 1, rng),
+                    {"loss": loss, "lr": lr},
+                )
+
+            return apply_fn
+
+        if method == "lpt":
+
+            def apply_fn(state, loss, grads, *, lr, rng, kn,
+                         delta_grad=None, batch_rows=None):
+                g_table, g_dense = grads
+                new_dense, dense_opt = adam_update(
+                    g_dense, state.dense_opt, state.dense_params, lr
+                )
+                emb_state = lpt_mod.dense_apply(
+                    state.emb_state, g_table,
+                    lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
+                    noise_key=kn, optimizer=spec.row_optimizer,
+                    weight_decay=self.cfg.emb_weight_decay,
+                )
+                return (
+                    TrainState(emb_state, new_dense, dense_opt, None,
+                               state.step + 1, rng),
+                    {"loss": loss, "lr": lr},
+                )
+
+            return apply_fn
+
+        if method == "alpt":
+
+            def apply_fn(state, loss, grads, *, lr, rng, kn,
+                         delta_grad, batch_rows):
+                g_table, g_dense = grads
+                new_dense, dense_opt = adam_update(
+                    g_dense, state.dense_opt, state.dense_params, lr
+                )
+                table = state.emb_state
+                acfg = spec.alpt._replace(
+                    weight_decay=self.cfg.emb_weight_decay,
+                    optimizer=spec.row_optimizer,
+                )
+                upd = alpt_mod.dense_weight_update(table, g_table, cfg=acfg, lr=lr)
+                gscale = alpt_mod.grad_scale_factor(
+                    acfg, batch_rows=int(batch_rows), dim=table.dim
+                )
+                # Algorithm 1 line 4 at the UPDATED dense params.
+                g_step = delta_grad(upd.w_new, table.step, new_dense, gscale)
+                new_table = alpt_mod.dense_finish(
+                    table, upd, g_step, cfg=acfg, noise_key=kn
+                )
+                aux = {
+                    "step_grad_norm": jnp.linalg.norm(g_step),
+                    "mean_step": jnp.mean(new_table.step),
+                }
+                return (
+                    TrainState(new_table, new_dense, dense_opt, None,
+                               state.step + 1, rng),
+                    {"loss": loss, "lr": lr, **aux},
+                )
+
+            return apply_fn
+
+        raise ValueError(f"unknown method {method!r}")
+
+    def build_delta_grad_fn(self):
+        """Per-(micro)batch ALPT Delta gradient (dense formulation):
+        ``(w_new, step_vec, dense_params, ids, labels, kd, gscale) -> g_step``.
+        """
+        spec = self.spec
+
+        def delta_fn(w_new, step_vec, dense_params, ids, labels, kd, gscale):
+            def loss_wrt_step(step_vec):
+                table_q = quant.fake_quant_lsq(
+                    jax.lax.stop_gradient(w_new), step_vec, spec.bits, gscale
+                )
+                rows = jnp.take(table_q, ids, axis=0)
+                logits = self._logits_from_rows(rows, dense_params, kd)
+                return ctr_models.bce_loss(logits, labels)
+
+            return jax.grad(loss_wrt_step)(step_vec)
+
+        return delta_fn
+
+    def wrap_prune_mask_update(self, step_fn):
+        """Host-side DeepLight mask refresh around a jitted step function —
+        the same wrapper the fused path installs for method='prune'."""
+        spec = self.spec
+        update_mask = jax.jit(lambda s: pruning.update_mask(s, spec.prune))
+
+        def step_with_mask(state, ids, labels):
+            state, m = step_fn(state, ids, labels)
+            step = int(state.step)
+            emb = state.emb_state._replace(step=jnp.asarray(step, jnp.int32))
+            if step % spec.prune.update_every == 0:
+                emb = update_mask(emb)
+            return state._replace(emb_state=emb), m
+
+        return step_with_mask
 
     # ------------------------------------------------------------ api
 

@@ -1,0 +1,414 @@
+"""Data-parallel training with compressed gradient synchronization.
+
+This is the layer that finally makes ``repro.dist.collectives`` carry a real
+training loop: a ``jax.shard_map`` wrapper around either trainer's step
+(CTR and LM) that
+
+  * replicates the train state over the mesh's ``data`` axis,
+  * shards the batch's leading dimension across it,
+  * all-reduces the dense + embedding gradients between backward and update,
+    through a configurable ``sync_bits`` knob:
+
+      - ``sync_bits=32`` — exact fp32 mean (``collectives.exact_pmean_local``,
+        a rank-ordered all-gather + one deterministic reduction);
+      - ``sync_bits=2..8`` — the paper's SR quantizer applied to
+        communication (``collectives.compressed_pmean_local``): codes against
+        a shared pmax step size, int32 psum, one dequantize.  Stochastic
+        rounding keeps the reduction unbiased, so compression noise averages
+        out across replicas instead of accumulating (Li et al., ALPT).
+
+Exactness contract (held by tests/test_data_parallel.py):
+
+  The n-device ``make_*_dp_step`` is **bitwise step-for-step equal** to the
+  single-device microbatched trainer ``make_*_microbatch_step`` with
+  ``n_shards == n`` — at *every* supported bit width.  At 32 bits both sides
+  reduce the identical rank-ordered stack with the identical ``jnp.mean``; at
+  2..8 bits the int32 code sum is associative and the SR noise is keyed by
+  ``fold_in(sync key, rank)`` on both sides.  (A full-batch single-device step
+  is the n=1 special case; against n>1 it agrees only up to float summation
+  order, which is exactly why the microbatched reference exists.)
+
+SR noise keying: one base key per wrapper (``sync_seed``), folded with the
+step counter every step, then with the gradient-leaf index, then (inside the
+collective) with the replica rank — so no two (step, tensor, rank) triples
+share noise.
+
+Embedding methods: float-table methods sync the trainable-params gradient
+pytree; lpt/alpt switch to the *dense* table formulation (dense [n, d] table
+gradient + ``lpt.dense_apply`` / the ALPT dense pieces, with the Delta
+gradient all-reduced too) because it is the only rank-invariant shape — the
+dense/sparse update parity is regression-tested in tests/test_lpt_alpt.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import collectives
+from repro.training import lm_trainer
+
+# Key salt separating the ALPT Delta-gradient sync from the per-leaf main
+# gradient syncs (leaf indices are small integers).
+_DELTA_SALT = 0x0D317A
+
+# 32 = exact fp32; any width quant.code_bounds supports is a valid code sync.
+_VALID_BITS = (32,) + tuple(range(2, 9))
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    """Data-parallel sync policy.
+
+    ``sync_bits``: 32 = exact fp32 mean; 2..8 = SR-compressed codes.
+    ``axis``: mesh axis name the batch is sharded over.
+    ``sync_seed``: base PRNG seed for the SR compression noise.
+    """
+
+    sync_bits: int = 32
+    axis: str = "data"
+    sync_seed: int = 0
+
+    def __post_init__(self):
+        if self.sync_bits not in _VALID_BITS:
+            raise ValueError(
+                f"sync_bits must be one of {_VALID_BITS}, got {self.sync_bits}"
+            )
+
+
+def _base_key(dp: DPConfig) -> jax.Array:
+    return jax.random.PRNGKey(dp.sync_seed)
+
+
+# --------------------------------------------------------------------- syncs
+
+
+def _sync_leaf_mesh(leaf, key, dp: DPConfig):
+    if dp.sync_bits == 32:
+        return collectives.exact_pmean_local(leaf, dp.axis)
+    return collectives.compressed_pmean_local(leaf, dp.axis, key, bits=dp.sync_bits)
+
+
+def _sync_tree_mesh(grads, key, dp: DPConfig):
+    """All-reduce-mean every gradient leaf over ``dp.axis`` (inside shard_map)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    out = [
+        _sync_leaf_mesh(leaf, jax.random.fold_in(key, i), dp)
+        for i, leaf in enumerate(leaves)
+    ]
+    return treedef.unflatten(out)
+
+
+def _combine_leaf_stacked(stack, key, dp: DPConfig):
+    if dp.sync_bits == 32:
+        return collectives.exact_pmean_stacked(stack)
+    return collectives.compressed_pmean_stacked(stack, key, bits=dp.sync_bits)
+
+
+def _combine_tree_stacked(grad_stacks, key, dp: DPConfig):
+    """Single-device twin of :func:`_sync_tree_mesh` over [n_shards, ...] stacks."""
+    leaves, treedef = jax.tree.flatten(grad_stacks)
+    out = [
+        _combine_leaf_stacked(leaf, jax.random.fold_in(key, i), dp)
+        for i, leaf in enumerate(leaves)
+    ]
+    return treedef.unflatten(out)
+
+
+def _reshape_shards(leaf, n_shards: int):
+    if leaf.shape[0] % n_shards:
+        raise ValueError(
+            f"batch dim {leaf.shape[0]} not divisible by n_shards={n_shards}"
+        )
+    return leaf.reshape(n_shards, leaf.shape[0] // n_shards, *leaf.shape[1:])
+
+
+def _resolve(dp: DPConfig | None, sync_bits_default: int) -> DPConfig:
+    return DPConfig(sync_bits=sync_bits_default) if dp is None else dp
+
+
+# ------------------------------------------------------------- CTR trainers
+
+
+def make_ctr_dp_step(trainer, mesh, dp: DPConfig | None = None, *, jit: bool = True):
+    """Data-parallel CTR train step on ``mesh``: ``step(state, ids, labels)``.
+
+    State is replicated over ``dp.axis``; ``ids``/``labels`` are globally
+    shaped and sharded on their leading (batch) dimension.  Returns the same
+    ``(state, metrics)`` as ``trainer.train_step``; the loss metric is the
+    exact mean over replicas regardless of ``sync_bits``.
+    """
+    dp = _resolve(dp, trainer.cfg.dp_sync_bits)
+    if dp.axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {dp.axis!r}: {mesh.axis_names}")
+    n_ranks = int(dict(mesh.shape)[dp.axis])
+    grad_fn = trainer.build_grad_fn()
+    apply_fn = trainer.build_apply_fn()
+    delta_fn = (
+        trainer.build_delta_grad_fn() if trainer.spec.method == "alpt" else None
+    )
+    base = _base_key(dp)
+
+    def inner(state, ids, labels):
+        lr = trainer._lr_at(state.step)
+        rng, kd, kn = jax.random.split(state.rng, 3)
+        loss, grads = grad_fn(state, ids, labels, kd)
+        key = jax.random.fold_in(base, state.step)
+        grads = _sync_tree_mesh(grads, key, dp)
+        loss = collectives.exact_pmean_local(loss, dp.axis)
+
+        delta_grad = None
+        if delta_fn is not None:
+            def delta_grad(w_new, step_vec, new_dense, gscale):
+                g_step = delta_fn(
+                    w_new, step_vec, new_dense, ids, labels, kd, gscale
+                )
+                return _sync_leaf_mesh(
+                    g_step, jax.random.fold_in(key, _DELTA_SALT), dp
+                )
+
+        return apply_fn(
+            state, loss, grads, lr=lr, rng=rng, kn=kn, delta_grad=delta_grad,
+            # Paper's b = the GLOBAL batch's row lookups (ids here is the
+            # local shard), so turning on DP does not rescale the ALPT
+            # Delta gradient (g = 1/sqrt(b*d*q)) with the device count.
+            batch_rows=ids.size * n_ranks,
+        )
+
+    step = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(), P(dp.axis), P(dp.axis)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    if jit:
+        # Donate the state so its replicated buffers are reused in place
+        # (same contract as the non-DP train driver's jit).
+        step = jax.jit(step, donate_argnums=(0,))
+    if trainer.spec.method == "prune":
+        step = trainer.wrap_prune_mask_update(step)
+    return step
+
+
+def make_ctr_microbatch_step(
+    trainer, n_shards: int, dp: DPConfig | None = None, *, jit: bool = True
+):
+    """Single-device microbatched (gradient-accumulation) CTR step.
+
+    Scans ``n_shards`` microbatches through the same per-shard backward and
+    combines the gradient stack with the same arithmetic as the mesh
+    collectives — bitwise-equal to :func:`make_ctr_dp_step` on an
+    ``n_shards``-device mesh, at every ``sync_bits``.
+    """
+    dp = _resolve(dp, trainer.cfg.dp_sync_bits)
+    grad_fn = trainer.build_grad_fn()
+    apply_fn = trainer.build_apply_fn()
+    delta_fn = (
+        trainer.build_delta_grad_fn() if trainer.spec.method == "alpt" else None
+    )
+    base = _base_key(dp)
+
+    def step(state, ids, labels):
+        lr = trainer._lr_at(state.step)
+        rng, kd, kn = jax.random.split(state.rng, 3)
+        ids_s = _reshape_shards(ids, n_shards)
+        labels_s = _reshape_shards(labels, n_shards)
+
+        def body(carry, shard):
+            loss, grads = grad_fn(state, shard[0], shard[1], kd)
+            return carry, (loss, grads)
+
+        _, (losses, grad_stacks) = jax.lax.scan(body, None, (ids_s, labels_s))
+        key = jax.random.fold_in(base, state.step)
+        grads = _combine_tree_stacked(grad_stacks, key, dp)
+        loss = collectives.exact_pmean_stacked(losses)
+
+        delta_grad = None
+        if delta_fn is not None:
+            def delta_grad(w_new, step_vec, new_dense, gscale):
+                def body2(carry, shard):
+                    g = delta_fn(
+                        w_new, step_vec, new_dense, shard[0], shard[1], kd,
+                        gscale,
+                    )
+                    return carry, g
+
+                _, g_stack = jax.lax.scan(body2, None, (ids_s, labels_s))
+                return _combine_leaf_stacked(
+                    g_stack, jax.random.fold_in(key, _DELTA_SALT), dp
+                )
+
+        return apply_fn(
+            state, loss, grads, lr=lr, rng=rng, kn=kn,
+            delta_grad=delta_grad, batch_rows=ids.size,
+        )
+
+    if jit:
+        step = jax.jit(step, donate_argnums=(0,))
+    if trainer.spec.method == "prune":
+        step = trainer.wrap_prune_mask_update(step)
+    return step
+
+
+# -------------------------------------------------------------- LM trainers
+
+
+def _check_lm_batch(batch):
+    if "positions" in batch:
+        raise NotImplementedError(
+            "DP wrapper shards the leading batch dim; [3, B, T] positions "
+            "(M-RoPE) are not supported here"
+        )
+
+
+def make_lm_dp_step(
+    cfg, tcfg, mesh, dp: DPConfig | None = None, *,
+    lr_schedule=None, jit: bool = True,
+):
+    """Data-parallel LM train step on ``mesh``: ``step(state, batch)``.
+
+    Every batch leaf must lead with the (global) batch dimension.  State is
+    replicated; loss/aux metrics are exact means over replicas.
+    """
+    dp = _resolve(dp, tcfg.dp_sync_bits)
+    if dp.axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {dp.axis!r}: {mesh.axis_names}")
+    n_ranks = int(dict(mesh.shape)[dp.axis])
+    base = _base_key(dp)
+
+    def grad_sync(grads, step):
+        return _sync_tree_mesh(grads, jax.random.fold_in(base, step), dp)
+
+    def step_grad_sync(g_step, step):
+        key = jax.random.fold_in(jax.random.fold_in(base, step), _DELTA_SALT)
+        return _sync_leaf_mesh(g_step, key, dp)
+
+    # The LM trainer's own step, with its DP hooks filled in: the all-reduces
+    # run between backward and update, and dp_size keeps the ALPT Delta
+    # gradient scale counting the GLOBAL batch's token lookups.
+    hooked = lm_trainer.make_train_step(
+        cfg, tcfg, lr_schedule,
+        grad_sync=grad_sync, step_grad_sync=step_grad_sync, dp_size=n_ranks,
+    )
+
+    def inner(state, batch):
+        new_state, metrics = hooked(state, batch)
+        # loss/aux_loss were computed per replica before the sync; replace
+        # them with exact cross-replica means so every metric is replicated
+        # (and matches the microbatched twin bitwise).
+        metrics = dict(metrics)
+        metrics["loss"] = collectives.exact_pmean_local(
+            metrics["loss"], dp.axis
+        )
+        metrics["aux_loss"] = jax.tree.map(
+            lambda a: collectives.exact_pmean_local(a, dp.axis),
+            metrics["aux_loss"],
+        )
+        return new_state, metrics
+
+    smapped = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(), P(dp.axis)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    def step(state, batch):
+        _check_lm_batch(batch)
+        return smapped(state, batch)
+
+    return jax.jit(step, donate_argnums=(0,)) if jit else step
+
+
+def make_lm_microbatch_step(
+    cfg, tcfg, n_shards: int, dp: DPConfig | None = None, *,
+    lr_schedule=None, jit: bool = True,
+):
+    """Single-device microbatched LM step — bitwise-equal to
+    :func:`make_lm_dp_step` on an ``n_shards``-device mesh."""
+    dp = _resolve(dp, tcfg.dp_sync_bits)
+    lr_at = lm_trainer.make_lr_fn(tcfg, lr_schedule)
+    grad_fn = lm_trainer.make_grad_fn(cfg, tcfg)
+    apply_fn = lm_trainer.make_apply_fn(cfg, tcfg)
+    delta_fn = (
+        lm_trainer.make_delta_grad_fn(cfg, tcfg)
+        if cfg.embedding_method == "alpt" else None
+    )
+    base = _base_key(dp)
+
+    def step(state, batch):
+        _check_lm_batch(batch)
+        lr = lr_at(state.step)
+        rng, kn = jax.random.split(state.rng)
+        batch_s = jax.tree.map(
+            functools.partial(_reshape_shards, n_shards=n_shards), batch
+        )
+
+        def body(carry, shard):
+            return carry, grad_fn(state, shard)
+
+        _, ((losses, auxes), grad_stacks) = jax.lax.scan(body, None, batch_s)
+        key = jax.random.fold_in(base, state.step)
+        grads = _combine_tree_stacked(grad_stacks, key, dp)
+        loss = collectives.exact_pmean_stacked(losses)
+        aux = jax.tree.map(collectives.exact_pmean_stacked, auxes)
+
+        delta_grad = None
+        if delta_fn is not None:
+            def delta_grad(w_new, step_vec, new_params, gscale):
+                def body2(carry, shard):
+                    return carry, delta_fn(
+                        w_new, step_vec, new_params, shard, gscale
+                    )
+
+                _, g_stack = jax.lax.scan(body2, None, batch_s)
+                return _combine_leaf_stacked(
+                    g_stack, jax.random.fold_in(key, _DELTA_SALT), dp
+                )
+
+        return apply_fn(
+            state, (loss, aux), grads, lr=lr, rng=rng, kn=kn,
+            delta_grad=delta_grad, batch_rows=int(batch["labels"].size),
+        )
+
+    return jax.jit(step, donate_argnums=(0,)) if jit else step
+
+
+# ------------------------------------------------------- wire-byte reporting
+
+
+def wire_report(grads, dp: DPConfig | int) -> dict:
+    """Per-step, per-replica gradient wire-byte accounting.
+
+    ``grads`` is a pytree of arrays or ``ShapeDtypeStruct``s (use
+    :func:`ctr_grad_shapes` / :func:`lm_grad_shapes`).  Returns wire bytes at
+    ``sync_bits``, the fp32 baseline bytes, and their ratio.
+    """
+    bits = dp.sync_bits if isinstance(dp, DPConfig) else int(dp)
+    return {
+        "sync_bits": bits,
+        "wire_bytes_per_step": collectives.sync_wire_bytes(grads, bits),
+        "fp32_wire_bytes_per_step": collectives.sync_wire_bytes(grads, 32),
+        "compression_ratio": collectives.sync_compression_ratio(grads, bits),
+    }
+
+
+def ctr_grad_shapes(trainer, state, batch_size: int, n_fields: int):
+    """ShapeDtypeStruct pytree of the gradients one CTR replica syncs."""
+    grad_fn = trainer.build_grad_fn()
+    ids = jax.ShapeDtypeStruct((batch_size, n_fields), jnp.int32)
+    labels = jax.ShapeDtypeStruct((batch_size,), jnp.float32)
+
+    def grads_of(state, ids, labels):
+        return grad_fn(state, ids, labels, jax.random.PRNGKey(0))[1]
+
+    return jax.eval_shape(grads_of, state, ids, labels)
+
+
+def lm_grad_shapes(cfg, tcfg, state, batch):
+    """ShapeDtypeStruct pytree of the gradients one LM replica syncs."""
+    grad_fn = lm_trainer.make_grad_fn(cfg, tcfg)
+    return jax.eval_shape(lambda s, b: grad_fn(s, b)[1], state, batch)

@@ -46,6 +46,9 @@ class LMTrainerConfig:
     # ALPT's Delta substep doubles the forward cost; 'every_k' amortizes it
     # (beyond-paper knob; k=1 == faithful Algorithm 1).
     alpt_every: int = 1
+    # Gradient-sync bit width for data-parallel training
+    # (repro.training.data_parallel): 32 = exact fp32, 2..8 = SR-compressed.
+    dp_sync_bits: int = 32
 
 
 def init_state(key: jax.Array, cfg: tfm.ModelConfig, tcfg: LMTrainerConfig):
@@ -76,24 +79,21 @@ def table_fp_of(state: LMTrainState, cfg: tfm.ModelConfig) -> jax.Array:
     return state.table
 
 
-def make_train_step(
-    cfg: tfm.ModelConfig,
-    tcfg: LMTrainerConfig,
-    lr_schedule: Callable[[jax.Array], jax.Array] | None = None,
-):
-    """Returns train_step(state, batch) -> (state, metrics). jit/pjit-ready."""
+def _alpt_config(cfg: tfm.ModelConfig, tcfg: LMTrainerConfig) -> alpt_mod.ALPTConfig:
+    return alpt_mod.ALPTConfig(
+        bits=cfg.embedding_bits, rounding="sr",
+        optimizer=tcfg.row_optimizer,
+        weight_decay=tcfg.emb_weight_decay,
+        step_lr=tcfg.alpt_step_lr,
+    )
 
-    def lr_at(step):
-        if lr_schedule is None:
-            return jnp.asarray(tcfg.lr, jnp.float32)
-        return lr_schedule(step)
 
-    def train_step(state: LMTrainState, batch: dict[str, jax.Array]):
-        lr = lr_at(state.step)
-        rng, kn = jax.random.split(state.rng)
+def make_grad_fn(cfg: tfm.ModelConfig, tcfg: LMTrainerConfig):
+    """Per-(micro)batch backward: (state, batch) -> ((loss, aux), grads) with
+    ``grads = (g_table, g_params)``.  The de-quantized table and its gradient
+    stay vocab-sharded via ``hint`` (identity off-mesh)."""
 
-        # Keep the de-quantized table and its gradient vocab-sharded through
-        # the whole update (hint is the identity off-mesh).
+    def grad_fn(state: LMTrainState, batch: dict[str, jax.Array]):
         table_fp = hint(table_fp_of(state, cfg), "embed_table")
 
         def loss_of(table_fp, params):
@@ -104,14 +104,45 @@ def make_train_step(
             loss_of, argnums=(0, 1), has_aux=True
         )(table_fp, state.params)
         g_table = hint(g_table, "embed_table")
+        return (loss, aux), (g_table, g_params)
 
+    return grad_fn
+
+
+def make_delta_grad_fn(cfg: tfm.ModelConfig, tcfg: LMTrainerConfig):
+    """Per-(micro)batch ALPT Delta gradient:
+    ``(w_new, step_vec, params, batch, gscale) -> g_step``."""
+    acfg = _alpt_config(cfg, tcfg)
+
+    def delta_fn(w_new, step_vec, params, batch, gscale):
+        return alpt_mod.dense_delta_grad(
+            w_new, step_vec,
+            lambda t: tfm.loss_fn(params, t, batch, cfg)[0],
+            cfg=acfg, gscale=gscale,
+        )
+
+    return delta_fn
+
+
+def make_apply_fn(cfg: tfm.ModelConfig, tcfg: LMTrainerConfig):
+    """Post-sync update: ``apply_fn(state, loss_aux, grads, *, lr, rng, kn,
+    delta_grad=None, batch_rows=None) -> (state, metrics)``.
+
+    ``delta_grad(w_new, step_vec, new_params, gscale) -> g_step`` supplies the
+    (possibly all-reduced) ALPT Delta gradient; ``batch_rows`` is the paper's
+    b — the GLOBAL batch's token count, sharding-independent."""
+    method = cfg.embedding_method
+
+    def apply_fn(state: LMTrainState, loss_aux, grads, *, lr, rng, kn,
+                 delta_grad=None, batch_rows=None):
+        loss, aux = loss_aux
+        g_table, g_params = grads
         g_params, gnorm = clip_by_global_norm(g_params, tcfg.grad_clip)
         new_params, new_opt = adam_update(
             g_params, state.opt, state.params, lr,
             weight_decay=tcfg.weight_decay,
         )
 
-        method = cfg.embedding_method
         if method == "fp":
             new_table, new_table_opt = adam_update(
                 g_table, state.table_opt, state.table, lr,
@@ -125,19 +156,16 @@ def make_train_step(
             )
             new_table_opt = None
         else:  # alpt
-            acfg = alpt_mod.ALPTConfig(
-                bits=cfg.embedding_bits, rounding="sr",
-                optimizer=tcfg.row_optimizer,
-                weight_decay=tcfg.emb_weight_decay,
-                step_lr=tcfg.alpt_step_lr,
+            acfg = _alpt_config(cfg, tcfg)
+            table = state.table
+            upd = alpt_mod.dense_weight_update(table, g_table, cfg=acfg, lr=lr)
+            gscale = alpt_mod.grad_scale_factor(
+                acfg, batch_rows=int(batch_rows), dim=table.dim
             )
-            new_table = alpt_mod.alpt_dense_step(
-                state.table, g_table,
-                # Algorithm 1 line 4: loss at the UPDATED dense params.
-                lambda t: tfm.loss_fn(new_params, t, batch, cfg)[0],
-                cfg=acfg, lr=lr, noise_key=kn,
-                # Paper's b: table-row lookups in this batch (= token count).
-                batch_rows=int(batch["labels"].size),
+            # Algorithm 1 line 4: loss at the UPDATED dense params.
+            g_step = delta_grad(upd.w_new, table.step, new_params, gscale)
+            new_table = alpt_mod.dense_finish(
+                table, upd, g_step, cfg=acfg, noise_key=kn
             )
             new_table_opt = None
 
@@ -153,6 +181,71 @@ def make_train_step(
                 table_opt=new_table_opt, step=state.step + 1, rng=rng,
             ),
             metrics,
+        )
+
+    return apply_fn
+
+
+def make_lr_fn(
+    tcfg: LMTrainerConfig,
+    lr_schedule: Callable[[jax.Array], jax.Array] | None = None,
+):
+    def lr_at(step):
+        if lr_schedule is None:
+            return jnp.asarray(tcfg.lr, jnp.float32)
+        return lr_schedule(step)
+
+    return lr_at
+
+
+def make_train_step(
+    cfg: tfm.ModelConfig,
+    tcfg: LMTrainerConfig,
+    lr_schedule: Callable[[jax.Array], jax.Array] | None = None,
+    *,
+    grad_sync: Callable | None = None,
+    step_grad_sync: Callable | None = None,
+    dp_size: int = 1,
+):
+    """Returns train_step(state, batch) -> (state, metrics). jit/pjit-ready.
+
+    ``grad_sync(grads, step) -> grads`` and ``step_grad_sync(g_step, step) ->
+    g_step`` are the data-parallel all-reduce hooks (identity when None) —
+    applied between backward and update, and to the ALPT Delta gradient,
+    respectively.  They run inside whatever jit/shard_map wraps this step
+    (repro.training.data_parallel.make_lm_dp_step assembles exactly this).
+    ``dp_size`` is the replica count when the step runs under shard_map, so
+    the paper's b (ALPT Delta gradient scale) counts the GLOBAL batch's
+    token lookups, not one replica's shard.
+    """
+    lr_at = make_lr_fn(tcfg, lr_schedule)
+    grad_fn = make_grad_fn(cfg, tcfg)
+    apply_fn = make_apply_fn(cfg, tcfg)
+    delta_fn = (
+        make_delta_grad_fn(cfg, tcfg)
+        if cfg.embedding_method == "alpt" else None
+    )
+
+    def train_step(state: LMTrainState, batch: dict[str, jax.Array]):
+        lr = lr_at(state.step)
+        rng, kn = jax.random.split(state.rng)
+        loss_aux, grads = grad_fn(state, batch)
+        if grad_sync is not None:
+            grads = grad_sync(grads, state.step)
+
+        delta_grad = None
+        if delta_fn is not None:
+            def delta_grad(w_new, step_vec, new_params, gscale):
+                g_step = delta_fn(w_new, step_vec, new_params, batch, gscale)
+                if step_grad_sync is not None:
+                    g_step = step_grad_sync(g_step, state.step)
+                return g_step
+
+        return apply_fn(
+            state, loss_aux, grads, lr=lr, rng=rng, kn=kn,
+            delta_grad=delta_grad,
+            # Paper's b: table-row lookups in the global batch (token count).
+            batch_rows=int(batch["labels"].size) * dp_size,
         )
 
     return train_step

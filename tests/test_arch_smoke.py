@@ -11,6 +11,9 @@ from repro.configs.common import concrete_batch
 from repro.models import transformer as tfm
 from repro.training import lm_trainer
 
+# ~3 CPU-minutes across 10 archs: runs in the slow/dist CI shard.
+pytestmark = pytest.mark.slow
+
 jax.config.update("jax_platform_name", "cpu")
 
 ALL_ARCHS = sorted(configs.ARCHS)

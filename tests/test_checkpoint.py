@@ -1,5 +1,4 @@
 """Checkpoint manager: atomic roundtrip, keep-k GC, resume, elastic reshard."""
-import json
 import subprocess
 import sys
 import textwrap
@@ -8,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from conftest import REPO_ROOT, SUBPROC_ENV, run_prog
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
 from repro.checkpoint.manager import latest_step
@@ -93,15 +94,10 @@ def test_elastic_reshard_across_device_counts(tmp_path):
         print("RESHARD_OK", int(np.asarray(restored["codes"]).sum()))
         """
     )
-    out = subprocess.run(
-        [sys.executable, "-c", prog], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, cwd="/root/repo",
-        timeout=300,
-    )
-    assert out.returncode == 0, out.stderr[-2000:]
-    assert "RESHARD_OK" in out.stdout
+    stdout = run_prog(prog, timeout=300)
+    assert "RESHARD_OK" in stdout
     expect = int(np.asarray(make_tree()["codes"], dtype=np.int64).sum())
-    got = int(out.stdout.strip().split()[-1])
+    got = int(stdout.strip().split()[-1])
     assert got == expect  # content survives the reshard bit-exactly
 
 
@@ -112,15 +108,14 @@ def test_train_driver_resume(tmp_path):
         "--smoke", "--batch", "2", "--seq", "32", "--ckpt-every", "2",
         "--ckpt-dir", str(tmp_path), "--log-every", "1",
     ]
-    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
     out1 = subprocess.run(
-        cmd + ["--steps", "4"], capture_output=True, text=True, env=env,
-        cwd="/root/repo", timeout=560,
+        cmd + ["--steps", "4"], capture_output=True, text=True,
+        env=dict(SUBPROC_ENV), cwd=REPO_ROOT, timeout=560,
     )
     assert out1.returncode == 0, out1.stderr[-2000:]
     out2 = subprocess.run(
-        cmd + ["--steps", "8"], capture_output=True, text=True, env=env,
-        cwd="/root/repo", timeout=560,
+        cmd + ["--steps", "8"], capture_output=True, text=True,
+        env=dict(SUBPROC_ENV), cwd=REPO_ROOT, timeout=560,
     )
     assert out2.returncode == 0, out2.stderr[-2000:]
     assert "resumed from step 4" in out2.stdout

@@ -3,10 +3,7 @@
 Uses a scaled-down synthetic Criteo-like dataset; claims are the paper's
 *relative* orderings (DESIGN.md §7), at reduced scale for CI runtime.
 """
-import dataclasses
-
 import jax
-import numpy as np
 import pytest
 
 from repro.core.alpt import ALPTConfig

@@ -1,0 +1,274 @@
+"""Data-parallel trainer tests (repro.training.data_parallel).
+
+The exactness contract: the n-device shard_map DP step is bitwise
+step-for-step equal to the single-device microbatched trainer with
+``n_shards == n`` — at sync_bits 32 (deterministic fp32 mean) *and* at 8/4
+(SR-compressed int codes; integer psums are associative, SR noise is keyed by
+rank).  The compressed path must additionally track the exact path's training
+trajectory within the paper's error bound.
+
+Mesh tests run in subprocesses with 8 fake CPU devices (marker: dist); the
+wire-byte accounting tests are plain fast tests.
+"""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_prog
+
+
+# ---------------------------------------------------------------- fast tests
+
+
+def test_wire_bytes_accounting():
+    from repro.dist import collectives
+
+    grads = {
+        "table": jax.ShapeDtypeStruct((1000, 16), jnp.float32),
+        "w": jax.ShapeDtypeStruct((64, 32), jnp.float32),
+    }
+    n_elem = 1000 * 16 + 64 * 32
+    assert collectives.sync_wire_bytes(grads, 32) == n_elem * 4
+    # 8-bit codes: 1 byte/element + one fp32 step scalar per tensor.
+    assert collectives.sync_wire_bytes(grads, 8) == n_elem + 8
+    # 4-bit codes pack two per byte.
+    assert collectives.sync_wire_bytes(grads, 4) == n_elem // 2 + 8
+    assert collectives.sync_compression_ratio(grads, 8) >= 3.5
+    assert collectives.sync_compression_ratio(grads, 4) >= 7.0
+    with pytest.raises(ValueError):
+        collectives.sync_wire_bytes(grads, 16)
+
+
+def test_dp_config_validates_bits():
+    from repro.training.data_parallel import DPConfig
+
+    for bits in (32, 8, 4, 2):
+        assert DPConfig(sync_bits=bits).sync_bits == bits
+    with pytest.raises(ValueError):
+        DPConfig(sync_bits=16)
+
+
+def test_compressed_pmean_stacked_is_psum_over_n():
+    from repro.dist import collectives
+
+    stack = jax.random.normal(jax.random.PRNGKey(0), (4, 32, 8))
+    key = jax.random.PRNGKey(1)
+    total = collectives.compressed_psum_stacked(stack, key, bits=8)
+    mean = collectives.compressed_pmean_stacked(stack, key, bits=8)
+    np.testing.assert_array_equal(np.asarray(mean), np.asarray(total) / 4.0)
+    # Unbiased quantizer: the compressed mean tracks the exact mean within
+    # the int8 bound (n * step with shared step = absmax / 127).
+    exact = np.asarray(stack).mean(0)
+    err = np.abs(np.asarray(mean) - exact).max()
+    bound = np.abs(np.asarray(stack)).max() / 127.0 * 1.5
+    assert err < bound
+
+
+# ------------------------------------------------------- mesh (dist) tests
+
+
+@pytest.mark.dist
+def test_dp_ctr_bitwise_matches_microbatched_trainer():
+    """8-device DP CTR step == single-device microbatched step, bit for bit,
+    for every embedding-method family and at exact AND compressed widths."""
+    prog = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.alpt import ALPTConfig
+        from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
+        from repro.models import embedding as emb_mod
+        from repro.models.ctr import DCNConfig
+        from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+        from repro.training import data_parallel as dpm
+
+        data_cfg = CTRDatasetConfig(
+            name="mini", n_fields=6, cardinalities=(17, 29, 11, 41, 13, 23),
+            teacher_rank=4, seed=3,
+        )
+        data = CTRSynthetic(data_cfg)
+        mesh = jax.make_mesh((8,), ("data",))
+
+        def trainer(method):
+            spec = emb_mod.EmbeddingSpec(
+                method=method, n=data_cfg.n_features, d=8, bits=8,
+                init_scale=0.05, alpt=ALPTConfig(bits=8, step_lr=2e-4),
+            )
+            dcn = DCNConfig(n_fields=data_cfg.n_fields, emb_dim=8,
+                            cross_depth=2, mlp_widths=(32, 16))
+            return CTRTrainer(TrainerConfig(spec=spec, model="dcn", dcn=dcn,
+                                            lr=1e-3))
+
+        for method, bits in [("fp", 32), ("fp", 8), ("lpt", 32), ("lpt", 8),
+                             ("alpt", 32), ("alpt", 8), ("alpt", 4)]:
+            tr = trainer(method)
+            dp = dpm.DPConfig(sync_bits=bits)
+            mesh_step = dpm.make_ctr_dp_step(tr, mesh, dp)
+            micro_step = dpm.make_ctr_microbatch_step(tr, 8, dp)
+            s_m, s_u = tr.init_state(), tr.init_state()
+            for i in range(3):
+                ids, labels = data.batch("train", i, 64)
+                s_m, m_m = mesh_step(s_m, jnp.asarray(ids), jnp.asarray(labels))
+                s_u, m_u = micro_step(s_u, jnp.asarray(ids), jnp.asarray(labels))
+                for a, b in zip(jax.tree.leaves(s_m), jax.tree.leaves(s_u)):
+                    assert np.array_equal(np.asarray(jax.device_get(a)),
+                                          np.asarray(jax.device_get(b))), (
+                        method, bits, i, a.shape, a.dtype)
+                assert float(m_m["loss"]) == float(m_u["loss"]), (method, bits)
+            print(method, bits, "OK", float(m_m["loss"]))
+        print("CTR_DP_BITWISE_OK")
+        """
+    )
+    assert "CTR_DP_BITWISE_OK" in run_prog(prog)
+
+
+@pytest.mark.dist
+def test_dp_lm_bitwise_matches_microbatched_trainer():
+    """Same contract for the LM trainer (lpt + alpt vocab tables)."""
+    prog = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import jax, numpy as np
+        from repro import configs
+        from repro.configs.common import concrete_batch
+        from repro.training import lm_trainer
+        from repro.training import data_parallel as dpm
+
+        mesh = jax.make_mesh((8,), ("data",))
+        for method, bits in [("lpt", 32), ("alpt", 8)]:
+            cfg = configs.smoke_config("smollm-135m")
+            cfg = dataclasses.replace(cfg, embedding_method=method)
+            tcfg = lm_trainer.LMTrainerConfig(lr=1e-3)
+            batch = concrete_batch(cfg, batch=16, seq=32)
+            dp = dpm.DPConfig(sync_bits=bits)
+            mesh_step = dpm.make_lm_dp_step(cfg, tcfg, mesh, dp)
+            micro_step = dpm.make_lm_microbatch_step(cfg, tcfg, 8, dp)
+            s_m = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+            s_u = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+            for i in range(2):
+                s_m, m_m = mesh_step(s_m, batch)
+                s_u, m_u = micro_step(s_u, batch)
+                for a, b in zip(jax.tree.leaves(s_m), jax.tree.leaves(s_u)):
+                    assert np.array_equal(np.asarray(jax.device_get(a)),
+                                          np.asarray(jax.device_get(b))), (
+                        method, bits, i, a.shape, a.dtype)
+            assert float(m_m["loss"]) == float(m_u["loss"])
+            print(method, bits, "OK", float(m_m["loss"]))
+        print("LM_DP_BITWISE_OK")
+        """
+    )
+    assert "LM_DP_BITWISE_OK" in run_prog(prog)
+
+
+@pytest.mark.dist
+def test_dp_compressed_tracks_exact_training():
+    """Compressed (8-bit) gradient sync must reproduce the exact-sync
+    training trajectory within the paper's error bound: close per-step
+    losses, matching final eval metrics, and >= 3.5x wire-byte reduction."""
+    prog = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.alpt import ALPTConfig
+        from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
+        from repro.models import embedding as emb_mod
+        from repro.models.ctr import DCNConfig
+        from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+        from repro.training import data_parallel as dpm
+
+        data_cfg = CTRDatasetConfig(
+            name="mini", n_fields=6, cardinalities=(37, 29, 53, 41, 19, 23),
+            teacher_rank=4, seed=5,
+        )
+        data = CTRSynthetic(data_cfg)
+        mesh = jax.make_mesh((8,), ("data",))
+
+        def run(bits):
+            spec = emb_mod.EmbeddingSpec(
+                method="lpt", n=data_cfg.n_features, d=8, bits=8,
+                init_scale=0.05, clip_value=0.1, alpt=ALPTConfig(bits=8),
+            )
+            dcn = DCNConfig(n_fields=data_cfg.n_fields, emb_dim=8,
+                            cross_depth=2, mlp_widths=(32, 16))
+            tr = CTRTrainer(TrainerConfig(spec=spec, model="dcn", dcn=dcn,
+                                          lr=3e-3, dp_sync_bits=bits))
+            step = dpm.make_ctr_dp_step(tr, mesh)
+            state = tr.init_state()
+            losses = []
+            for i in range(40):
+                ids, labels = data.batch("train", i, 128)
+                state, m = step(state, jnp.asarray(ids), jnp.asarray(labels))
+                losses.append(float(m["loss"]))
+            ev = tr.evaluate(jax.device_get(state),
+                             data.batches("test", 128, 8))
+            shapes = dpm.ctr_grad_shapes(tr, tr.init_state(), 16,
+                                         data_cfg.n_fields)
+            report = dpm.wire_report(shapes, bits)
+            return losses, ev, report
+
+        l32, ev32, _ = run(32)
+        l8, ev8, rep8 = run(8)
+        dloss = max(abs(a - b) for a, b in zip(l32, l8))
+        dauc = abs(ev32["auc"] - ev8["auc"])
+        print("max dloss", dloss, "dauc", dauc,
+              "ratio", rep8["compression_ratio"])
+        assert dloss < 0.05, dloss
+        assert dauc < 0.02, (ev32, ev8)
+        assert rep8["compression_ratio"] >= 3.5
+        print("DP_COMPRESSED_TRACKS_OK")
+        """
+    )
+    assert "DP_COMPRESSED_TRACKS_OK" in run_prog(prog)
+
+
+@pytest.mark.dist
+def test_compressed_pmean_local_close_to_exact():
+    """compressed_pmean_local over ranks holding DIFFERENT shards: equals
+    compressed psum / n exactly and the exact fp32 mean within the int8
+    bound; exact_pmean_local is bitwise the stacked mean."""
+    prog = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.collectives import (
+            compressed_pmean_local, compressed_psum_local, exact_pmean_local,
+            exact_pmean_stacked,
+        )
+
+        mesh = jax.make_mesh((8,), ("data",))
+        g = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        key = jax.random.PRNGKey(1)
+
+        def f(gs, key):
+            return (compressed_pmean_local(gs, "data", key, bits=8),
+                    compressed_psum_local(gs, "data", key, bits=8),
+                    exact_pmean_local(gs, "data"))
+
+        mean8, sum8, mean32 = jax.jit(jax.shard_map(
+            f, mesh=mesh, in_specs=(P("data"), P()),
+            out_specs=(P(), P(), P()), check_vma=False,
+        ))(g, key)
+        np.testing.assert_array_equal(np.asarray(mean8),
+                                      np.asarray(sum8) / 8.0)
+        exact = np.asarray(g).reshape(8, 8, 32).mean(0)
+        np.testing.assert_array_equal(
+            np.asarray(mean32),
+            np.asarray(exact_pmean_stacked(jnp.asarray(g).reshape(8, 8, 32))),
+        )
+        err = np.abs(np.asarray(mean8) - exact).max()
+        bound = 1.5 * np.abs(np.asarray(g)).max() / 127.0
+        print("err", err, "bound", bound)
+        assert err < bound
+        print("PMEAN_OK")
+        """
+    )
+    assert "PMEAN_OK" in run_prog(prog)

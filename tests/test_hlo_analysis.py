@@ -4,11 +4,11 @@ Runs in a subprocess with 8 fake devices so the main test process keeps its
 single-device view (per the dry-run isolation rule).
 """
 import json
-import subprocess
-import sys
 import textwrap
 
 import pytest
+
+from conftest import run_prog
 
 PROG = textwrap.dedent(
     """
@@ -46,13 +46,8 @@ PROG = textwrap.dedent(
 
 @pytest.fixture(scope="module")
 def stats():
-    out = subprocess.run(
-        [sys.executable, "-c", PROG], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, cwd="/root/repo",
-        timeout=300,
-    )
-    assert out.returncode == 0, out.stderr[-2000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
+    stdout = run_prog(PROG, timeout=300)
+    return json.loads(stdout.strip().splitlines()[-1])
 
 
 def test_flops_trip_count_multiplied(stats):

@@ -1,5 +1,4 @@
 """Unit + property tests for repro.core.quant (paper §2.1, Eqs. 1-4, 6-7)."""
-import hypothesis
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
