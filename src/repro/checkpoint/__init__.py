@@ -1,3 +1,15 @@
-from repro.checkpoint.manager import CheckpointManager, save_pytree, load_pytree
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    check_embedding_manifest,
+    embedding_manifest,
+    load_pytree,
+    save_pytree,
+)
 
-__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+__all__ = [
+    "CheckpointManager",
+    "check_embedding_manifest",
+    "embedding_manifest",
+    "load_pytree",
+    "save_pytree",
+]

@@ -37,6 +37,40 @@ def config_hash(cfg: Any) -> str:
     return hashlib.sha256(repr(cfg).encode()).hexdigest()[:16]
 
 
+def embedding_manifest(spec: Any) -> dict:
+    """Embedding-method checkpoint metadata for a manifest's ``extra_meta``:
+    the registered method's name, capability flags, and leaf schema — so a
+    restore can detect a method mismatch (e.g. int8 codes restored into an
+    fp template) before shapes happen to collide."""
+    from repro import methods
+
+    method = methods.get(spec.method)
+    return {
+        "embedding_method": spec.method,
+        "embedding_capabilities": method.capabilities(),
+        "embedding_schema": method.checkpoint_schema(spec),
+    }
+
+
+def check_embedding_manifest(manifest: dict, spec: Any) -> list[str]:
+    """Mismatches between a loaded manifest and the expected ``spec``
+    (empty list == compatible, or no embedding metadata recorded)."""
+    saved = manifest.get("embedding_method")
+    if saved is None:
+        return []
+    problems = []
+    if saved != spec.method:
+        problems.append(
+            f"checkpoint embedding method {saved!r} != configured {spec.method!r}"
+        )
+    from repro import methods
+
+    schema = methods.get(spec.method).checkpoint_schema(spec)
+    if manifest.get("embedding_schema", schema) != schema:
+        problems.append("embedding table schema differs (shape/dtype/leaves)")
+    return problems
+
+
 def save_pytree(tree, directory: str | os.PathLike, *, step: int,
                 extra_meta: dict | None = None) -> pathlib.Path:
     """Atomic save: write to a temp dir, fsync, rename, then commit-marker."""
@@ -94,8 +128,9 @@ def load_pytree(template, directory: str | os.PathLike, *, step: int | None = No
         )
     arrays = [np.load(d / e["file"]) for e in manifest["leaves"]]
     for arr, t in zip(arrays, flat_t):
-        if tuple(arr.shape) != tuple(t.shape):
-            raise ValueError(f"shape mismatch {arr.shape} vs {t.shape}")
+        # np.shape handles scalar pytree leaves (e.g. a python-int modulus).
+        if tuple(arr.shape) != tuple(getattr(t, "shape", np.shape(t))):
+            raise ValueError(f"shape mismatch {arr.shape} vs {np.shape(t)}")
     if shardings is not None:
         flat_s = treedef.flatten_up_to(shardings)
         arrays = [jax.device_put(a, s) for a, s in zip(arrays, flat_s)]
@@ -134,6 +169,11 @@ class CheckpointManager:
     def restore(self, template, shardings=None, step: int | None = None):
         return load_pytree(template, self.directory, step=step,
                            shardings=shardings)
+
+    def read_manifest(self, step: int) -> dict:
+        """The manifest alone (no array loads) — for pre-restore checks."""
+        path = self.directory / f"step_{step:09d}" / "manifest.json"
+        return json.loads(path.read_text())
 
     def latest_step(self) -> int | None:
         return latest_step(self.directory)

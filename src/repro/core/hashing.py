@@ -19,11 +19,9 @@ class QRTable(NamedTuple):
     r: int
 
 
-def init_qr(
-    key: jax.Array, n: int, d: int, *, compression: float = 2.0,
-    init_scale: float = 1e-2,
-) -> QRTable:
-    """Pick r so that (r + n/r) ~= n / compression (quadratic formula)."""
+def qr_rows(n: int, compression: float = 2.0) -> tuple[int, int]:
+    """(remainder_rows r, quotient_rows ceil(n/r)) such that
+    (r + n/r) ~= n / compression (quadratic formula)."""
     target = n / compression
     # r + n/r = target  ->  r^2 - target*r + n = 0
     disc = target * target - 4.0 * n
@@ -32,7 +30,15 @@ def init_qr(
     else:
         r = int((target - disc**0.5) / 2.0)
         r = max(r, 2)
-    q_rows = -(-n // r)  # ceil
+    return r, -(-n // r)  # ceil
+
+
+def init_qr(
+    key: jax.Array, n: int, d: int, *, compression: float = 2.0,
+    init_scale: float = 1e-2,
+) -> QRTable:
+    """Pick r so that (r + n/r) ~= n / compression (quadratic formula)."""
+    r, q_rows = qr_rows(n, compression)
     k1, k2 = jax.random.split(key)
     return QRTable(
         remainder=jax.random.normal(k1, (r, d), jnp.float32) * init_scale,

@@ -57,18 +57,23 @@ def init_table(
     bits: int,
     *,
     init_scale: float = 1e-2,
+    mean: float = 0.0,
     step_size: float | None = None,
     clip_value: float | None = None,
     optimizer: str = "adam",
 ) -> LPTTable:
-    """Initialize weights ~ N(0, init_scale^2), choose Delta, quantize.
+    """Initialize weights ~ N(mean, init_scale^2), choose Delta, quantize.
 
     Vanilla LPT (Xu et al. 2021) fixes Delta from a tuned clip value:
     Delta = clip / 2^{m-1}.  If neither ``step_size`` nor ``clip_value`` is
     given, Delta is set per-row LSQ-style from the init (the ALPT default).
+    ``mean`` shifts the init (composed tables start multiplicative factors
+    near 1); the paper's tables use the zero-mean default.
     """
     kw, kn = jax.random.split(key)
     w = jax.random.normal(kw, (n, d), jnp.float32) * init_scale
+    if mean:
+        w = mean + w
     if step_size is not None:
         step = jnp.full((n,), step_size, jnp.float32)
     elif clip_value is not None:

@@ -30,7 +30,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.lpt import LPTTable
 from repro.optim.adam import OptState
 
 # ------------------------------------------------------------------- policy
@@ -226,14 +225,14 @@ def _table_axes(cfg, pol: Policy):
 
 
 def table_pspecs(cfg, pol: Policy, row_optimizer: str = "adam"):
-    """Specs for the embedding table state: ``LPTTable`` for lpt/alpt methods
-    (codes + Delta + row-optimizer slots), a plain [V, d] spec for fp."""
+    """Specs for the embedding table state, mirrored from the registered
+    method's ``table_pspec`` (e.g. ``LPTTable`` codes + Delta + row-optimizer
+    slots for integer tables, a plain [V, d] spec for fp)."""
+    from repro import methods  # local import: methods.base imports dist.context
+
     row, col = _table_axes(cfg, pol)
-    if cfg.embedding_method not in ("lpt", "alpt"):
-        return P(row, col)
-    slot = P(row, col) if row_optimizer == "adam" else P(row)
-    return LPTTable(
-        codes=P(row, col), step=P(row), mu=slot, nu=slot, count=P()
+    return methods.get(cfg.embedding_method).table_pspec(
+        row, col, row_optimizer=row_optimizer
     )
 
 
@@ -253,11 +252,14 @@ def state_pspecs(cfg, pol: Policy, tcfg, state_shapes=None):
     moment_spec = _param_spec_tree(state_shapes.params, opt_pol)
     opt_spec = OptState(step=P(), mu=moment_spec, nu=moment_spec)
     table_spec = table_pspecs(cfg, pol, tcfg.row_optimizer)
-    if cfg.embedding_method in ("lpt", "alpt"):
+    from repro import methods  # local import: methods.base imports dist.context
+
+    method = methods.get(cfg.embedding_method)
+    param_spec = method.param_pspec(*_table_axes(cfg, pol))
+    if param_spec is None:  # integer tables carry no float-leaf Adam state
         table_opt_spec = None
     else:
-        fp_spec = table_pspecs(cfg, pol, tcfg.row_optimizer)
-        table_opt_spec = OptState(step=P(), mu=fp_spec, nu=fp_spec)
+        table_opt_spec = OptState(step=P(), mu=param_spec, nu=param_spec)
     return lm_trainer.LMTrainState(
         params=params_spec,
         opt=opt_spec,

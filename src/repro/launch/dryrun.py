@@ -30,9 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs
+from repro import configs, methods
 from repro.configs import common
-from repro.core import lpt as lpt_mod
 from repro.dist import context as dist_ctx
 from repro.dist import sharding
 from repro.launch import hlo_analysis
@@ -64,12 +63,11 @@ def arch_dry_config(arch: str, shape_name: str,
 
 
 def make_serve_step(cfg: tfm.ModelConfig):
+    spec = lm_trainer.embedding_spec_of(cfg)
+    method = methods.get(spec.method)
+
     def serve_step(params, table, token, cache, cache_len):
-        table_fp = (
-            lpt_mod.dense_table(table)
-            if cfg.embedding_method in ("lpt", "alpt")
-            else table
-        )
+        table_fp = method.serving_table(table, spec)
         return tfm.decode_step(params, table_fp, token, cache, cache_len, cfg)
 
     return serve_step
@@ -206,7 +204,7 @@ def _param_bytes(cfg: tfm.ModelConfig) -> float:
     if not cfg.tie_embeddings:
         dense += v * d
     bytes_total = dense * 2  # bf16
-    if cfg.embedding_method in ("lpt", "alpt"):
+    if methods.get(cfg.embedding_method).is_integer_table:
         bytes_total += v * d * 1 + v * 4  # int8 codes + f32 Delta
         bytes_total += v * d * 8  # row-adam mu/nu f32 (paper's Adam)
     else:
@@ -241,8 +239,9 @@ def analytic_memory(cfg: tfm.ModelConfig, shape_name: str, n_chips: int,
             carries /= model_shards  # sequence-parallel saved activations
         act += carries
         act += 8 * b_local * t * cfg.d_model * 4  # live f32 working set
-        if shape["kind"] == "train" and cfg.embedding_method == "alpt":
-            act *= 2  # ALPT second pass conservatively not shared
+        if shape["kind"] == "train" and methods.get(
+                cfg.embedding_method).has_learned_step:
+            act *= 2  # ALPT Delta second pass conservatively not shared
     else:
         b = shape["global_batch"]
         b_local = max(b // data_shards, 1) if b >= data_shards else b
@@ -388,10 +387,11 @@ def main(argv=None):
              "extra data parallelism + ZeRO-1; *_sp = sequence-parallel "
              "scan carries)",
     )
-    ap.add_argument("--embedding", choices=["alpt", "lpt", "fp"], default=None,
-                    help="override the embedding method (amortized-ALPT "
-                         "§Perf accounting pairs an alpt cell with an lpt "
-                         "cell)")
+    ap.add_argument("--embedding", choices=sorted(methods.available()),
+                    default=None,
+                    help="override the embedding method (any registered "
+                         "repro.methods name; amortized-ALPT §Perf "
+                         "accounting pairs an alpt cell with an lpt cell)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--list", action="store_true")
     ap.add_argument("--force", action="store_true", help="re-run cached cells")

@@ -24,8 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.core import lpt as lpt_mod
+from repro import configs, methods
 from repro.models import transformer as tfm
 from repro.training import lm_trainer
 
@@ -47,10 +46,11 @@ class ContinuousBatcher:
         self.table = table
         self.batch = batch
         self.max_len = max_len
-        self.table_fp = (
-            lpt_mod.dense_table(table)
-            if cfg.embedding_method in ("lpt", "alpt") else table
-        )
+        # The registered method's serving export: int-code tables de-quantize
+        # on the way out; fp ships as-is (weights never exist in fp32 for
+        # integer-table methods until this point).
+        spec = lm_trainer.embedding_spec_of(cfg)
+        self.table_fp = methods.get(spec.method).serving_table(table, spec)
         self._decode = jax.jit(
             functools.partial(tfm.decode_step, cfg=cfg), donate_argnums=(3,)
         )

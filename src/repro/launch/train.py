@@ -30,9 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, methods
 from repro.checkpoint import CheckpointManager
-from repro.checkpoint.manager import config_hash
+from repro.checkpoint.manager import (
+    check_embedding_manifest,
+    config_hash,
+    embedding_manifest,
+)
 from repro.data.lm_synth import LMTokenStream
 from repro.dist import context as dist_ctx
 from repro.dist import sharding
@@ -83,7 +87,8 @@ def main(argv=None) -> int:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--embedding-method", default=None,
-                    choices=["fp", "lpt", "alpt"])
+                    choices=sorted(methods.available()),
+                    help="any registered repro.methods name")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--mesh-data", type=int, default=1)
@@ -132,6 +137,12 @@ def main(argv=None) -> int:
     data = LMTokenStream(cfg.vocab_size, args.seq, seed=17)
     shutdown = GracefulShutdown()
     watchdog = StragglerWatchdog()
+    # Checkpoint manifests carry the embedding method's name + schema so a
+    # resume with a different --embedding-method fails loudly, not subtly.
+    ckpt_meta = {
+        "config_hash": config_hash(cfg),
+        **embedding_manifest(lm_trainer.embedding_spec_of(cfg, tcfg)),
+    }
 
     def make_batch(step: int) -> dict:
         full = data.batch(step, args.batch)
@@ -189,6 +200,8 @@ def main(argv=None) -> int:
                 out_shardings=(state_sh, None),
                 donate_argnums=(0,),
             )
+            # Host-side periodic refresh (prune mask); identity otherwise.
+            step_fn = lm_trainer.wrap_host_refresh(step_fn, cfg, tcfg)
 
         start_step = 0
         ckpt = None
@@ -198,6 +211,12 @@ def main(argv=None) -> int:
             )
             latest = ckpt.latest_step()
             if latest is not None:
+                # Surface method mismatches BEFORE the structural restore
+                # errors out on leaf counts (clearer failure story).
+                for problem in check_embedding_manifest(
+                        ckpt.read_manifest(latest),
+                        lm_trainer.embedding_spec_of(cfg, tcfg)):
+                    print(f"[train] WARNING: {problem}")
                 state, manifest = ckpt.restore(state, shardings=state_sh)
                 if manifest.get("config_hash") != config_hash(cfg):
                     print("[train] WARNING: config hash mismatch on resume")
@@ -221,13 +240,13 @@ def main(argv=None) -> int:
             if ckpt:
                 ckpt.maybe_save(
                     state, step + 1,
-                    extra_meta={"config_hash": config_hash(cfg)},
+                    extra_meta=ckpt_meta,
                 )
             if shutdown.requested:
                 if ckpt:
                     ckpt.maybe_save(
                         state, step + 1, force=True,
-                        extra_meta={"config_hash": config_hash(cfg)},
+                        extra_meta=ckpt_meta,
                     )
                 print(f"[train] preempted at step {step+1}; checkpointed; "
                       f"exiting 75 for requeue")
@@ -235,7 +254,7 @@ def main(argv=None) -> int:
         if ckpt:
             ckpt.maybe_save(
                 state, args.steps, force=True,
-                extra_meta={"config_hash": config_hash(cfg)},
+                extra_meta=ckpt_meta,
             )
         summary = {
             "final_loss": losses[-1] if losses else None,

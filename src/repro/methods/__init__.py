@@ -1,0 +1,25 @@
+"""Embedding-method protocol + registry (see :mod:`repro.methods.base`).
+
+Importing this package registers every built-in method; consumers dispatch
+with ``repro.methods.get(name)`` and discover names with ``available()``.
+"""
+from repro.methods.base import (  # noqa: F401
+    EmbeddingMethod,
+    EmbeddingSpec,
+    IntegerTableMethod,
+    available,
+    get,
+    register,
+)
+
+# Importing an implementation module registers its method(s).
+from repro.methods import alpt, fp, lpt, prune, qat, qr_hash, qr_lpt  # noqa: E402,F401
+
+__all__ = [
+    "EmbeddingMethod",
+    "EmbeddingSpec",
+    "IntegerTableMethod",
+    "available",
+    "get",
+    "register",
+]

@@ -1,0 +1,39 @@
+"""Full-precision fp32 table — the paper's accuracy reference (Table 1 row 1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.context import hint
+from repro.methods.base import EmbeddingMethod, register
+
+
+@register("fp")
+class FPMethod(EmbeddingMethod):
+    def init(self, key, spec):
+        return (
+            jax.random.normal(key, (spec.n, spec.d), jnp.float32)
+            * spec.init_scale
+        )
+
+    def lookup(self, state, ids, spec, grad_scale=1.0):
+        return jnp.take(state, ids, axis=0)
+
+    def trainable_params(self, state, spec):
+        return state
+
+    def with_params(self, state, params, spec):
+        return params
+
+    def dense_table_from(self, state, params, spec):
+        return params  # the params ARE the table
+
+    def hint_dense_params(self, params):
+        return hint(params, "embed_table")
+
+    def memory_bytes(self, state, spec, *, training):
+        return spec.n * spec.d * 4
+
+    def table_pspec(self, row, col, *, row_optimizer="adam"):
+        return P(row, col)

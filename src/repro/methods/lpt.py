@@ -1,0 +1,61 @@
+"""LPT: int8 codes + per-row Delta, no fp32 master copy (paper §2.3, Eq. 8).
+
+Thin adapter over :mod:`repro.core.lpt` — the paper-faithful math stays there.
+"""
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core import lpt as lpt_core
+from repro.methods.base import IntegerTableMethod, register
+
+
+@register("lpt")
+class LPTMethod(IntegerTableMethod):
+    # Vanilla LPT fixes Delta from the tuned clip value; ALPT overrides this.
+    _clip_value_of = staticmethod(lambda spec: spec.clip_value)
+
+    def init(self, key, spec):
+        return lpt_core.init_table(
+            key,
+            spec.n,
+            spec.d,
+            spec.bits,
+            init_scale=spec.init_scale,
+            clip_value=self._clip_value_of(spec),
+            optimizer=spec.row_optimizer,
+        )
+
+    def lookup(self, state, ids, spec, grad_scale=1.0):
+        return lpt_core.lookup(state, ids)
+
+    def dense_table(self, state, spec):
+        return lpt_core.dense_table(state)
+
+    def memory_bytes(self, state, spec, *, training):
+        return int(spec.n * spec.d * spec.bits / 8) + spec.n * 4
+
+    def sparse_apply(self, state, ids, g_rows, *, spec, lr, weight_decay,
+                     noise_key):
+        return lpt_core.sparse_apply(
+            state, ids, g_rows,
+            lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
+            noise_key=noise_key, optimizer=spec.row_optimizer,
+            weight_decay=weight_decay,
+        )
+
+    def dense_update(self, state, opt, grads, *, spec, lr, weight_decay,
+                     noise_key=None, delta_grad=None, batch_rows=None):
+        new_state = lpt_core.dense_apply(
+            state, grads,
+            lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
+            noise_key=noise_key, optimizer=spec.row_optimizer,
+            weight_decay=weight_decay,
+        )
+        return new_state, None, {}
+
+    def table_pspec(self, row, col, *, row_optimizer="adam"):
+        slot = P(row, col) if row_optimizer == "adam" else P(row)
+        return lpt_core.LPTTable(
+            codes=P(row, col), step=P(row), mu=slot, nu=slot, count=P()
+        )

@@ -1,0 +1,56 @@
+"""DeepLight-style magnitude pruning baseline (Deng et al. 2021; §4.1/B.2):
+dense fp32 weights + a periodically recomputed magnitude mask."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import pruning
+from repro.methods.base import EmbeddingMethod, register
+
+
+@register("prune")
+class PruneMethod(EmbeddingMethod):
+    has_host_refresh = True
+
+    def init(self, key, spec):
+        return pruning.init_prune(
+            key, spec.n, spec.d, init_scale=spec.init_scale
+        )
+
+    def lookup(self, state, ids, spec, grad_scale=1.0):
+        return pruning.prune_lookup(state, ids)
+
+    def trainable_params(self, state, spec):
+        return {"weights": state.weights}
+
+    def with_params(self, state, params, spec):
+        return state._replace(weights=params["weights"])
+
+    def memory_bytes(self, state, spec, *, training):
+        fp = spec.n * spec.d * 4
+        if training:
+            # Unstructured sparsity: dense weights + 1-bit mask.
+            return fp + spec.n * spec.d // 8
+        keep = float(jnp.mean(state.mask.astype(jnp.float32)))
+        return int(fp * keep)
+
+    # -------------------------------------------------- host-side refresh
+
+    def host_sync(self, state, step, spec):
+        # The pruning-ratio schedule reads a host-driven step clock.
+        return state._replace(step=jnp.asarray(step, jnp.int32))
+
+    def host_refresh(self, state, spec):
+        return pruning.update_mask(state, spec.prune)
+
+    def refresh_every(self, spec):
+        return spec.prune.update_every
+
+    def table_pspec(self, row, col, *, row_optimizer="adam"):
+        return pruning.PruneState(
+            weights=P(row, col), mask=P(row, col), step=P()
+        )
+
+    def param_pspec(self, row, col):
+        return {"weights": P(row, col)}

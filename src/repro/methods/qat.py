@@ -1,0 +1,59 @@
+"""QAT baselines LSQ / PACT (paper §2.2, §4.1): fp32 master copy, fake-quant
+forward — compresses inference (int8 export) but not training memory."""
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core import qat as qat_core
+from repro.core import quant
+from repro.methods.base import EmbeddingMethod, register
+
+
+class _QATMethod(EmbeddingMethod):
+    variant: str  # 'lsq' | 'pact'
+
+    def init(self, key, spec):
+        return qat_core.init_qat(
+            key, spec.n, spec.d, spec.bits, method=self.variant,
+            init_scale=spec.init_scale,
+        )
+
+    def lookup(self, state, ids, spec, grad_scale=1.0):
+        return qat_core.qat_lookup(
+            state, ids, spec.bits, method=self.variant, grad_scale=grad_scale
+        )
+
+    def trainable_params(self, state, spec):
+        return {"weights": state.weights, "scale": state.scale}
+
+    def with_params(self, state, params, spec):
+        return qat_core.QATTable(
+            weights=params["weights"], scale=params["scale"]
+        )
+
+    def memory_bytes(self, state, spec, *, training):
+        # Training keeps the fp master copy; inference ships codes + step.
+        fp = spec.n * spec.d * 4
+        if training:
+            return fp + spec.n * 4
+        return int(spec.n * spec.d * spec.bits / 8) + spec.n * 4
+
+    def serving_table(self, state, spec):
+        codes, step = qat_core.export_int8(state, spec.bits, method=self.variant)
+        return quant.dequantize(codes, step)
+
+    def table_pspec(self, row, col, *, row_optimizer="adam"):
+        return qat_core.QATTable(weights=P(row, col), scale=P(row))
+
+    def param_pspec(self, row, col):
+        return {"weights": P(row, col), "scale": P(row)}
+
+
+@register("lsq")
+class LSQMethod(_QATMethod):
+    variant = "lsq"
+
+
+@register("pact")
+class PACTMethod(_QATMethod):
+    variant = "pact"

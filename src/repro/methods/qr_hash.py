@@ -1,0 +1,39 @@
+"""QR compositional-embedding baseline (Shi et al. 2020; paper §4.1):
+remainder/quotient fp32 tables composed by element-wise product."""
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hashing
+from repro.methods.base import EmbeddingMethod, register
+
+
+@register("hash")
+class QRHashMethod(EmbeddingMethod):
+    def init(self, key, spec):
+        return hashing.init_qr(
+            key, spec.n, spec.d, compression=spec.hash_compression,
+            init_scale=spec.init_scale,
+        )
+
+    def lookup(self, state, ids, spec, grad_scale=1.0):
+        return hashing.qr_lookup(state, ids)
+
+    def trainable_params(self, state, spec):
+        return {"remainder": state.remainder, "quotient": state.quotient}
+
+    def with_params(self, state, params, spec):
+        return hashing.QRTable(
+            remainder=params["remainder"], quotient=params["quotient"],
+            r=state.r,
+        )
+
+    def memory_bytes(self, state, spec, *, training):
+        return hashing.qr_memory_bytes(state)
+
+    def table_pspec(self, row, col, *, row_optimizer="adam"):
+        # Sub-table row counts rarely divide the mesh axes; stay replicated.
+        return hashing.QRTable(remainder=P(), quotient=P(), r=P())
+
+    def param_pspec(self, row, col):
+        return {"remainder": P(), "quotient": P()}

@@ -1,139 +1,63 @@
-"""One embedding-table API over all methods in paper Table 1.
+"""One embedding-table API over all methods — a thin shim over
+:mod:`repro.methods`.
 
-Methods: 'fp', 'lpt', 'alpt', 'lsq', 'pact', 'hash', 'prune'.
+The protocol, registry, and per-method implementations live in
+``repro/methods/`` (one file per method; ``repro.methods.base`` documents the
+full ``EmbeddingMethod`` surface).  This module keeps the historical
+function-style entry points — ``init_embedding`` / ``lookup`` /
+``trainable_params`` / ``with_params`` / ``memory_bytes`` — as one-line
+delegations so existing callers and notebooks keep working; new code should
+call ``repro.methods.get(spec.method)`` directly.
 
 Lookup/update semantics per method family:
-  * float-leaf methods ('fp', 'lsq', 'pact', 'hash', 'prune') — ``params()``
-    exposes differentiable leaves, updated by the caller's optimizer.
-  * integer-table methods ('lpt', 'alpt') — the table is int8 state, not a
-    differentiable leaf.  The trainer differentiates w.r.t. the *looked-up
-    rows* and calls ``apply_row_grads`` (Eq. 8 / Algorithm 1).
+
+  * float-leaf methods ('fp', 'lsq', 'pact', 'hash', 'prune') —
+    ``trainable_params`` exposes differentiable leaves, updated by the
+    caller's optimizer.
+  * integer-table methods ('lpt', 'alpt', 'qr_lpt') — the table is int8
+    state, not a differentiable leaf.  The trainer differentiates w.r.t. the
+    *looked-up rows* and the method applies them (Eq. 8 / Algorithm 1).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import alpt, hashing, lpt, pruning, qat
+from repro.methods import EmbeddingSpec, available, get  # noqa: F401
 
-
-@dataclasses.dataclass(frozen=True)
-class EmbeddingSpec:
-    method: str  # fp | lpt | alpt | lsq | pact | hash | prune
-    n: int
-    d: int
-    bits: int = 8
-    init_scale: float = 1e-2
-    # LPT (Xu et al. 2021) fixes Delta via a tuned clip value:
-    clip_value: float | None = None
-    # ALPT hyper-parameters (paper §4.1):
-    alpt: alpt.ALPTConfig = alpt.ALPTConfig()
-    row_optimizer: str = "adam"
-    hash_compression: float = 2.0
-    prune: pruning.PruneConfig = pruning.PruneConfig()
-
-    @property
-    def is_integer_table(self) -> bool:
-        return self.method in ("lpt", "alpt")
-
-
-FLOAT_METHODS = ("fp", "lsq", "pact", "hash", "prune")
-INT_METHODS = ("lpt", "alpt")
+__all__ = [
+    "EmbeddingSpec",
+    "available",
+    "get",
+    "init_embedding",
+    "lookup",
+    "trainable_params",
+    "with_params",
+    "memory_bytes",
+]
 
 
 def init_embedding(key: jax.Array, spec: EmbeddingSpec) -> Any:
-    if spec.method == "fp":
-        return jax.random.normal(key, (spec.n, spec.d), jnp.float32) * spec.init_scale
-    if spec.method in ("lpt", "alpt"):
-        return lpt.init_table(
-            key,
-            spec.n,
-            spec.d,
-            spec.bits,
-            init_scale=spec.init_scale,
-            clip_value=spec.clip_value if spec.method == "lpt" else None,
-            optimizer=spec.row_optimizer,
-        )
-    if spec.method in ("lsq", "pact"):
-        return qat.init_qat(
-            key, spec.n, spec.d, spec.bits, method=spec.method,
-            init_scale=spec.init_scale,
-        )
-    if spec.method == "hash":
-        return hashing.init_qr(
-            key, spec.n, spec.d, compression=spec.hash_compression,
-            init_scale=spec.init_scale,
-        )
-    if spec.method == "prune":
-        return pruning.init_prune(key, spec.n, spec.d, init_scale=spec.init_scale)
-    raise ValueError(f"unknown embedding method {spec.method!r}")
+    return get(spec.method).init(key, spec)
 
 
 def lookup(state: Any, ids: jax.Array, spec: EmbeddingSpec,
            grad_scale: float = 1.0) -> jax.Array:
     """De-quantized / fake-quantized / masked rows [..., d]."""
-    if spec.method == "fp":
-        return jnp.take(state, ids, axis=0)
-    if spec.method in ("lpt", "alpt"):
-        return lpt.lookup(state, ids)
-    if spec.method in ("lsq", "pact"):
-        return qat.qat_lookup(state, ids, spec.bits, method=spec.method,
-                              grad_scale=grad_scale)
-    if spec.method == "hash":
-        return hashing.qr_lookup(state, ids)
-    if spec.method == "prune":
-        return pruning.prune_lookup(state, ids)
-    raise ValueError(spec.method)
+    return get(spec.method).lookup(state, ids, spec, grad_scale=grad_scale)
 
 
 def trainable_params(state: Any, spec: EmbeddingSpec):
     """Differentiable leaves for float-leaf methods (None for int tables)."""
-    if spec.method == "fp":
-        return state
-    if spec.method in ("lsq", "pact"):
-        return {"weights": state.weights, "scale": state.scale}
-    if spec.method == "hash":
-        return {"remainder": state.remainder, "quotient": state.quotient}
-    if spec.method == "prune":
-        return {"weights": state.weights}
-    return None
+    return get(spec.method).trainable_params(state, spec)
 
 
 def with_params(state: Any, params: Any, spec: EmbeddingSpec):
     """Rebuild state from updated differentiable leaves."""
-    if spec.method == "fp":
-        return params
-    if spec.method in ("lsq", "pact"):
-        return qat.QATTable(weights=params["weights"], scale=params["scale"])
-    if spec.method == "hash":
-        return hashing.QRTable(
-            remainder=params["remainder"], quotient=params["quotient"], r=state.r
-        )
-    if spec.method == "prune":
-        return state._replace(weights=params["weights"])
-    return state
+    return get(spec.method).with_params(state, params, spec)
 
 
 def memory_bytes(state: Any, spec: EmbeddingSpec, *, training: bool) -> int:
     """Embedding-memory accounting as in paper Table 1's compression columns."""
-    n, d = spec.n, spec.d
-    fp = n * d * 4
-    if spec.method == "fp":
-        return fp
-    if spec.method in ("lpt", "alpt"):
-        return int(n * d * spec.bits / 8) + n * 4
-    if spec.method in ("lsq", "pact"):
-        # Training keeps the fp master copy; inference ships codes + step.
-        return fp + n * 4 if training else int(n * d * spec.bits / 8) + n * 4
-    if spec.method == "hash":
-        return hashing.qr_memory_bytes(state)
-    if spec.method == "prune":
-        # Unstructured sparsity: training keeps dense + mask; inference CSR-ish.
-        if training:
-            return fp + n * d // 8
-        keep = float(jnp.mean(state.mask.astype(jnp.float32)))
-        return int(fp * keep)
-    raise ValueError(spec.method)
+    return get(spec.method).memory_bytes(state, spec, training=training)

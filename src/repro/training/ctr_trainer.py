@@ -1,11 +1,12 @@
-"""End-to-end CTR training for every embedding method in paper Table 1.
+"""End-to-end CTR training for every registered embedding method.
 
-One trainer, one DCN/DeepFM backbone, seven embedding methods — the only
-thing that changes per method is how the table is looked up and updated:
+One trainer, one DCN/DeepFM backbone, any method in ``repro.methods`` — the
+trainer never names a method.  It keys off two capability surfaces:
 
-  fp/lsq/pact/hash/prune : joint Adam over (embedding leaves, dense params)
-  lpt                    : Eq. 8 — rows de-quantized, row-Adam, requantize
-  alpt                   : Algorithm 1 — + learned Delta via second forward
+  float-leaf methods    : joint Adam over (embedding leaves, dense params)
+  integer-table methods : the method's ``fused_row_step`` (Eq. 8 for LPT,
+                          Algorithm 1 for ALPT, product-rule row updates for
+                          composed tables like qr_lpt)
 
 This mirrors the paper's experimental protocol (§4.1): Adam lr 1e-3, tenfold
 decay boundaries, decoupled weight decay on embeddings, Delta lr 2e-5.
@@ -19,10 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import metrics
-from repro.core import alpt as alpt_mod
-from repro.core import lpt as lpt_mod
-from repro.core import pruning, quant
+from repro import methods, metrics
 from repro.models import ctr as ctr_models
 from repro.models import embedding as emb_mod
 from repro.optim import adam_init, adam_update
@@ -56,6 +54,7 @@ class CTRTrainer:
     def __init__(self, cfg: TrainerConfig):
         self.cfg = cfg
         self.spec = cfg.spec
+        self.method = methods.get(cfg.spec.method)
         if cfg.model == "dcn":
             assert cfg.dcn is not None
             self.model_cfg = cfg.dcn
@@ -74,10 +73,10 @@ class CTRTrainer:
     def init_state(self, key: jax.Array | None = None) -> TrainState:
         key = jax.random.PRNGKey(self.cfg.seed) if key is None else key
         k_emb, k_dense, k_rng = jax.random.split(key, 3)
-        emb_state = emb_mod.init_embedding(k_emb, self.spec)
+        emb_state = self.method.init(k_emb, self.spec)
         dense_params = self._init_model(k_dense, self.model_cfg)
         dense_opt = adam_init(dense_params)
-        emb_params = emb_mod.trainable_params(emb_state, self.spec)
+        emb_params = self.method.trainable_params(emb_state, self.spec)
         emb_opt = adam_init(emb_params) if emb_params is not None else None
         return TrainState(
             emb_state=emb_state,
@@ -99,14 +98,8 @@ class CTRTrainer:
     # ------------------------------------------------------------ forward
 
     def _logits_fn(self, emb_state, dense_params, ids, *, dropout_key=None):
-        if self.cfg.model == "deepfm":
-            rows_all = emb_mod.lookup(emb_state, ids, self.spec)
-            rows, first = rows_all[..., :-1], rows_all[..., -1]
-            return self._forward(
-                dense_params, rows, first, self.model_cfg, dropout_key=dropout_key
-            )
-        rows = emb_mod.lookup(emb_state, ids, self.spec)
-        return self._forward(dense_params, rows, self.model_cfg, dropout_key=dropout_key)
+        rows = self.method.lookup(emb_state, ids, self.spec)
+        return self._logits_from_rows(rows, dense_params, dropout_key)
 
     def _logits_from_rows(self, rows, dense_params, dropout_key=None):
         if self.cfg.model == "deepfm":
@@ -120,18 +113,18 @@ class CTRTrainer:
 
     def _build_train_step(self):
         spec = self.spec
-        method = spec.method
+        method = self.method
 
-        if method in emb_mod.FLOAT_METHODS:
+        if not method.is_integer_table:
 
             @jax.jit
             def step_fn(state: TrainState, ids, labels):
                 lr = self._lr_at(state.step)
                 rng, kd = jax.random.split(state.rng)
-                emb_params = emb_mod.trainable_params(state.emb_state, spec)
+                emb_params = method.trainable_params(state.emb_state, spec)
 
                 def loss_fn(emb_params, dense_params):
-                    emb_state = emb_mod.with_params(state.emb_state, emb_params, spec)
+                    emb_state = method.with_params(state.emb_state, emb_params, spec)
                     logits = self._logits_fn(
                         emb_state, dense_params, ids, dropout_key=kd
                     )
@@ -147,139 +140,76 @@ class CTRTrainer:
                     g_emb, state.emb_opt, emb_params, lr,
                     weight_decay=self.cfg.emb_weight_decay,
                 )
-                emb_state = emb_mod.with_params(state.emb_state, new_emb_params, spec)
+                emb_state = method.with_params(state.emb_state, new_emb_params, spec)
                 return (
                     TrainState(emb_state, new_dense, dense_opt, emb_opt,
                                state.step + 1, rng),
                     {"loss": loss, "lr": lr},
                 )
 
-            if method == "prune":
-                return self.wrap_prune_mask_update(step_fn)
+            if method.has_host_refresh:
+                return self.wrap_host_refresh(step_fn)
             return step_fn
 
-        if method == "lpt":
+        @jax.jit
+        def step_fn(state: TrainState, ids, labels):
+            lr = self._lr_at(state.step)
+            rng, kd, kn = jax.random.split(state.rng, 3)
 
-            @jax.jit
-            def step_fn(state: TrainState, ids, labels):
-                lr = self._lr_at(state.step)
-                rng, kd, kn = jax.random.split(state.rng, 3)
-                rows0 = lpt_mod.lookup(state.emb_state, ids)
+            def loss_from_rows(rows, dense_params):
+                logits = self._logits_from_rows(rows, dense_params, kd)
+                return ctr_models.bce_loss(logits, labels)
 
-                def loss_fn(rows, dense_params):
-                    logits = self._logits_from_rows(rows, dense_params, kd)
-                    return ctr_models.bce_loss(logits, labels)
+            def update_dense(g, opt, params):
+                return adam_update(g, opt, params, lr)
 
-                loss, (g_rows, g_dense) = jax.value_and_grad(loss_fn, (0, 1))(
-                    rows0, state.dense_params
-                )
-                new_dense, dense_opt = adam_update(
-                    g_dense, state.dense_opt, state.dense_params, lr
-                )
-                emb_state = lpt_mod.sparse_apply(
-                    state.emb_state, ids, g_rows,
-                    lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
-                    noise_key=kn, optimizer=spec.row_optimizer,
-                    weight_decay=self.cfg.emb_weight_decay,
-                )
-                return (
-                    TrainState(emb_state, new_dense, dense_opt, None,
-                               state.step + 1, rng),
-                    {"loss": loss, "lr": lr},
-                )
+            emb_state, new_dense, dense_opt, m = method.fused_row_step(
+                state.emb_state, ids, spec=spec,
+                loss_from_rows=loss_from_rows,
+                dense_params=state.dense_params, dense_opt=state.dense_opt,
+                update_dense=update_dense, lr=lr,
+                weight_decay=self.cfg.emb_weight_decay, noise_key=kn,
+            )
+            return (
+                TrainState(emb_state, new_dense, dense_opt, None,
+                           state.step + 1, rng),
+                {"lr": lr, **m},
+            )
 
-            return step_fn
-
-        if method == "alpt":
-
-            @jax.jit
-            def step_fn(state: TrainState, ids, labels):
-                lr = self._lr_at(state.step)
-                rng, kd, kn = jax.random.split(state.rng, 3)
-                rows0 = lpt_mod.lookup(state.emb_state, ids)
-
-                def loss_rows_dense(rows, dense_params):
-                    logits = self._logits_from_rows(rows, dense_params, kd)
-                    return ctr_models.bce_loss(logits, labels)
-
-                # Dense update (Algorithm 1 line 3) shares step 1's backward.
-                loss, g_dense = jax.value_and_grad(
-                    lambda dp: loss_rows_dense(rows0, dp)
-                )(state.dense_params)
-                new_dense, dense_opt = adam_update(
-                    g_dense, state.dense_opt, state.dense_params, lr
-                )
-                emb_state, loss2, aux = alpt_mod.alpt_step(
-                    state.emb_state,
-                    ids,
-                    lambda rows: loss_rows_dense(rows, state.dense_params),
-                    cfg=spec.alpt._replace(
-                        weight_decay=self.cfg.emb_weight_decay,
-                        optimizer=spec.row_optimizer,
-                    ),
-                    lr=lr,
-                    noise_key=kn,
-                    loss_fn_step2=lambda rows: loss_rows_dense(rows, new_dense),
-                )
-                return (
-                    TrainState(emb_state, new_dense, dense_opt, None,
-                               state.step + 1, rng),
-                    {"loss": loss2, "lr": lr, **aux},
-                )
-
-            return step_fn
-
-        raise ValueError(f"unknown method {method!r}")
+        return step_fn
 
     # ------------------------------------------- grad/apply split (DP hooks)
     #
     # The fused step above is the paper-faithful single-device path (sparse
-    # row updates for lpt/alpt).  The data-parallel wrapper
+    # row updates for integer tables).  The data-parallel wrapper
     # (repro.training.data_parallel) needs to all-reduce gradients *between*
     # backward and update, so the same math is also exposed as a
-    # (grad_fn, apply_fn) pair.  Integer-table methods switch to the dense
-    # formulation there (dense table gradient + lpt.dense_apply /
-    # alpt dense pieces): it is the only shape that is rank-invariant — every
-    # replica sees the same [n, d] gradient tensor — and the dense/sparse
-    # update parity is regression-tested in tests/test_lpt_alpt.py.
+    # (grad_fn, apply_fn) pair built on the method's *dense* formulation
+    # (``dense_params`` / ``dense_update``): it is the only shape that is
+    # rank-invariant — every replica sees the same gradient pytree — and the
+    # dense/sparse update parity is regression-tested in tests/test_lpt_alpt.py.
 
     def build_grad_fn(self):
         """Per-(micro)batch backward: (state, ids, labels, kd) -> (loss, grads).
 
-        ``grads`` is ``(g_emb, g_dense)`` where ``g_emb`` is the trainable
-        embedding-params pytree for float methods or the dense [n, d]
-        de-quantized-table gradient for lpt/alpt.
+        ``grads`` is ``(g_emb, g_dense)`` where ``g_emb`` mirrors the
+        method's ``dense_params`` — the trainable-params pytree for float
+        methods, the dense [n, d] de-quantized-table gradient for integer
+        tables.
         """
         spec = self.spec
-
-        if spec.method in emb_mod.FLOAT_METHODS:
-
-            def grad_fn(state: TrainState, ids, labels, kd):
-                emb_params = emb_mod.trainable_params(state.emb_state, spec)
-
-                def loss_fn(emb_params, dense_params):
-                    emb_state = emb_mod.with_params(state.emb_state, emb_params, spec)
-                    logits = self._logits_fn(
-                        emb_state, dense_params, ids, dropout_key=kd
-                    )
-                    return ctr_models.bce_loss(logits, labels)
-
-                return jax.value_and_grad(loss_fn, (0, 1))(
-                    emb_params, state.dense_params
-                )
-
-            return grad_fn
+        method = self.method
 
         def grad_fn(state: TrainState, ids, labels, kd):
-            table_fp = lpt_mod.dense_table(state.emb_state)
+            emb_params = method.dense_params(state.emb_state, spec)
 
-            def loss_fn(table_fp, dense_params):
-                rows = jnp.take(table_fp, ids, axis=0)
+            def loss_fn(emb_params, dense_params):
+                rows = method.dense_lookup(state.emb_state, emb_params, ids, spec)
                 logits = self._logits_from_rows(rows, dense_params, kd)
                 return ctr_models.bce_loss(logits, labels)
 
             return jax.value_and_grad(loss_fn, (0, 1))(
-                table_fp, state.dense_params
+                emb_params, state.dense_params
             )
 
         return grad_fn
@@ -297,124 +227,76 @@ class CTRTrainer:
         the batch is sharded over replicas.
         """
         spec = self.spec
-        method = spec.method
+        method = self.method
+        wd = self.cfg.emb_weight_decay
 
-        if method in emb_mod.FLOAT_METHODS:
+        def apply_fn(state, loss, grads, *, lr, rng, kn=None,
+                     delta_grad=None, batch_rows=None):
+            g_emb, g_dense = grads
+            new_dense, dense_opt = adam_update(
+                g_dense, state.dense_opt, state.dense_params, lr
+            )
+            wrapped = None
+            if delta_grad is not None:
+                # Algorithm 1 line 4 evaluates at the UPDATED dense params.
+                def wrapped(w_new, step_vec, gscale):
+                    return delta_grad(w_new, step_vec, new_dense, gscale)
 
-            def apply_fn(state, loss, grads, *, lr, rng, kn=None,
-                         delta_grad=None, batch_rows=None):
-                g_emb, g_dense = grads
-                new_dense, dense_opt = adam_update(
-                    g_dense, state.dense_opt, state.dense_params, lr
-                )
-                emb_params = emb_mod.trainable_params(state.emb_state, spec)
-                new_emb_params, emb_opt = adam_update(
-                    g_emb, state.emb_opt, emb_params, lr,
-                    weight_decay=self.cfg.emb_weight_decay,
-                )
-                emb_state = emb_mod.with_params(
-                    state.emb_state, new_emb_params, spec
-                )
-                return (
-                    TrainState(emb_state, new_dense, dense_opt, emb_opt,
-                               state.step + 1, rng),
-                    {"loss": loss, "lr": lr},
-                )
+            emb_state, emb_opt, aux = method.dense_update(
+                state.emb_state, state.emb_opt, g_emb, spec=spec, lr=lr,
+                weight_decay=wd, noise_key=kn, delta_grad=wrapped,
+                batch_rows=batch_rows,
+            )
+            return (
+                TrainState(emb_state, new_dense, dense_opt, emb_opt,
+                           state.step + 1, rng),
+                {"loss": loss, "lr": lr, **aux},
+            )
 
-            return apply_fn
-
-        if method == "lpt":
-
-            def apply_fn(state, loss, grads, *, lr, rng, kn,
-                         delta_grad=None, batch_rows=None):
-                g_table, g_dense = grads
-                new_dense, dense_opt = adam_update(
-                    g_dense, state.dense_opt, state.dense_params, lr
-                )
-                emb_state = lpt_mod.dense_apply(
-                    state.emb_state, g_table,
-                    lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
-                    noise_key=kn, optimizer=spec.row_optimizer,
-                    weight_decay=self.cfg.emb_weight_decay,
-                )
-                return (
-                    TrainState(emb_state, new_dense, dense_opt, None,
-                               state.step + 1, rng),
-                    {"loss": loss, "lr": lr},
-                )
-
-            return apply_fn
-
-        if method == "alpt":
-
-            def apply_fn(state, loss, grads, *, lr, rng, kn,
-                         delta_grad, batch_rows):
-                g_table, g_dense = grads
-                new_dense, dense_opt = adam_update(
-                    g_dense, state.dense_opt, state.dense_params, lr
-                )
-                table = state.emb_state
-                acfg = spec.alpt._replace(
-                    weight_decay=self.cfg.emb_weight_decay,
-                    optimizer=spec.row_optimizer,
-                )
-                upd = alpt_mod.dense_weight_update(table, g_table, cfg=acfg, lr=lr)
-                gscale = alpt_mod.grad_scale_factor(
-                    acfg, batch_rows=int(batch_rows), dim=table.dim
-                )
-                # Algorithm 1 line 4 at the UPDATED dense params.
-                g_step = delta_grad(upd.w_new, table.step, new_dense, gscale)
-                new_table = alpt_mod.dense_finish(
-                    table, upd, g_step, cfg=acfg, noise_key=kn
-                )
-                aux = {
-                    "step_grad_norm": jnp.linalg.norm(g_step),
-                    "mean_step": jnp.mean(new_table.step),
-                }
-                return (
-                    TrainState(new_table, new_dense, dense_opt, None,
-                               state.step + 1, rng),
-                    {"loss": loss, "lr": lr, **aux},
-                )
-
-            return apply_fn
-
-        raise ValueError(f"unknown method {method!r}")
+        return apply_fn
 
     def build_delta_grad_fn(self):
         """Per-(micro)batch ALPT Delta gradient (dense formulation):
         ``(w_new, step_vec, dense_params, ids, labels, kd, gscale) -> g_step``.
         """
         spec = self.spec
+        method = self.method
+        wd = self.cfg.emb_weight_decay
 
         def delta_fn(w_new, step_vec, dense_params, ids, labels, kd, gscale):
-            def loss_wrt_step(step_vec):
-                table_q = quant.fake_quant_lsq(
-                    jax.lax.stop_gradient(w_new), step_vec, spec.bits, gscale
-                )
+            def loss_fn_q(table_q):
                 rows = jnp.take(table_q, ids, axis=0)
                 logits = self._logits_from_rows(rows, dense_params, kd)
                 return ctr_models.bce_loss(logits, labels)
 
-            return jax.grad(loss_wrt_step)(step_vec)
+            return method.dense_delta_grad(
+                w_new, step_vec, loss_fn_q, spec=spec, weight_decay=wd,
+                gscale=gscale,
+            )
 
         return delta_fn
 
-    def wrap_prune_mask_update(self, step_fn):
-        """Host-side DeepLight mask refresh around a jitted step function —
-        the same wrapper the fused path installs for method='prune'."""
+    def wrap_host_refresh(self, step_fn):
+        """Host-side periodic state refresh around a jitted step function
+        (DeepLight mask recomputation for method='prune') — installed by the
+        fused path and the DP wrapper whenever ``method.has_host_refresh``."""
         spec = self.spec
-        update_mask = jax.jit(lambda s: pruning.update_mask(s, spec.prune))
+        method = self.method
+        refresh = jax.jit(lambda s: method.host_refresh(s, spec))
+        every = method.refresh_every(spec)
 
-        def step_with_mask(state, ids, labels):
+        def step_with_refresh(state, ids, labels):
             state, m = step_fn(state, ids, labels)
             step = int(state.step)
-            emb = state.emb_state._replace(step=jnp.asarray(step, jnp.int32))
-            if step % spec.prune.update_every == 0:
-                emb = update_mask(emb)
+            emb = method.host_sync(state.emb_state, step, spec)
+            if step % every == 0:
+                emb = refresh(emb)
             return state._replace(emb_state=emb), m
 
-        return step_with_mask
+        return step_with_refresh
+
+    # Historical name, kept for callers of the pre-registry API.
+    wrap_prune_mask_update = wrap_host_refresh
 
     # ------------------------------------------------------------ api
 

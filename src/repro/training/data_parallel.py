@@ -33,11 +33,13 @@ step counter every step, then with the gradient-leaf index, then (inside the
 collective) with the replica rank — so no two (step, tensor, rank) triples
 share noise.
 
-Embedding methods: float-table methods sync the trainable-params gradient
-pytree; lpt/alpt switch to the *dense* table formulation (dense [n, d] table
-gradient + ``lpt.dense_apply`` / the ALPT dense pieces, with the Delta
-gradient all-reduced too) because it is the only rank-invariant shape — the
-dense/sparse update parity is regression-tested in tests/test_lpt_alpt.py.
+Embedding methods: every registered method (repro.methods) exposes a *dense*
+formulation — float-leaf methods sync the trainable-params gradient pytree;
+integer-table methods the dense [n, d] de-quantized-table gradient (plus the
+all-reduced ALPT Delta gradient when ``has_learned_step``) — because it is
+the only rank-invariant shape; the dense/sparse update parity is
+regression-tested in tests/test_lpt_alpt.py.  This wrapper never names a
+method: it keys off the method's capability flags.
 """
 from __future__ import annotations
 
@@ -48,6 +50,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import methods
 from repro.dist import collectives
 from repro.training import lm_trainer
 
@@ -148,7 +151,8 @@ def make_ctr_dp_step(trainer, mesh, dp: DPConfig | None = None, *, jit: bool = T
     grad_fn = trainer.build_grad_fn()
     apply_fn = trainer.build_apply_fn()
     delta_fn = (
-        trainer.build_delta_grad_fn() if trainer.spec.method == "alpt" else None
+        trainer.build_delta_grad_fn() if trainer.method.has_learned_step
+        else None
     )
     base = _base_key(dp)
 
@@ -188,8 +192,8 @@ def make_ctr_dp_step(trainer, mesh, dp: DPConfig | None = None, *, jit: bool = T
         # Donate the state so its replicated buffers are reused in place
         # (same contract as the non-DP train driver's jit).
         step = jax.jit(step, donate_argnums=(0,))
-    if trainer.spec.method == "prune":
-        step = trainer.wrap_prune_mask_update(step)
+    if trainer.method.has_host_refresh:
+        step = trainer.wrap_host_refresh(step)
     return step
 
 
@@ -207,7 +211,8 @@ def make_ctr_microbatch_step(
     grad_fn = trainer.build_grad_fn()
     apply_fn = trainer.build_apply_fn()
     delta_fn = (
-        trainer.build_delta_grad_fn() if trainer.spec.method == "alpt" else None
+        trainer.build_delta_grad_fn() if trainer.method.has_learned_step
+        else None
     )
     base = _base_key(dp)
 
@@ -248,8 +253,8 @@ def make_ctr_microbatch_step(
 
     if jit:
         step = jax.jit(step, donate_argnums=(0,))
-    if trainer.spec.method == "prune":
-        step = trainer.wrap_prune_mask_update(step)
+    if trainer.method.has_host_refresh:
+        step = trainer.wrap_host_refresh(step)
     return step
 
 
@@ -320,7 +325,8 @@ def make_lm_dp_step(
         _check_lm_batch(batch)
         return smapped(state, batch)
 
-    return jax.jit(step, donate_argnums=(0,)) if jit else step
+    step = jax.jit(step, donate_argnums=(0,)) if jit else step
+    return lm_trainer.wrap_host_refresh(step, cfg, tcfg)
 
 
 def make_lm_microbatch_step(
@@ -335,7 +341,7 @@ def make_lm_microbatch_step(
     apply_fn = lm_trainer.make_apply_fn(cfg, tcfg)
     delta_fn = (
         lm_trainer.make_delta_grad_fn(cfg, tcfg)
-        if cfg.embedding_method == "alpt" else None
+        if methods.get(cfg.embedding_method).has_learned_step else None
     )
     base = _base_key(dp)
 
@@ -374,7 +380,8 @@ def make_lm_microbatch_step(
             delta_grad=delta_grad, batch_rows=int(batch["labels"].size),
         )
 
-    return jax.jit(step, donate_argnums=(0,)) if jit else step
+    step = jax.jit(step, donate_argnums=(0,)) if jit else step
+    return lm_trainer.wrap_host_refresh(step, cfg, tcfg)
 
 
 # ------------------------------------------------------- wire-byte reporting

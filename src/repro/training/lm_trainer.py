@@ -1,12 +1,16 @@
-"""LM training step with quantized (LPT/ALPT) vocab embeddings.
+"""LM training step with a registry-dispatched vocab embedding table.
 
-The embedding table is integer state (codes + per-row Delta); each step:
+The embedding method comes from ``repro.methods`` (``cfg.embedding_method``);
+each step:
 
-  1. de-quantize the table (dense, vocab-sharded under pjit),
-  2. differentiate the LM loss w.r.t. (table_fp, dense params),
-  3. AdamW the dense params; LPT/ALPT row-update + SR-requantize the table
-     (untouched rows stay bit-identical — lpt.dense_apply semantics),
-  4. (ALPT only) learn Delta via the second fake-quant forward (Algorithm 1).
+  1. materialize the method's dense differentiable params (for integer
+     tables: the de-quantized [V, d] table, vocab-sharded under pjit),
+  2. differentiate the LM loss w.r.t. (those params, dense params),
+  3. AdamW the dense params; the method's ``dense_update`` consumes the
+     table gradient (LPT/ALPT row-update + SR-requantize — untouched rows
+     stay bit-identical; float-leaf methods get decoupled-decay Adam),
+  4. (``has_learned_step`` only) learn Delta via the second fake-quant
+     forward (Algorithm 1).
 
 This is the paper's training paradigm transplanted onto an LM vocab table;
 the same function lowers on the 512-device production mesh (launch/dryrun.py).
@@ -19,9 +23,9 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import methods
 from repro.core import alpt as alpt_mod
-from repro.core import lpt as lpt_mod
-from repro.dist.context import hint
+from repro.core import pruning as pruning_mod
 from repro.models import transformer as tfm
 from repro.optim import adam_init, adam_update, clip_by_global_norm
 
@@ -29,8 +33,8 @@ from repro.optim import adam_init, adam_update, clip_by_global_norm
 class LMTrainState(NamedTuple):
     params: Any  # transformer blocks (+ untied head)
     opt: Any  # Adam state for params
-    table: Any  # lpt.LPTTable (int methods) | f32 [V, d] (fp)
-    table_opt: Any  # Adam state when table is fp, else None
+    table: Any  # embedding-method state (lpt.LPTTable | f32 [V, d] | ...)
+    table_opt: Any  # Adam state over float embedding leaves, else None
     step: jax.Array
     rng: jax.Array
 
@@ -46,65 +50,83 @@ class LMTrainerConfig:
     # ALPT's Delta substep doubles the forward cost; 'every_k' amortizes it
     # (beyond-paper knob; k=1 == faithful Algorithm 1).
     alpt_every: int = 1
+    # DeepLight schedule for method='prune' (host-side mask refresh).
+    prune: pruning_mod.PruneConfig = pruning_mod.PruneConfig()
     # Gradient-sync bit width for data-parallel training
     # (repro.training.data_parallel): 32 = exact fp32, 2..8 = SR-compressed.
     dp_sync_bits: int = 32
+
+
+def embedding_spec_of(
+    cfg: tfm.ModelConfig, tcfg: LMTrainerConfig | None = None
+) -> methods.EmbeddingSpec:
+    """The vocab table as an :class:`~repro.methods.EmbeddingSpec`."""
+    tcfg = LMTrainerConfig() if tcfg is None else tcfg
+    return methods.EmbeddingSpec(
+        method=cfg.embedding_method,
+        n=cfg.vocab_size,
+        d=cfg.d_model,
+        bits=cfg.embedding_bits,
+        init_scale=cfg.d_model**-0.5,
+        row_optimizer=tcfg.row_optimizer,
+        alpt=alpt_mod.ALPTConfig(
+            bits=cfg.embedding_bits,
+            rounding="sr",
+            optimizer=tcfg.row_optimizer,
+            weight_decay=tcfg.emb_weight_decay,
+            step_lr=tcfg.alpt_step_lr,
+        ),
+        prune=tcfg.prune,
+    )
 
 
 def init_state(key: jax.Array, cfg: tfm.ModelConfig, tcfg: LMTrainerConfig):
     k1, k2, k3 = jax.random.split(key, 3)
     params = tfm.init_params(k1, cfg)
     opt = adam_init(params)
-    if cfg.embedding_method in ("lpt", "alpt"):
-        table = lpt_mod.init_table(
-            k2, cfg.vocab_size, cfg.d_model, cfg.embedding_bits,
-            init_scale=cfg.d_model**-0.5, optimizer=tcfg.row_optimizer,
-        )
-        table_opt = None
-    else:
-        table = (
-            jax.random.normal(k2, (cfg.vocab_size, cfg.d_model), jnp.float32)
-            * cfg.d_model**-0.5
-        )
-        table_opt = adam_init(table)
+    spec = embedding_spec_of(cfg, tcfg)
+    method = methods.get(spec.method)
+    table = method.init(k2, spec)
+    emb_params = method.trainable_params(table, spec)
+    table_opt = adam_init(emb_params) if emb_params is not None else None
     return LMTrainState(
         params=params, opt=opt, table=table, table_opt=table_opt,
         step=jnp.zeros((), jnp.int32), rng=k3,
     )
 
 
-def table_fp_of(state: LMTrainState, cfg: tfm.ModelConfig) -> jax.Array:
-    if cfg.embedding_method in ("lpt", "alpt"):
-        return lpt_mod.dense_table(state.table)
-    return state.table
-
-
-def _alpt_config(cfg: tfm.ModelConfig, tcfg: LMTrainerConfig) -> alpt_mod.ALPTConfig:
-    return alpt_mod.ALPTConfig(
-        bits=cfg.embedding_bits, rounding="sr",
-        optimizer=tcfg.row_optimizer,
-        weight_decay=tcfg.emb_weight_decay,
-        step_lr=tcfg.alpt_step_lr,
-    )
+def table_fp_of(
+    state: LMTrainState, cfg: tfm.ModelConfig,
+    tcfg: LMTrainerConfig | None = None,
+) -> jax.Array:
+    """The [V, d] float table evaluation forwards read."""
+    spec = embedding_spec_of(cfg, tcfg)
+    return methods.get(spec.method).eval_table(state.table, spec)
 
 
 def make_grad_fn(cfg: tfm.ModelConfig, tcfg: LMTrainerConfig):
     """Per-(micro)batch backward: (state, batch) -> ((loss, aux), grads) with
-    ``grads = (g_table, g_params)``.  The de-quantized table and its gradient
-    stay vocab-sharded via ``hint`` (identity off-mesh)."""
+    ``grads = (g_emb, g_params)``; ``g_emb`` mirrors the method's
+    ``dense_params`` (for integer tables: the de-quantized table, kept
+    vocab-sharded via the method's ``hint_dense_params``)."""
+    spec = embedding_spec_of(cfg, tcfg)
+    method = methods.get(spec.method)
 
     def grad_fn(state: LMTrainState, batch: dict[str, jax.Array]):
-        table_fp = hint(table_fp_of(state, cfg), "embed_table")
+        emb_params = method.hint_dense_params(
+            method.dense_params(state.table, spec)
+        )
 
-        def loss_of(table_fp, params):
+        def loss_of(emb_params, params):
+            table_fp = method.dense_table_from(state.table, emb_params, spec)
             loss, aux = tfm.loss_fn(params, table_fp, batch, cfg)
             return loss, aux
 
-        (loss, aux), (g_table, g_params) = jax.value_and_grad(
+        (loss, aux), (g_emb, g_params) = jax.value_and_grad(
             loss_of, argnums=(0, 1), has_aux=True
-        )(table_fp, state.params)
-        g_table = hint(g_table, "embed_table")
-        return (loss, aux), (g_table, g_params)
+        )(emb_params, state.params)
+        g_emb = method.hint_dense_params(g_emb)
+        return (loss, aux), (g_emb, g_params)
 
     return grad_fn
 
@@ -112,13 +134,14 @@ def make_grad_fn(cfg: tfm.ModelConfig, tcfg: LMTrainerConfig):
 def make_delta_grad_fn(cfg: tfm.ModelConfig, tcfg: LMTrainerConfig):
     """Per-(micro)batch ALPT Delta gradient:
     ``(w_new, step_vec, params, batch, gscale) -> g_step``."""
-    acfg = _alpt_config(cfg, tcfg)
+    spec = embedding_spec_of(cfg, tcfg)
+    method = methods.get(spec.method)
 
     def delta_fn(w_new, step_vec, params, batch, gscale):
-        return alpt_mod.dense_delta_grad(
+        return method.dense_delta_grad(
             w_new, step_vec,
             lambda t: tfm.loss_fn(params, t, batch, cfg)[0],
-            cfg=acfg, gscale=gscale,
+            spec=spec, weight_decay=tcfg.emb_weight_decay, gscale=gscale,
         )
 
     return delta_fn
@@ -131,7 +154,8 @@ def make_apply_fn(cfg: tfm.ModelConfig, tcfg: LMTrainerConfig):
     ``delta_grad(w_new, step_vec, new_params, gscale) -> g_step`` supplies the
     (possibly all-reduced) ALPT Delta gradient; ``batch_rows`` is the paper's
     b — the GLOBAL batch's token count, sharding-independent."""
-    method = cfg.embedding_method
+    spec = embedding_spec_of(cfg, tcfg)
+    method = methods.get(spec.method)
 
     def apply_fn(state: LMTrainState, loss_aux, grads, *, lr, rng, kn,
                  delta_grad=None, batch_rows=None):
@@ -142,38 +166,24 @@ def make_apply_fn(cfg: tfm.ModelConfig, tcfg: LMTrainerConfig):
             g_params, state.opt, state.params, lr,
             weight_decay=tcfg.weight_decay,
         )
-
-        if method == "fp":
-            new_table, new_table_opt = adam_update(
-                g_table, state.table_opt, state.table, lr,
-                weight_decay=tcfg.emb_weight_decay,
-            )
-        elif method == "lpt":
-            new_table = lpt_mod.dense_apply(
-                state.table, g_table, lr=lr, bits=cfg.embedding_bits,
-                rounding="sr", noise_key=kn, optimizer=tcfg.row_optimizer,
-                weight_decay=tcfg.emb_weight_decay,
-            )
-            new_table_opt = None
-        else:  # alpt
-            acfg = _alpt_config(cfg, tcfg)
-            table = state.table
-            upd = alpt_mod.dense_weight_update(table, g_table, cfg=acfg, lr=lr)
-            gscale = alpt_mod.grad_scale_factor(
-                acfg, batch_rows=int(batch_rows), dim=table.dim
-            )
+        wrapped = None
+        if delta_grad is not None:
             # Algorithm 1 line 4: loss at the UPDATED dense params.
-            g_step = delta_grad(upd.w_new, table.step, new_params, gscale)
-            new_table = alpt_mod.dense_finish(
-                table, upd, g_step, cfg=acfg, noise_key=kn
-            )
-            new_table_opt = None
+            def wrapped(w_new, step_vec, gscale):
+                return delta_grad(w_new, step_vec, new_params, gscale)
+
+        new_table, new_table_opt, emb_aux = method.dense_update(
+            state.table, state.table_opt, g_table, spec=spec, lr=lr,
+            weight_decay=tcfg.emb_weight_decay, noise_key=kn,
+            delta_grad=wrapped, batch_rows=batch_rows,
+        )
 
         metrics = {
             "loss": loss,
             "aux_loss": aux,
             "grad_norm": gnorm,
             "lr": lr,
+            **emb_aux,
         }
         return (
             LMTrainState(
@@ -218,12 +228,12 @@ def make_train_step(
     the paper's b (ALPT Delta gradient scale) counts the GLOBAL batch's
     token lookups, not one replica's shard.
     """
+    method = methods.get(cfg.embedding_method)
     lr_at = make_lr_fn(tcfg, lr_schedule)
     grad_fn = make_grad_fn(cfg, tcfg)
     apply_fn = make_apply_fn(cfg, tcfg)
     delta_fn = (
-        make_delta_grad_fn(cfg, tcfg)
-        if cfg.embedding_method == "alpt" else None
+        make_delta_grad_fn(cfg, tcfg) if method.has_learned_step else None
     )
 
     def train_step(state: LMTrainState, batch: dict[str, jax.Array]):
@@ -249,6 +259,30 @@ def make_train_step(
         )
 
     return train_step
+
+
+def wrap_host_refresh(step_fn, cfg: tfm.ModelConfig, tcfg: LMTrainerConfig):
+    """Host-side periodic table refresh around a (jitted) LM step — the
+    DeepLight mask recomputation for ``method.has_host_refresh`` (prune).
+    Identity for every other method, so drivers can apply it unconditionally
+    AFTER jit (the refresh clock is host-driven, like the CTR trainer's
+    ``wrap_host_refresh``)."""
+    spec = embedding_spec_of(cfg, tcfg)
+    method = methods.get(spec.method)
+    if not method.has_host_refresh:
+        return step_fn
+    refresh = jax.jit(lambda t: method.host_refresh(t, spec))
+    every = method.refresh_every(spec)
+
+    def step_with_refresh(state, batch):
+        state, m = step_fn(state, batch)
+        step = int(state.step)
+        table = method.host_sync(state.table, step, spec)
+        if step % every == 0:
+            table = refresh(table)
+        return state._replace(table=table), m
+
+    return step_with_refresh
 
 
 def make_eval_step(cfg: tfm.ModelConfig):

@@ -1,0 +1,532 @@
+"""Frozen PRE-REFACTOR trainer step implementations (string dispatch).
+
+These are verbatim copies of the per-method ``if`` ladders that lived in
+``CTRTrainer._build_train_step`` / ``build_grad_fn`` / ``build_apply_fn`` /
+``build_delta_grad_fn`` and the LM trainer's ``make_grad_fn`` /
+``make_apply_fn`` / ``make_train_step`` before the ``repro.methods`` registry
+redesign, kept ONLY as the reference side of the bitwise step-parity tests
+(tests/test_method_registry_parity.py).  Do not extend them — new methods go
+in ``repro/methods/``.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alpt as alpt_mod
+from repro.core import lpt as lpt_mod
+from repro.core import quant
+from repro.dist import collectives
+from repro.dist.context import hint
+from repro.models import ctr as ctr_models
+from repro.models import embedding as emb_mod
+from repro.models import transformer as tfm
+from repro.optim import adam_update, clip_by_global_norm
+from repro.training.ctr_trainer import TrainState
+from repro.training.data_parallel import (
+    _DELTA_SALT,
+    _base_key,
+    _combine_leaf_stacked,
+    _combine_tree_stacked,
+    _reshape_shards,
+    _resolve,
+)
+from repro.training.lm_trainer import LMTrainState
+
+FLOAT_METHODS = ("fp", "lsq", "pact", "hash", "prune")
+
+
+# ------------------------------------------------------------- CTR (fused)
+
+
+def legacy_ctr_train_step(trainer):
+    """The pre-registry ``CTRTrainer._build_train_step`` (fp/float, lpt, alpt)."""
+    spec = trainer.spec
+    method = spec.method
+    self = trainer
+
+    if method in FLOAT_METHODS:
+
+        @jax.jit
+        def step_fn(state, ids, labels):
+            lr = self._lr_at(state.step)
+            rng, kd = jax.random.split(state.rng)
+            emb_params = emb_mod.trainable_params(state.emb_state, spec)
+
+            def loss_fn(emb_params, dense_params):
+                emb_state = emb_mod.with_params(state.emb_state, emb_params, spec)
+                rows = emb_mod.lookup(emb_state, ids, spec)
+                logits = self._logits_from_rows(rows, dense_params, kd)
+                return ctr_models.bce_loss(logits, labels)
+
+            loss, (g_emb, g_dense) = jax.value_and_grad(loss_fn, (0, 1))(
+                emb_params, state.dense_params
+            )
+            new_dense, dense_opt = adam_update(
+                g_dense, state.dense_opt, state.dense_params, lr
+            )
+            new_emb_params, emb_opt = adam_update(
+                g_emb, state.emb_opt, emb_params, lr,
+                weight_decay=self.cfg.emb_weight_decay,
+            )
+            emb_state = emb_mod.with_params(state.emb_state, new_emb_params, spec)
+            return (
+                TrainState(emb_state, new_dense, dense_opt, emb_opt,
+                           state.step + 1, rng),
+                {"loss": loss, "lr": lr},
+            )
+
+        return step_fn
+
+    if method == "lpt":
+
+        @jax.jit
+        def step_fn(state, ids, labels):
+            lr = self._lr_at(state.step)
+            rng, kd, kn = jax.random.split(state.rng, 3)
+            rows0 = lpt_mod.lookup(state.emb_state, ids)
+
+            def loss_fn(rows, dense_params):
+                logits = self._logits_from_rows(rows, dense_params, kd)
+                return ctr_models.bce_loss(logits, labels)
+
+            loss, (g_rows, g_dense) = jax.value_and_grad(loss_fn, (0, 1))(
+                rows0, state.dense_params
+            )
+            new_dense, dense_opt = adam_update(
+                g_dense, state.dense_opt, state.dense_params, lr
+            )
+            emb_state = lpt_mod.sparse_apply(
+                state.emb_state, ids, g_rows,
+                lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
+                noise_key=kn, optimizer=spec.row_optimizer,
+                weight_decay=self.cfg.emb_weight_decay,
+            )
+            return (
+                TrainState(emb_state, new_dense, dense_opt, None,
+                           state.step + 1, rng),
+                {"loss": loss, "lr": lr},
+            )
+
+        return step_fn
+
+    if method == "alpt":
+
+        @jax.jit
+        def step_fn(state, ids, labels):
+            lr = self._lr_at(state.step)
+            rng, kd, kn = jax.random.split(state.rng, 3)
+            rows0 = lpt_mod.lookup(state.emb_state, ids)
+
+            def loss_rows_dense(rows, dense_params):
+                logits = self._logits_from_rows(rows, dense_params, kd)
+                return ctr_models.bce_loss(logits, labels)
+
+            loss, g_dense = jax.value_and_grad(
+                lambda dp: loss_rows_dense(rows0, dp)
+            )(state.dense_params)
+            new_dense, dense_opt = adam_update(
+                g_dense, state.dense_opt, state.dense_params, lr
+            )
+            emb_state, loss2, aux = alpt_mod.alpt_step(
+                state.emb_state,
+                ids,
+                lambda rows: loss_rows_dense(rows, state.dense_params),
+                cfg=spec.alpt._replace(
+                    weight_decay=self.cfg.emb_weight_decay,
+                    optimizer=spec.row_optimizer,
+                ),
+                lr=lr,
+                noise_key=kn,
+                loss_fn_step2=lambda rows: loss_rows_dense(rows, new_dense),
+            )
+            return (
+                TrainState(emb_state, new_dense, dense_opt, None,
+                           state.step + 1, rng),
+                {"loss": loss2, "lr": lr, **aux},
+            )
+
+        return step_fn
+
+    raise ValueError(f"unknown method {method!r}")
+
+
+# ------------------------------------------------- CTR (grad/apply pieces)
+
+
+def legacy_ctr_grad_fn(trainer):
+    spec = trainer.spec
+    self = trainer
+
+    if spec.method in FLOAT_METHODS:
+
+        def grad_fn(state, ids, labels, kd):
+            emb_params = emb_mod.trainable_params(state.emb_state, spec)
+
+            def loss_fn(emb_params, dense_params):
+                emb_state = emb_mod.with_params(state.emb_state, emb_params, spec)
+                rows = emb_mod.lookup(emb_state, ids, spec)
+                logits = self._logits_from_rows(rows, dense_params, kd)
+                return ctr_models.bce_loss(logits, labels)
+
+            return jax.value_and_grad(loss_fn, (0, 1))(
+                emb_params, state.dense_params
+            )
+
+        return grad_fn
+
+    def grad_fn(state, ids, labels, kd):
+        table_fp = lpt_mod.dense_table(state.emb_state)
+
+        def loss_fn(table_fp, dense_params):
+            rows = jnp.take(table_fp, ids, axis=0)
+            logits = self._logits_from_rows(rows, dense_params, kd)
+            return ctr_models.bce_loss(logits, labels)
+
+        return jax.value_and_grad(loss_fn, (0, 1))(
+            table_fp, state.dense_params
+        )
+
+    return grad_fn
+
+
+def legacy_ctr_apply_fn(trainer):
+    spec = trainer.spec
+    self = trainer
+    method = spec.method
+
+    if method in FLOAT_METHODS:
+
+        def apply_fn(state, loss, grads, *, lr, rng, kn=None,
+                     delta_grad=None, batch_rows=None):
+            g_emb, g_dense = grads
+            new_dense, dense_opt = adam_update(
+                g_dense, state.dense_opt, state.dense_params, lr
+            )
+            emb_params = emb_mod.trainable_params(state.emb_state, spec)
+            new_emb_params, emb_opt = adam_update(
+                g_emb, state.emb_opt, emb_params, lr,
+                weight_decay=self.cfg.emb_weight_decay,
+            )
+            emb_state = emb_mod.with_params(
+                state.emb_state, new_emb_params, spec
+            )
+            return (
+                TrainState(emb_state, new_dense, dense_opt, emb_opt,
+                           state.step + 1, rng),
+                {"loss": loss, "lr": lr},
+            )
+
+        return apply_fn
+
+    if method == "lpt":
+
+        def apply_fn(state, loss, grads, *, lr, rng, kn,
+                     delta_grad=None, batch_rows=None):
+            g_table, g_dense = grads
+            new_dense, dense_opt = adam_update(
+                g_dense, state.dense_opt, state.dense_params, lr
+            )
+            emb_state = lpt_mod.dense_apply(
+                state.emb_state, g_table,
+                lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
+                noise_key=kn, optimizer=spec.row_optimizer,
+                weight_decay=self.cfg.emb_weight_decay,
+            )
+            return (
+                TrainState(emb_state, new_dense, dense_opt, None,
+                           state.step + 1, rng),
+                {"loss": loss, "lr": lr},
+            )
+
+        return apply_fn
+
+    if method == "alpt":
+
+        def apply_fn(state, loss, grads, *, lr, rng, kn,
+                     delta_grad, batch_rows):
+            g_table, g_dense = grads
+            new_dense, dense_opt = adam_update(
+                g_dense, state.dense_opt, state.dense_params, lr
+            )
+            table = state.emb_state
+            acfg = spec.alpt._replace(
+                weight_decay=self.cfg.emb_weight_decay,
+                optimizer=spec.row_optimizer,
+            )
+            upd = alpt_mod.dense_weight_update(table, g_table, cfg=acfg, lr=lr)
+            gscale = alpt_mod.grad_scale_factor(
+                acfg, batch_rows=int(batch_rows), dim=table.dim
+            )
+            g_step = delta_grad(upd.w_new, table.step, new_dense, gscale)
+            new_table = alpt_mod.dense_finish(
+                table, upd, g_step, cfg=acfg, noise_key=kn
+            )
+            aux = {
+                "step_grad_norm": jnp.linalg.norm(g_step),
+                "mean_step": jnp.mean(new_table.step),
+            }
+            return (
+                TrainState(new_table, new_dense, dense_opt, None,
+                           state.step + 1, rng),
+                {"loss": loss, "lr": lr, **aux},
+            )
+
+        return apply_fn
+
+    raise ValueError(f"unknown method {method!r}")
+
+
+def legacy_ctr_delta_fn(trainer):
+    spec = trainer.spec
+    self = trainer
+
+    def delta_fn(w_new, step_vec, dense_params, ids, labels, kd, gscale):
+        def loss_wrt_step(step_vec):
+            table_q = quant.fake_quant_lsq(
+                jax.lax.stop_gradient(w_new), step_vec, spec.bits, gscale
+            )
+            rows = jnp.take(table_q, ids, axis=0)
+            logits = self._logits_from_rows(rows, dense_params, kd)
+            return ctr_models.bce_loss(logits, labels)
+
+        return jax.grad(loss_wrt_step)(step_vec)
+
+    return delta_fn
+
+
+def legacy_ctr_microbatch_step(trainer, n_shards, dp=None):
+    """Pre-registry ``make_ctr_microbatch_step`` wired to the legacy pieces."""
+    dp = _resolve(dp, trainer.cfg.dp_sync_bits)
+    grad_fn = legacy_ctr_grad_fn(trainer)
+    apply_fn = legacy_ctr_apply_fn(trainer)
+    delta_fn = (
+        legacy_ctr_delta_fn(trainer) if trainer.spec.method == "alpt" else None
+    )
+    base = _base_key(dp)
+
+    def step(state, ids, labels):
+        lr = trainer._lr_at(state.step)
+        rng, kd, kn = jax.random.split(state.rng, 3)
+        ids_s = _reshape_shards(ids, n_shards)
+        labels_s = _reshape_shards(labels, n_shards)
+
+        def body(carry, shard):
+            loss, grads = grad_fn(state, shard[0], shard[1], kd)
+            return carry, (loss, grads)
+
+        _, (losses, grad_stacks) = jax.lax.scan(body, None, (ids_s, labels_s))
+        key = jax.random.fold_in(base, state.step)
+        grads = _combine_tree_stacked(grad_stacks, key, dp)
+        loss = collectives.exact_pmean_stacked(losses)
+
+        delta_grad = None
+        if delta_fn is not None:
+            def delta_grad(w_new, step_vec, new_dense, gscale):
+                def body2(carry, shard):
+                    g = delta_fn(
+                        w_new, step_vec, new_dense, shard[0], shard[1], kd,
+                        gscale,
+                    )
+                    return carry, g
+
+                _, g_stack = jax.lax.scan(body2, None, (ids_s, labels_s))
+                return _combine_leaf_stacked(
+                    g_stack, jax.random.fold_in(key, _DELTA_SALT), dp
+                )
+
+        return apply_fn(
+            state, loss, grads, lr=lr, rng=rng, kn=kn,
+            delta_grad=delta_grad, batch_rows=ids.size,
+        )
+
+    return jax.jit(step, donate_argnums=(0,))
+
+
+# --------------------------------------------------------------------- LM
+
+
+def _legacy_alpt_config(cfg, tcfg):
+    return alpt_mod.ALPTConfig(
+        bits=cfg.embedding_bits, rounding="sr",
+        optimizer=tcfg.row_optimizer,
+        weight_decay=tcfg.emb_weight_decay,
+        step_lr=tcfg.alpt_step_lr,
+    )
+
+
+def legacy_table_fp_of(state, cfg):
+    if cfg.embedding_method in ("lpt", "alpt"):
+        return lpt_mod.dense_table(state.table)
+    return state.table
+
+
+def legacy_lm_grad_fn(cfg, tcfg):
+    def grad_fn(state, batch):
+        table_fp = hint(legacy_table_fp_of(state, cfg), "embed_table")
+
+        def loss_of(table_fp, params):
+            loss, aux = tfm.loss_fn(params, table_fp, batch, cfg)
+            return loss, aux
+
+        (loss, aux), (g_table, g_params) = jax.value_and_grad(
+            loss_of, argnums=(0, 1), has_aux=True
+        )(table_fp, state.params)
+        g_table = hint(g_table, "embed_table")
+        return (loss, aux), (g_table, g_params)
+
+    return grad_fn
+
+
+def legacy_lm_delta_grad_fn(cfg, tcfg):
+    acfg = _legacy_alpt_config(cfg, tcfg)
+
+    def delta_fn(w_new, step_vec, params, batch, gscale):
+        return alpt_mod.dense_delta_grad(
+            w_new, step_vec,
+            lambda t: tfm.loss_fn(params, t, batch, cfg)[0],
+            cfg=acfg, gscale=gscale,
+        )
+
+    return delta_fn
+
+
+def legacy_lm_apply_fn(cfg, tcfg):
+    method = cfg.embedding_method
+
+    def apply_fn(state, loss_aux, grads, *, lr, rng, kn,
+                 delta_grad=None, batch_rows=None):
+        loss, aux = loss_aux
+        g_table, g_params = grads
+        g_params, gnorm = clip_by_global_norm(g_params, tcfg.grad_clip)
+        new_params, new_opt = adam_update(
+            g_params, state.opt, state.params, lr,
+            weight_decay=tcfg.weight_decay,
+        )
+
+        if method == "fp":
+            new_table, new_table_opt = adam_update(
+                g_table, state.table_opt, state.table, lr,
+                weight_decay=tcfg.emb_weight_decay,
+            )
+        elif method == "lpt":
+            new_table = lpt_mod.dense_apply(
+                state.table, g_table, lr=lr, bits=cfg.embedding_bits,
+                rounding="sr", noise_key=kn, optimizer=tcfg.row_optimizer,
+                weight_decay=tcfg.emb_weight_decay,
+            )
+            new_table_opt = None
+        else:  # alpt
+            acfg = _legacy_alpt_config(cfg, tcfg)
+            table = state.table
+            upd = alpt_mod.dense_weight_update(table, g_table, cfg=acfg, lr=lr)
+            gscale = alpt_mod.grad_scale_factor(
+                acfg, batch_rows=int(batch_rows), dim=table.dim
+            )
+            g_step = delta_grad(upd.w_new, table.step, new_params, gscale)
+            new_table = alpt_mod.dense_finish(
+                table, upd, g_step, cfg=acfg, noise_key=kn
+            )
+            new_table_opt = None
+
+        metrics = {
+            "loss": loss,
+            "aux_loss": aux,
+            "grad_norm": gnorm,
+            "lr": lr,
+        }
+        return (
+            LMTrainState(
+                params=new_params, opt=new_opt, table=new_table,
+                table_opt=new_table_opt, step=state.step + 1, rng=rng,
+            ),
+            metrics,
+        )
+
+    return apply_fn
+
+
+def legacy_lm_train_step(cfg, tcfg, lr_schedule=None, *, grad_sync=None,
+                         step_grad_sync=None, dp_size=1):
+    grad_fn = legacy_lm_grad_fn(cfg, tcfg)
+    apply_fn = legacy_lm_apply_fn(cfg, tcfg)
+    delta_fn = (
+        legacy_lm_delta_grad_fn(cfg, tcfg)
+        if cfg.embedding_method == "alpt" else None
+    )
+
+    def lr_at(step):
+        if lr_schedule is None:
+            return jnp.asarray(tcfg.lr, jnp.float32)
+        return lr_schedule(step)
+
+    def train_step(state, batch):
+        lr = lr_at(state.step)
+        rng, kn = jax.random.split(state.rng)
+        loss_aux, grads = grad_fn(state, batch)
+        if grad_sync is not None:
+            grads = grad_sync(grads, state.step)
+
+        delta_grad = None
+        if delta_fn is not None:
+            def delta_grad(w_new, step_vec, new_params, gscale):
+                g_step = delta_fn(w_new, step_vec, new_params, batch, gscale)
+                if step_grad_sync is not None:
+                    g_step = step_grad_sync(g_step, state.step)
+                return g_step
+
+        return apply_fn(
+            state, loss_aux, grads, lr=lr, rng=rng, kn=kn,
+            delta_grad=delta_grad,
+            batch_rows=int(batch["labels"].size) * dp_size,
+        )
+
+    return train_step
+
+
+def legacy_lm_microbatch_step(cfg, tcfg, n_shards, dp=None):
+    """Pre-registry ``make_lm_microbatch_step`` wired to the legacy pieces."""
+    dp = _resolve(dp, tcfg.dp_sync_bits)
+    grad_fn = legacy_lm_grad_fn(cfg, tcfg)
+    apply_fn = legacy_lm_apply_fn(cfg, tcfg)
+    delta_fn = (
+        legacy_lm_delta_grad_fn(cfg, tcfg)
+        if cfg.embedding_method == "alpt" else None
+    )
+    base = _base_key(dp)
+
+    def step(state, batch):
+        lr = jnp.asarray(tcfg.lr, jnp.float32)
+        rng, kn = jax.random.split(state.rng)
+        batch_s = jax.tree.map(
+            functools.partial(_reshape_shards, n_shards=n_shards), batch
+        )
+
+        def body(carry, shard):
+            return carry, grad_fn(state, shard)
+
+        _, ((losses, auxes), grad_stacks) = jax.lax.scan(body, None, batch_s)
+        key = jax.random.fold_in(base, state.step)
+        grads = _combine_tree_stacked(grad_stacks, key, dp)
+        loss = collectives.exact_pmean_stacked(losses)
+        aux = jax.tree.map(collectives.exact_pmean_stacked, auxes)
+
+        delta_grad = None
+        if delta_fn is not None:
+            def delta_grad(w_new, step_vec, new_params, gscale):
+                def body2(carry, shard):
+                    return carry, delta_fn(
+                        w_new, step_vec, new_params, shard, gscale
+                    )
+
+                _, g_stack = jax.lax.scan(body2, None, batch_s)
+                return _combine_leaf_stacked(
+                    g_stack, jax.random.fold_in(key, _DELTA_SALT), dp
+                )
+
+        return apply_fn(
+            state, (loss, aux), grads, lr=lr, rng=rng, kn=kn,
+            delta_grad=delta_grad, batch_rows=int(batch["labels"].size),
+        )
+
+    return jax.jit(step, donate_argnums=(0,))

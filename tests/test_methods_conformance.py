@@ -1,0 +1,190 @@
+"""Per-method conformance suite: every registered embedding method honors the
+``EmbeddingMethod`` protocol — init shapes/dtypes, lookup output, the
+trainable_params/with_params roundtrip, memory accounting, sharding-spec
+structure, checkpoint save/load through checkpoint/manager.py, and a
+one-train-step smoke through both trainer formulations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import methods
+from repro.checkpoint import load_pytree, save_pytree
+from repro.checkpoint.manager import check_embedding_manifest, embedding_manifest
+
+jax.config.update("jax_platform_name", "cpu")
+
+N, D = 103, 8
+ALL_METHODS = methods.available()
+
+
+def spec_of(name):
+    return methods.EmbeddingSpec(method=name, n=N, d=D, bits=8, init_scale=0.05)
+
+
+def state_of(name, seed=0):
+    spec = spec_of(name)
+    return methods.get(name).init(jax.random.PRNGKey(seed), spec), spec
+
+
+def test_registry_has_all_paper_methods_plus_composed():
+    assert set(ALL_METHODS) >= {
+        "fp", "lpt", "alpt", "lsq", "pact", "hash", "prune", "qr_lpt",
+    }
+
+
+def test_unknown_method_raises():
+    with pytest.raises(ValueError, match="unknown embedding method"):
+        methods.get("nope")
+    with pytest.raises(ValueError, match="unknown embedding method"):
+        methods.EmbeddingSpec(method="nope", n=4, d=2).is_integer_table
+
+
+def test_double_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        @methods.register("fp")
+        class Dup(methods.EmbeddingMethod):  # pragma: no cover - never built
+            pass
+
+
+@pytest.mark.parametrize("name", ALL_METHODS)
+def test_lookup_shapes_and_dtypes(name):
+    state, spec = state_of(name)
+    m = methods.get(name)
+    ids = jnp.array([[0, 5, 17], [N - 1, 2, 5]], jnp.int32)
+    rows = m.lookup(state, ids, spec)
+    assert rows.shape == (2, 3, D)
+    assert rows.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(rows)))
+    # Same id -> same row, regardless of position in the batch.
+    np.testing.assert_array_equal(np.asarray(rows[0, 1]), np.asarray(rows[1, 2]))
+
+
+@pytest.mark.parametrize("name", ALL_METHODS)
+def test_trainable_params_roundtrip_and_capability_consistency(name):
+    state, spec = state_of(name)
+    m = methods.get(name)
+    params = m.trainable_params(state, spec)
+    # Integer tables expose no float leaves; float methods must roundtrip.
+    assert (params is None) == m.is_integer_table
+    rebuilt = m.with_params(state, params, spec)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(rebuilt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", ALL_METHODS)
+def test_memory_bytes_positive_and_compressors_compress(name):
+    state, spec = state_of(name)
+    m = methods.get(name)
+    train_b = m.memory_bytes(state, spec, training=True)
+    inf_b = m.memory_bytes(state, spec, training=False)
+    assert train_b > 0 and inf_b > 0
+    fp_bytes = N * D * 4
+    if m.is_integer_table:
+        assert train_b < fp_bytes  # no fp32 master copy, ever
+    if name in ("lsq", "pact"):
+        assert train_b >= fp_bytes and inf_b < fp_bytes
+
+
+@pytest.mark.parametrize("name", ALL_METHODS)
+def test_dense_and_serving_tables_are_full_shape(name):
+    state, spec = state_of(name)
+    m = methods.get(name)
+    for table in (m.eval_table(state, spec), m.serving_table(state, spec)):
+        assert table.shape == (N, D) and table.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", ALL_METHODS)
+def test_table_pspec_mirrors_state_structure(name):
+    state, spec = state_of(name)
+    m = methods.get(name)
+    pspec = m.table_pspec("model", None, row_optimizer="adam")
+    is_p = lambda x: isinstance(x, P)
+    n_spec = len(jax.tree.flatten(pspec, is_leaf=is_p)[0])
+    assert n_spec == len(jax.tree.leaves(state))
+
+
+@pytest.mark.parametrize("name", ALL_METHODS)
+def test_checkpoint_roundtrip_through_manager(name, tmp_path):
+    state, spec = state_of(name)
+    m = methods.get(name)
+    meta = embedding_manifest(spec)
+    assert meta["embedding_method"] == name
+    assert len(meta["embedding_schema"]) == len(jax.tree.leaves(state))
+    save_pytree(state, tmp_path, step=1, extra_meta=meta)
+    restored, manifest = load_pytree(state, tmp_path, step=1)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        if hasattr(a, "dtype"):  # python-scalar leaves restore as 0-d arrays
+            assert a.dtype == np.asarray(b).dtype  # int8 codes stay int8
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert check_embedding_manifest(manifest, spec) == []
+    # A different method (or geometry) must be flagged, not silently loaded.
+    other = "lpt" if name != "lpt" else "fp"
+    assert check_embedding_manifest(manifest, spec_of(other))
+
+
+@pytest.mark.parametrize("name", ALL_METHODS)
+def test_one_train_step_both_formulations(name):
+    """Every method takes one fused step and one dense-formulation
+    (microbatched grad/apply) step through the unmodified CTRTrainer."""
+    from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
+    from repro.models.ctr import DCNConfig
+    from repro.training import data_parallel as dpm
+    from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+
+    data_cfg = CTRDatasetConfig(
+        name="conf", n_fields=4, cardinalities=(17, 29, 11, 41),
+        teacher_rank=3, seed=7,
+    )
+    data = CTRSynthetic(data_cfg)
+    spec = methods.EmbeddingSpec(
+        method=name, n=data_cfg.n_features, d=8, bits=8, init_scale=0.05
+    )
+    dcn = DCNConfig(n_fields=4, emb_dim=8, cross_depth=1, mlp_widths=(16,))
+    tr = CTRTrainer(TrainerConfig(spec=spec, model="dcn", dcn=dcn, lr=1e-3))
+    ids, labels = data.batch("train", 0, 16)
+
+    fused_state, m1 = tr.train_step(tr.init_state(), ids, labels)
+    micro = dpm.make_ctr_microbatch_step(tr, 2, dpm.DPConfig(sync_bits=8))
+    micro_state, m2 = micro(tr.init_state(), jnp.asarray(ids),
+                            jnp.asarray(labels))
+    for m in (m1, m2):
+        assert np.isfinite(float(m["loss"]))
+    # The step must actually move the state (lookup of a touched id changes).
+    method = methods.get(name)
+    before = method.lookup(tr.init_state().emb_state, ids[:1], spec)
+    after = method.lookup(fused_state.emb_state, ids[:1], spec)
+    assert not np.array_equal(np.asarray(before), np.asarray(after))
+
+
+def test_lm_prune_mask_refresh_actually_prunes():
+    """The LM path honors has_host_refresh: with an aggressive DeepLight
+    schedule the vocab table's mask must leave the all-ones init (the
+    schedule clock is host-driven, like the CTR trainer's wrapper)."""
+    import dataclasses
+
+    from repro import configs
+    from repro.configs.common import concrete_batch
+    from repro.core import pruning
+    from repro.training import lm_trainer
+
+    cfg = configs.smoke_config("smollm-135m")
+    cfg = dataclasses.replace(cfg, embedding_method="prune")
+    tcfg = lm_trainer.LMTrainerConfig(
+        lr=1e-3,
+        prune=pruning.PruneConfig(
+            target_sparsity=0.5, warmup_steps=0, update_every=1,
+            damping=0.5, damping_steps=1,
+        ),
+    )
+    step = lm_trainer.wrap_host_refresh(
+        jax.jit(lm_trainer.make_train_step(cfg, tcfg)), cfg, tcfg
+    )
+    state = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    batch = concrete_batch(cfg, batch=4, seq=16)
+    for _ in range(3):
+        state, _ = step(state, batch)
+    assert int(state.table.step) == 3  # host_sync drives the schedule clock
+    sparsity = float(pruning.sparsity(state.table))
+    assert sparsity > 0.1, sparsity
