@@ -1,0 +1,208 @@
+"""End-to-end train-step benchmark: kernels-on vs kernels-off, CTR and LM.
+
+Measures us/step and models the embedding-path HBM bytes for
+{ctr, lm} x {kernels on, off} x bits {4, 8}, asserting the kernels-on path
+runs with ZERO shape fallbacks (the configs are pad_to_tiles-aligned), and
+writes ``BENCH_PR4.json`` at the repo root — the first entry in the repo's
+perf trajectory; later PRs append cells to the same schema.
+
+Two caveats the numbers carry explicitly:
+
+* off-TPU the kernels run under the Pallas *interpreter*, so the CPU
+  ``us_per_step`` of the kernels-on cells measures interpreter overhead, not
+  TPU speed (``backend``/``interpret`` are recorded per run).  The number
+  that transfers to TPU is ``embed_bytes_per_step`` — the kernels are
+  memory-bound, so bytes moved is the roofline.
+* ``embed_bytes_per_step`` is an analytic model of the embedding hot path
+  (documented per formula below), not an HLO measurement: it counts operand +
+  result bytes of each op the step runs, which is what the fused kernels
+  change.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.e2e_step_bench            # full
+  PYTHONPATH=src python -m benchmarks.e2e_step_bench --smoke    # CI artifact
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro import configs, methods
+from repro.configs.common import concrete_batch
+from repro.core.alpt import ALPTConfig
+from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
+from repro.kernels import ops
+from repro.models.ctr import DCNConfig
+from repro.training import lm_trainer
+from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+
+OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR4.json"
+
+CTR_DATA = CTRDatasetConfig(
+    name="bench-ctr", n_fields=24,
+    cardinalities=tuple([97, 41, 13, 211, 89, 53, 17, 149, 61, 29, 103, 43,
+                         19, 157, 71, 31, 11, 223, 83, 37, 23, 131, 59, 47]),
+    teacher_rank=6, seed=1,
+)
+CTR_D = 16
+CTR_BATCH = 256
+
+
+def ctr_embed_bytes(n_ids: int, d: int, on: bool) -> int:
+    """Embedding bytes per CTR sparse step (operand + result accounting).
+
+    Shared by both paths (K = n_ids unique-row slots):
+      lookup: K*d codes in (1B) + K*d f32 rows out (4B)
+      update: K*d each of grad/noise/mu/nu in (4B), codes in (1B),
+              codes out (1B) + mu/nu out (4B each) + w_new out (4B)
+    The unfused path additionally materializes the gathered codes, the
+    de-quantized f32 rows and the pre-requantize f32 rows in HBM (+9B/elem) —
+    exactly the intermediates the fused kernels keep in VMEM.
+    """
+    per_elem = (1 + 4) + (4 + 4 + 4 + 4 + 1) + (1 + 4 + 4 + 4)
+    if not on:
+        per_elem += 1 + 4 + 4
+    return n_ids * d * per_elem
+
+
+def lm_embed_bytes(vocab: int, d: int, on: bool) -> int:
+    """Embedding bytes per LM dense step (write-back only; the forward's
+    dense-table materialization is identical on both paths).
+
+    Unfused: de-quantized table f32 out+in (8B) + updated table f32 out+in
+    (8B) + requantized codes out (1B) + codes in (1B) = 18B/elem.
+    Fused ``ops.lpt_update``: codes in (1B) + direction in (4B) + noise in
+    (4B) + codes out (1B) = 10B/elem — the fp32 table never round-trips.
+    """
+    per_elem = 10 if on else 18
+    return vocab * d * per_elem
+
+
+def _bench_loop(step_fn, state, batches, warmup: int = 1):
+    for i in range(warmup):
+        state, m = step_fn(state, *batches[i % len(batches)])
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for i in range(len(batches)):
+        state, m = step_fn(state, *batches[i])
+    jax.block_until_ready(m["loss"])
+    return (time.perf_counter() - t0) / len(batches) * 1e6
+
+
+def run_ctr(bits: int, use_kernels: bool, steps: int) -> dict:
+    # Fresh traces per cell: dispatch (and therefore fallback/kernel-call
+    # accounting, which counts distinct traces) must not leak across cells.
+    jax.clear_caches()
+    data = CTRSynthetic(CTR_DATA)
+    spec = methods.EmbeddingSpec(
+        method="lpt", n=CTR_DATA.n_features, d=CTR_D, bits=bits,
+        init_scale=0.05, alpt=ALPTConfig(bits=bits),
+        use_kernels=use_kernels, pad_to_tiles=True,
+    )
+    dcn = DCNConfig(n_fields=CTR_DATA.n_fields, emb_dim=CTR_D, cross_depth=2,
+                    mlp_widths=(128, 64))
+    tr = CTRTrainer(TrainerConfig(spec=spec, model="dcn", dcn=dcn, lr=1e-3))
+    state = tr.init_state()
+    batches = [data.batch("train", i, CTR_BATCH) for i in range(steps)]
+    ops.reset_fallback_stats()
+    us = _bench_loop(tr.train_step, state, batches)
+    stats = ops.fallback_stats()
+    return {
+        "us_per_step": round(us, 1),
+        "embed_bytes_per_step": ctr_embed_bytes(
+            CTR_BATCH * CTR_DATA.n_fields, spec.d_padded, use_kernels
+        ),
+        "shape_fallbacks": stats["total_fallbacks"],
+        "kernel_calls": stats["kernel_calls"],
+        "table_rows": spec.n_padded,
+        "ids_per_step": CTR_BATCH * CTR_DATA.n_fields,
+    }
+
+
+def run_lm(bits: int, use_kernels: bool, steps: int) -> dict:
+    jax.clear_caches()
+    cfg = dataclasses.replace(
+        configs.smoke_config("smollm-135m"),
+        embedding_method="lpt", embedding_bits=bits,
+    )
+    tcfg = lm_trainer.LMTrainerConfig(
+        lr=1e-3, use_kernels=use_kernels, pad_to_tiles=True
+    )
+    step = jax.jit(lm_trainer.make_train_step(cfg, tcfg))
+    state = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    batch = concrete_batch(cfg, batch=4, seq=64)
+    spec = lm_trainer.embedding_spec_of(cfg, tcfg)
+    ops.reset_fallback_stats()
+
+    def step2(state, batch):
+        return step(state, batch)
+
+    us = _bench_loop(step2, state, [(batch,)] * steps)
+    stats = ops.fallback_stats()
+    return {
+        "us_per_step": round(us, 1),
+        "embed_bytes_per_step": lm_embed_bytes(
+            spec.n_padded, spec.d_padded, use_kernels
+        ),
+        "shape_fallbacks": stats["total_fallbacks"],
+        "kernel_calls": stats["kernel_calls"],
+        "vocab_rows": spec.n_padded,
+    }
+
+
+def run(steps_ctr: int = 20, steps_lm: int = 8) -> dict:
+    cells = {}
+    for workload, runner, steps in (
+        ("ctr", run_ctr, steps_ctr), ("lm", run_lm, steps_lm)
+    ):
+        for bits in (4, 8):
+            for on in (True, False):
+                cell = runner(bits, on, steps)
+                name = f"{workload}/bits{bits}/kernels_{'on' if on else 'off'}"
+                cells[name] = cell
+                emit(f"e2e/{name}", cell["us_per_step"],
+                     f"embed_bytes={cell['embed_bytes_per_step']} "
+                     f"fallbacks={cell['shape_fallbacks']}")
+                if on and cell["shape_fallbacks"]:
+                    raise SystemExit(
+                        f"{name}: kernels-on hit {cell['shape_fallbacks']} "
+                        f"shape fallbacks — the benchmark configs must be "
+                        f"tile-aligned: {ops.fallback_stats()['fallbacks']}"
+                    )
+    return cells
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short loops (CI artifact)")
+    ap.add_argument("--out", default=str(OUT_PATH))
+    args = ap.parse_args(argv)
+    cells = run(steps_ctr=5 if args.smoke else 20,
+                steps_lm=3 if args.smoke else 8)
+    doc = {
+        "schema": "repro/e2e_step_bench/v1",
+        "pr": 4,
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "note": (
+            "us_per_step on CPU measures the Pallas interpreter for the "
+            "kernels-on cells; embed_bytes_per_step is the number that "
+            "transfers to TPU (memory-bound ops)"
+        ),
+        "cells": cells,
+    }
+    pathlib.Path(args.out).write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"[e2e_step_bench] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

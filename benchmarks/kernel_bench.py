@@ -17,36 +17,76 @@ from repro.kernels import ops, ref
 def _time(fn, *args, iters=5):
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / iters * 1e6
+    return (time.perf_counter() - t0) / iters * 1e6
 
 
 def run():
-    key = jax.random.PRNGKey(0)
+    # One fresh subkey per array: no two benchmark inputs share a stream.
+    keys = iter(jax.random.split(jax.random.PRNGKey(0), 20))
     n, d, b = 100_000, 128, 4096
-    codes = jax.random.randint(key, (n, d), -128, 128, jnp.int8)
-    step = jax.random.uniform(key, (n,), minval=1e-3, maxval=0.1)
-    ids = jax.random.randint(key, (b,), 0, n, jnp.int32)
+    codes = jax.random.randint(next(keys), (n, d), -128, 128, jnp.int8)
+    step = jax.random.uniform(next(keys), (n,), minval=1e-3, maxval=0.1)
+    ids = jax.random.randint(next(keys), (b,), 0, n, jnp.int32)
     us = _time(lambda *a: ops.dequant_gather(*a), codes, step, ids)
     us_ref = _time(lambda *a: ref.dequant_gather_ref(*a), codes, step, ids)
     moved = b * d * (1 + 4) + b * 4  # int8 in, f32 out
     emit("kernel/dequant_gather", us,
          f"ref_us={us_ref:.1f} bytes={moved} int8_vs_f32_read=4.0x")
 
-    w = jax.random.normal(key, (4096, 512)) * 0.05
-    st = jax.random.uniform(key, (4096,), minval=1e-3, maxval=0.05)
-    noise = jax.random.uniform(key, (4096, 512))
+    w = jax.random.normal(next(keys), (4096, 512)) * 0.05
+    st = jax.random.uniform(next(keys), (4096,), minval=1e-3, maxval=0.05)
+    noise = jax.random.uniform(next(keys), (4096, 512))
     us = _time(lambda *a: ops.sr_round(*a, 8), w, st, noise)
     us_ref = _time(lambda *a: ref.sr_round_ref(*a, 8), w, st, noise)
     emit("kernel/sr_round", us,
          f"ref_us={us_ref:.1f} bytes={4096*512*(4+4+1)} writeback_int8=4x_smaller")
 
-    x = jax.random.normal(key, (256, 2048), jnp.bfloat16)
-    wc = jax.random.randint(key, (2048, 2048), -128, 128, jnp.int8)
-    ws = jax.random.uniform(key, (2048,), minval=1e-3, maxval=0.02)
+    # Fused dense write-back (Eq. 8): codes in/out are the only table bytes.
+    codes_sq = jax.random.randint(next(keys), (4096, 512), -128, 128, jnp.int8)
+    grad = jax.random.normal(next(keys), (4096, 512)) * 0.1
+    us = _time(
+        lambda *a: ops.lpt_update(*a, 8), codes_sq, st, grad, noise,
+        jnp.float32(0.01),
+    )
+    us_ref = _time(
+        lambda *a: ref.lpt_fused_update_ref(*a, 0.01, 8), codes_sq, st, grad,
+        noise,
+    )
+    fused_b = 4096 * 512 * (1 + 4 + 4 + 1)  # codes in, grad+noise in, codes out
+    unfused_b = 4096 * 512 * (1 + 4 + 4 + 4 + 4 + 4 + 1)  # + 3 fp32 round-trips
+    emit("kernel/lpt_update", us,
+         f"ref_us={us_ref:.1f} bytes={fused_b} "
+         f"unfused_bytes={unfused_b} traffic_saved={unfused_b/fused_b:.1f}x")
+
+    # Fused CTR sparse step over unique rows (gather+Adam+SR+scatter).
+    # Table scaled down vs the gather bench: the interpreter walks the grid
+    # row by row, and the derived bytes column is size-linear anyway.
+    ns, kk, dd = 20_000, 512, 128
+    mu = jax.random.normal(next(keys), (ns, dd)) * 0.01
+    nu = jax.random.uniform(next(keys), (ns, dd)) * 1e-3
+    codes_k = jax.random.randint(next(keys), (ns, dd), -128, 128, jnp.int8)
+    step_k = jax.random.uniform(next(keys), (ns,), minval=1e-3, maxval=0.1)
+    uniq = jax.random.permutation(next(keys), ns)[:kk].astype(jnp.int32)
+    g_rows = jax.random.normal(next(keys), (kk, dd)) * 0.1
+    nz = jax.random.uniform(next(keys), (kk, dd))
+    args = (codes_k, step_k, mu, nu, uniq, g_rows, nz,
+            jnp.float32(0.01), jnp.float32(0.1), jnp.float32(1e-3), 8)
+    us = _time(lambda *a: ops.sparse_row_update(*a), *args)
+    us_ref = _time(
+        lambda *a: ops.sparse_row_update(*a, use_kernel=False), *args
+    )
+    row_b = kk * dd * (1 + 4 + 4 + 4 + 4 + 1 + 4 + 4 + 4)
+    emit("kernel/sparse_row_update", us,
+         f"ref_us={us_ref:.1f} touched_row_bytes={row_b} "
+         f"rows={kk} fp32_table_never_in_hbm=1")
+
+    x = jax.random.normal(next(keys), (256, 2048), jnp.bfloat16)
+    wc = jax.random.randint(next(keys), (2048, 2048), -128, 128, jnp.int8)
+    ws = jax.random.uniform(next(keys), (2048,), minval=1e-3, maxval=0.02)
     us = _time(lambda *a: ops.dequant_matmul(*a), x, wc, ws)
     us_ref = _time(lambda *a: ref.dequant_matmul_ref(*a), x, wc, ws)
     flops = 2 * 256 * 2048 * 2048

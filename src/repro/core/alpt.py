@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lpt, quant
+from repro.kernels import ops
 
 
 class ALPTConfig(NamedTuple):
@@ -34,6 +35,9 @@ class ALPTConfig(NamedTuple):
     step_lr: float = 2e-5  # paper: Delta learning rate 2e-5
     step_weight_decay: float = 5e-8  # paper: same decay as embeddings (8-bit)
     grad_scale: str = "bdq"  # '1' | 'dq' | 'bdq'  (Fig. 4 sweep)
+    # Route the lookup / write-back hot loops through repro.kernels.ops
+    # (methods copy EmbeddingSpec.use_kernels in here; bitwise-identical).
+    use_kernels: bool = False
 
 
 def grad_scale_factor(cfg: ALPTConfig, batch_rows: int, dim: int) -> float:
@@ -56,6 +60,8 @@ def alpt_step(
     lr: jax.Array,
     noise_key: jax.Array,
     loss_fn_step2: Callable[[jax.Array], jax.Array] | None = None,
+    id_space: int | None = None,
+    out_dim: int | None = None,
 ):
     """One ALPT update of a table against ``loss_fn(rows) -> scalar``.
 
@@ -68,14 +74,22 @@ def alpt_step(
     Algorithm 1 for the embedding table.  Algorithm 1 line 4 evaluates the
     step-size loss at the *updated* dense params w_o^{t+1}; pass that closure
     as ``loss_fn_step2`` (defaults to ``loss_fn``).
+
+    ``id_space``/``out_dim`` carry the live geometry of ``pad_to_tiles``
+    tables (dedup sentinel and model-facing row width); the paper's b and d
+    count live lookups, not padding.
     """
     if loss_fn_step2 is None:
         loss_fn_step2 = loss_fn
     d = table.dim
+    d_live = d if out_dim is None else out_dim
     n = table.n_rows
+    sentinel = n if id_space is None else id_space
 
     # ---- Step 1: de-quantize, get row gradients, float update. ----
-    rows = lpt.lookup(table, ids)  # w_hat_b^t
+    rows = lpt.lookup(
+        table, ids, use_kernels=cfg.use_kernels, out_dim=out_dim
+    )  # w_hat_b^t
     loss, g_rows = jax.value_and_grad(loss_fn)(rows)
     table1, (uniq, w_new) = lpt.sparse_apply(
         table,
@@ -88,14 +102,16 @@ def alpt_step(
         optimizer=cfg.optimizer,
         weight_decay=cfg.weight_decay,
         return_updated_rows=True,
+        id_space=id_space,
+        use_kernels=cfg.use_kernels,
     )
     # ---- Step 2: learn Delta on the *updated* float rows (line 4). ----
     # Re-run the forward with fake-quantized updated rows; the LSQ custom-vjp
     # routes the gradient to Delta via Eq. 7.
     safe = jnp.minimum(uniq, n - 1)
     step_b = jnp.take(table.step, safe)  # Delta_b^t
-    gscale = grad_scale_factor(cfg, batch_rows=int(ids.size), dim=d)
-    inv = lpt.dedup_ids(ids, n)[1]
+    gscale = grad_scale_factor(cfg, batch_rows=int(ids.size), dim=d_live)
+    inv = lpt.dedup_ids(ids, sentinel)[1]
 
     def loss_wrt_step(step_vec):
         rows_q = quant.fake_quant_lsq(
@@ -103,6 +119,8 @@ def alpt_step(
         )
         # Re-broadcast unique rows back to per-occurrence layout for the loss.
         occ = jnp.take(rows_q, inv, axis=0).reshape(ids.shape + (d,))
+        if d_live != d:
+            occ = occ[..., :d_live]
         return loss_fn_step2(occ)
 
     g_step = jax.grad(loss_wrt_step)(step_b)
@@ -114,9 +132,14 @@ def alpt_step(
     # ---- Line 5: re-quantize w^{t+1} with the NEW Delta (SR). ----
     k2 = jax.random.fold_in(noise_key, 1)
     noise = quant.sr_noise(k2, w_new.shape)
-    codes_rows = quant.quantize_codes(
-        w_new, new_step_b, cfg.bits, cfg.rounding, noise
-    )
+    if cfg.use_kernels and cfg.rounding == "sr":
+        codes_rows = ops.sr_round(w_new, new_step_b, noise, cfg.bits)
+    else:
+        if cfg.use_kernels:
+            ops.note_fallback("sr_round", w_new.shape, "dr rounding")
+        codes_rows = quant.quantize_codes(
+            w_new, new_step_b, cfg.bits, cfg.rounding, noise
+        )
     codes = table1.codes.at[uniq].set(codes_rows, mode="drop")
     step = table1.step.at[uniq].set(new_step_b, mode="drop")
     new_table = table1._replace(codes=codes, step=step)
@@ -194,9 +217,17 @@ def dense_finish(
     new_step = jnp.where(upd.touched, new_step, table.step)
 
     noise = quant.sr_noise(jax.random.fold_in(noise_key, 1), upd.w_new.shape)
-    codes_new = quant.quantize_codes(
-        upd.w_new, new_step, cfg.bits, cfg.rounding, noise
-    )
+    if cfg.use_kernels and cfg.rounding == "sr":
+        # Algorithm 1 line 5 already materialized w_new for the Delta
+        # gradient, so the fused piece here is the SR write-back itself
+        # (fp32 in, int8 out — no intermediate rounding buffers).
+        codes_new = ops.sr_round(upd.w_new, new_step, noise, cfg.bits)
+    else:
+        if cfg.use_kernels:
+            ops.note_fallback("sr_round", upd.w_new.shape, "dr rounding")
+        codes_new = quant.quantize_codes(
+            upd.w_new, new_step, cfg.bits, cfg.rounding, noise
+        )
     mask = upd.touched[:, None]
     codes = jnp.where(mask, codes_new, table.codes)
     if table.mu.ndim == 2:

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
+from repro.kernels import ops
 
 
 class LPTTable(NamedTuple):
@@ -61,6 +62,7 @@ def init_table(
     step_size: float | None = None,
     clip_value: float | None = None,
     optimizer: str = "adam",
+    use_kernels: bool = False,
 ) -> LPTTable:
     """Initialize weights ~ N(mean, init_scale^2), choose Delta, quantize.
 
@@ -81,7 +83,10 @@ def init_table(
     else:
         step = quant.init_step_size(w, bits, per_row=True)
     noise = quant.sr_noise(kn, w.shape)
-    codes = quant.quantize_codes(w, step, bits, "sr", noise)
+    if use_kernels:
+        codes = ops.sr_round(w, step, noise, bits)
+    else:
+        codes = quant.quantize_codes(w, step, bits, "sr", noise)
     if optimizer == "adam":
         mu = jnp.zeros((n, d), jnp.float32)
         nu = jnp.zeros((n, d), jnp.float32)
@@ -96,11 +101,31 @@ def init_table(
     return LPTTable(codes=codes, step=step, mu=mu, nu=nu, count=jnp.zeros((), jnp.int32))
 
 
-def lookup(table: LPTTable, ids: jax.Array) -> jax.Array:
-    """De-quantize the rows for ``ids`` (any leading shape) -> f32 [..., d]."""
-    codes = jnp.take(table.codes, ids, axis=0)
-    step = jnp.take(table.step, ids, axis=0)
-    return quant.dequantize(codes, step)
+def lookup(
+    table: LPTTable,
+    ids: jax.Array,
+    *,
+    use_kernels: bool = False,
+    out_dim: int | None = None,
+) -> jax.Array:
+    """De-quantize the rows for ``ids`` (any leading shape) -> f32 [..., d].
+
+    ``use_kernels`` routes through the fused gather+dequantize Pallas kernel
+    (``ops.dequant_gather``: int8 rows leave HBM, the fp table never
+    materializes); the jnp path is bitwise-identical.  ``out_dim`` slices
+    padded tables back to the live embedding width (``pad_to_tiles``).
+    """
+    if use_kernels:
+        flat = ids.reshape(-1)
+        rows = ops.dequant_gather(table.codes, table.step, flat)
+        rows = rows.reshape(ids.shape + (table.dim,))
+    else:
+        codes = jnp.take(table.codes, ids, axis=0)
+        step = jnp.take(table.step, ids, axis=0)
+        rows = quant.dequantize(codes, step)
+    if out_dim is not None and out_dim != rows.shape[-1]:
+        rows = rows[..., :out_dim]
+    return rows
 
 
 def dense_table(table: LPTTable) -> jax.Array:
@@ -111,6 +136,34 @@ def dense_table(table: LPTTable) -> jax.Array:
 # ---------------------------------------------------------------------------
 # Row-update rules (shared by the sparse and dense paths).
 # ---------------------------------------------------------------------------
+
+
+def _opt_direction(
+    g: jax.Array,  # f32 [k, d] summed row gradients
+    mu: jax.Array,
+    nu: jax.Array,
+    t: jax.Array,  # scalar f32, 1-indexed adam step
+    optimizer: str,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+):
+    """Weight-independent part of the row update: (direction, mu_new, nu_new).
+
+    The fused kernels consume the direction and fold the decoupled weight
+    decay + subtraction + re-quantization into one VMEM pass.
+    """
+    g = g.astype(jnp.float32)
+    if optimizer == "adam":
+        mu = b1 * mu + (1.0 - b1) * g
+        nu = b2 * nu + (1.0 - b2) * jnp.square(g)
+        upd = (mu / (1.0 - b1**t)) / (jnp.sqrt(nu / (1.0 - b2**t)) + eps)
+    elif optimizer == "adagrad":
+        nu = nu + jnp.mean(jnp.square(g), axis=-1)
+        upd = g / (jnp.sqrt(nu)[..., None] + eps)
+    else:  # sgd
+        upd = g
+    return upd, mu, nu
 
 
 def _row_update(
@@ -127,16 +180,7 @@ def _row_update(
     eps: float = 1e-8,
 ):
     """Returns (w_new, mu_new, nu_new)."""
-    g = g.astype(jnp.float32)
-    if optimizer == "adam":
-        mu = b1 * mu + (1.0 - b1) * g
-        nu = b2 * nu + (1.0 - b2) * jnp.square(g)
-        upd = (mu / (1.0 - b1**t)) / (jnp.sqrt(nu / (1.0 - b2**t)) + eps)
-    elif optimizer == "adagrad":
-        nu = nu + jnp.mean(jnp.square(g), axis=-1)
-        upd = g / (jnp.sqrt(nu)[..., None] + eps)
-    else:  # sgd
-        upd = g
+    upd, mu, nu = _opt_direction(g, mu, nu, t, optimizer, b1, b2, eps)
     if weight_decay:
         upd = upd + weight_decay * w
     return w - lr * upd, mu, nu
@@ -168,26 +212,82 @@ def sparse_apply(
     weight_decay: float = 0.0,
     new_step: jax.Array | None = None,  # ALPT passes the freshly learned Delta_b
     return_updated_rows: bool = False,
+    id_space: int | None = None,  # sentinel for dedup (< n_rows on padded tables)
+    use_kernels: bool = False,
 ):
     """Paper-faithful LPT update: only rows present in ``ids`` change.
 
     Duplicate ids in the batch have their gradients summed (the same semantics
     autodiff would give a dense table scatter-add).
+
+    ``id_space`` is the logical id range (``spec.n``); on ``pad_to_tiles``
+    tables it is smaller than ``n_rows``, which turns the dedup sentinel into
+    a real-but-dead *scratch row* — the precondition for the fused
+    ``ops.sparse_row_update`` kernel, whose ids-driven aliased scatter must
+    never point outside the table.  ``use_kernels`` routes the
+    gather+Adam+SR+scatter loop through that kernel when eligible (SR
+    rounding, row-Adam, no ALPT ``new_step``, scratch row present); anything
+    else falls back to the jnp path below, which is bitwise-compatible on
+    every live row (scratch-row bytes are unspecified scratch on both paths).
     """
     n = table.n_rows
     d = table.dim
+    sentinel = n if id_space is None else id_space
     flat_ids = ids.reshape(-1)
-    flat_g = grad_rows.reshape(-1, d)
-    uniq, inv = dedup_ids(flat_ids, n)
+    flat_g = grad_rows.reshape(-1, grad_rows.shape[-1]).astype(jnp.float32)
+    if flat_g.shape[-1] != d:
+        # Live-width cotangents against a pad_to_tiles table: the tail
+        # columns were never looked up, so their gradient is exactly zero.
+        flat_g = jnp.pad(flat_g, ((0, 0), (0, d - flat_g.shape[-1])))
+    uniq, inv = dedup_ids(flat_ids, sentinel)
     k = uniq.shape[0]
     # Sum gradients per unique row.
-    g_sum = jnp.zeros((k, d), jnp.float32).at[inv].add(flat_g.astype(jnp.float32))
+    g_sum = jnp.zeros((k, d), jnp.float32).at[inv].add(flat_g)
+    count = table.count + 1
+    t = count.astype(jnp.float32)
+
+    kernel_ok = False
+    if use_kernels:
+        # Eligibility gate for the fused kernel; an ineligible kernels-on
+        # dispatch is a counted fallback, never a silent one.
+        if rounding != "sr":
+            ops.note_fallback("sparse_row_update", (n, d), "dr rounding")
+        elif optimizer != "adam":
+            ops.note_fallback(
+                "sparse_row_update", (n, d), f"row optimizer {optimizer!r}"
+            )
+        elif new_step is not None:
+            ops.note_fallback(
+                "sparse_row_update", (n, d), "caller-supplied new_step"
+            )
+        elif sentinel >= n:  # no scratch row for the aliased scatter
+            ops.note_fallback(
+                "sparse_row_update", (n, d),
+                "no scratch row past the id space (pad_to_tiles off)",
+            )
+        else:
+            kernel_ok = True
+    if kernel_ok:
+        if noise_key is None:
+            raise ValueError("SR requires noise_key")
+        noise = quant.sr_noise(noise_key, (k, d))
+        c1 = 1.0 - 0.9**t
+        c2 = 1.0 - 0.999**t
+        codes2, mu2, nu2, w_new = ops.sparse_row_update(
+            table.codes, table.step, table.mu, table.nu, uniq, g_sum, noise,
+            lr, c1, c2, bits, weight_decay=weight_decay,
+        )
+        new_table = LPTTable(
+            codes=codes2, step=table.step, mu=mu2, nu=nu2, count=count
+        )
+        if return_updated_rows:
+            return new_table, (uniq, w_new)
+        return new_table
+
     # Gather current rows + optimizer slots (sentinel gathers row 0 harmlessly;
     # its scatter is dropped).
     safe = jnp.minimum(uniq, n - 1)
     w = quant.dequantize(jnp.take(table.codes, safe, axis=0), jnp.take(table.step, safe))
-    count = table.count + 1
-    t = count.astype(jnp.float32)
     # Slot layout is optimizer-dependent ([k, d] adam / [k] otherwise) but the
     # gather is row-indexed either way.
     mu = jnp.take(table.mu, safe, axis=0)
@@ -224,28 +324,51 @@ def dense_apply(
     optimizer: str = "adam",
     weight_decay: float = 0.0,
     new_step: jax.Array | None = None,
+    use_kernels: bool = False,
 ) -> LPTTable:
     """pjit-friendly LPT update: dense compute, touched-row masking.
 
     A row is "touched" iff any element of its gradient is nonzero; untouched
     rows keep their codes/slots bit-identical (exact sparse semantics, but the
     computation is dense and therefore shards trivially over the vocab axis).
+
+    ``use_kernels`` routes the write-back through the fused
+    ``ops.lpt_update`` kernel — the optimizer *direction* is formed in jnp
+    (it needs only the gradient and the Adam/Adagrad slots), then one VMEM
+    pass de-quantizes, applies the decayed step and SR-requantizes without
+    ever materializing the fp32 table in HBM (Eq. 8 in one kernel, including
+    ALPT's ``new_step`` requantize-with-learned-Delta).
     """
     touched = jnp.any(grad_table != 0.0, axis=-1)  # [n]
-    w = dense_table(table)
     count = table.count + 1
     t = count.astype(jnp.float32)
-    w_new, mu_new, nu_new = _row_update(
-        w, grad_table, table.mu, table.nu, t, lr, optimizer, weight_decay
-    )
     step = table.step if new_step is None else new_step
-    if rounding == "sr":
+    if use_kernels and rounding != "sr":
+        ops.note_fallback("lpt_update", table.codes.shape, "dr rounding")
+    if use_kernels and rounding == "sr":
         if noise_key is None:
             raise ValueError("SR requires noise_key")
-        noise = quant.sr_noise(noise_key, w_new.shape)
+        upd, mu_new, nu_new = _opt_direction(
+            grad_table, table.mu, table.nu, t, optimizer
+        )
+        noise = quant.sr_noise(noise_key, grad_table.shape)
+        codes_new = ops.lpt_update(
+            table.codes, table.step, upd, noise, lr, bits,
+            new_step=None if new_step is None else step,
+            weight_decay=weight_decay,
+        )
     else:
-        noise = None
-    codes_new = quant.quantize_codes(w_new, step, bits, rounding, noise)
+        w = dense_table(table)
+        w_new, mu_new, nu_new = _row_update(
+            w, grad_table, table.mu, table.nu, t, lr, optimizer, weight_decay
+        )
+        if rounding == "sr":
+            if noise_key is None:
+                raise ValueError("SR requires noise_key")
+            noise = quant.sr_noise(noise_key, w_new.shape)
+        else:
+            noise = None
+        codes_new = quant.quantize_codes(w_new, step, bits, rounding, noise)
     mask = touched[:, None]
     codes = jnp.where(mask, codes_new, table.codes)
     if table.mu.ndim == 2:

@@ -18,6 +18,36 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
+from repro.kernels import ops as kernel_ops
+
+
+def _as_2d(x: jax.Array) -> jax.Array:
+    """Collapse a gradient leaf to the [rows, lanes] layout the SR kernel
+    tiles over (1-D / scalar leaves become a single row)."""
+    if x.ndim >= 2:
+        return x.reshape(-1, x.shape[-1])
+    return x.reshape(1, -1) if x.ndim == 1 else x.reshape(1, 1)
+
+
+def _sr_codes(grad, step, noise, bits: int, use_kernels: bool) -> jax.Array:
+    """SR-quantize ``grad`` against the shared scalar ``step``.
+
+    Kernels-on this is the fused clip+round+pack pass (``ops.sr_round``,
+    bitwise-identical to ``quant.quantize_codes``).  Leaves whose 2-D view
+    has fewer rows than a sublane (biases, norm scales) are *structurally*
+    untileable — no padding knob can fix a (1, L) gradient — so they take
+    the jnp path directly rather than being counted as actionable
+    fallbacks; genuinely misaligned table-shaped leaves still fall back
+    inside the wrapper, counted and logged.
+    """
+    if not use_kernels:
+        return quant.quantize_codes(grad, step, bits, "sr", noise)
+    g2 = _as_2d(grad.astype(jnp.float32))
+    if g2.shape[0] < kernel_ops.SUBLANE:
+        return quant.quantize_codes(grad, step, bits, "sr", noise)
+    step_rows = jnp.broadcast_to(step, (g2.shape[0],))
+    codes = kernel_ops.sr_round(g2, step_rows, _as_2d(noise), bits)
+    return codes.reshape(grad.shape)
 
 
 def _linear_rank(axis) -> jax.Array:
@@ -34,13 +64,16 @@ def compressed_psum_local(
     axis,
     key: jax.Array,
     bits: int = 8,
+    use_kernels: bool = False,
 ) -> jax.Array:
     """SR-quantized psum of ``grad`` over the named mesh axis ``axis``.
 
     Returns the (approximate) sum in float32.  Per-element error is bounded by
     ``n_ranks * step`` with ``step = pmax(|grad|) / (2^{bits-1} - 1)`` — under
     2% relative for int8 — and is mean-zero because each rank folds its rank
-    index into ``key`` (decorrelated SR noise).
+    index into ``key`` (decorrelated SR noise).  ``use_kernels`` runs the SR
+    quantize through the fused Pallas pass (bitwise-identical either way, so
+    the single-device stacked twins hold at every setting).
     """
     _, p = quant.code_bounds(bits)
     # One shared step size per reduction: pmax so every rank scales alike.
@@ -49,7 +82,7 @@ def compressed_psum_local(
     noise = quant.sr_noise(
         jax.random.fold_in(key, _linear_rank(axis)), grad.shape
     )
-    codes = quant.quantize_codes(grad, step, bits, "sr", noise)
+    codes = _sr_codes(grad, step, noise, bits, use_kernels)
     total = jax.lax.psum(codes.astype(jnp.int32), axis)
     return total.astype(jnp.float32) * step
 
@@ -59,10 +92,12 @@ def compressed_pmean_local(
     axis,
     key: jax.Array,
     bits: int = 8,
+    use_kernels: bool = False,
 ) -> jax.Array:
     """Mean-reducing variant of :func:`compressed_psum_local`."""
     axes = axis if isinstance(axis, (tuple, list)) else (axis,)
-    total = compressed_psum_local(grad, axis, key, bits=bits)
+    total = compressed_psum_local(grad, axis, key, bits=bits,
+                                  use_kernels=use_kernels)
     size = 1
     for a in axes:
         size = size * jax.lax.axis_size(a)

@@ -22,10 +22,16 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(codes_ref, step_ref, grad_ref, noise_ref, new_step_ref, lr_ref,
-            out_ref, *, lo: int, hi: int):
+            out_ref, *, lo: int, hi: int, weight_decay: float):
     codes = codes_ref[...].astype(jnp.float32)
     step = step_ref[...].astype(jnp.float32)  # [rb, 1]
-    w = codes * step - lr_ref[0, 0] * grad_ref[...].astype(jnp.float32)
+    w = codes * step
+    upd = grad_ref[...].astype(jnp.float32)
+    if weight_decay:
+        # Decoupled weight decay against the de-quantized weights, in the
+        # same operation order as lpt._row_update (bitwise-parity contract).
+        upd = upd + weight_decay * w
+    w = w - lr_ref[0, 0] * upd
     ns = new_step_ref[...].astype(jnp.float32)
     scaled = jnp.clip(w / ns, lo, hi)
     base = jnp.floor(scaled)
@@ -42,6 +48,7 @@ def lpt_fused_update(
     bits: int,
     *,
     new_step: jax.Array | None = None,  # f32 [R] (ALPT's Delta'); default step
+    weight_decay: float = 0.0,  # decoupled decay vs the de-quantized weights
     row_block: int = 256,
     col_block: int = 512,
     interpret: bool = False,
@@ -55,7 +62,7 @@ def lpt_fused_update(
         new_step = step
     grid = (rows // rb, cols // cb)
     fn = pl.pallas_call(
-        functools.partial(_kernel, lo=lo, hi=hi),
+        functools.partial(_kernel, lo=lo, hi=hi, weight_decay=weight_decay),
         grid=grid,
         in_specs=[
             pl.BlockSpec((rb, cb), lambda i, j: (i, j)),

@@ -1,33 +1,143 @@
-"""jit'd public wrappers over the Pallas kernels.
+"""jit'd public wrappers over the Pallas kernels — the embedding hot-path API.
 
 ``interpret`` defaults to True off-TPU so the same call sites run everywhere;
-on TPU the compiled kernels are used.  Non-aligned shapes fall back to the
-jnp reference (the kernels demand divisible blocks by design — padding embeds
-the alignment decision in the caller's config, not silently in the op).
+on TPU the compiled kernels are used.  Off-TPU the elementwise kernels run
+with whole-array blocks (one grid step): the tiled decomposition is a TPU
+bandwidth concern, and per-tile interpretation on CPU would only add loop
+overhead without changing a single bit of the result.
+
+Alignment contract: a shape is kernel-eligible when every blocked dimension
+is a multiple of 8 (the fp32 sublane granularity; lane padding to 128 happens
+in VMEM).  Non-eligible shapes fall back to the bitwise-identical jnp
+reference in :mod:`repro.kernels.ref` — *never silently*: every distinct
+(op, shape, reason) fallback is counted and logged once, and
+:func:`fallback_stats` exposes the tally so benchmarks and trainers can
+assert the hot path actually runs fused (``EmbeddingSpec.pad_to_tiles`` is
+the knob that makes real table geometries eligible).
+
+Counting happens at trace time (shapes are static under jit), so the tally
+reflects distinct traced shapes, not per-step call counts.
 """
 from __future__ import annotations
 
+import collections
 import functools
+import logging
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.dequant_gather import dequant_gather as _dequant_gather
 from repro.kernels.dequant_matmul import dequant_matmul as _dequant_matmul
+from repro.kernels.lpt_update import lpt_fused_update as _lpt_fused_update
+from repro.kernels.sparse_row_update import sparse_row_update as _sparse_row_update
 from repro.kernels.sr_round import sr_round as _sr_round
 from repro.kernels.sr_round import sr_round_seeded as sr_round_seeded  # re-export
+
+logger = logging.getLogger("repro.kernels")
+
+#: fp32 sublane granularity — every blocked dimension must divide into it.
+SUBLANE = 8
+#: Preferred (row, col) tile targets on TPU; interpret mode uses whole arrays.
+ROW_BLOCK = 256
+COL_BLOCK = 512
+
+# ---------------------------------------------------------------- accounting
+
+_KERNEL_CALLS: collections.Counter = collections.Counter()
+_FALLBACKS: collections.Counter = collections.Counter()
+
+
+def _note_kernel(op: str) -> None:
+    _KERNEL_CALLS[op] += 1
+
+
+def _note_fallback(op: str, shape, reason: str) -> None:
+    key = (op, str(tuple(shape)), reason)
+    if key not in _FALLBACKS:
+        logger.warning(
+            "kernels.%s: shape %s falls back to the jnp reference (%s)",
+            op, tuple(shape), reason,
+        )
+    _FALLBACKS[key] += 1
+
+
+def note_fallback(op: str, shape, reason: str) -> None:
+    """Public hook for callers that bypass a kernel *before* reaching its
+    wrapper (e.g. lpt.sparse_apply's eligibility gate: no scratch row, non-
+    Adam row optimizer, DR rounding).  Keeps the 'never silent' contract:
+    every kernels-on dispatch that lands on the jnp path is counted."""
+    _note_fallback(op, shape, reason)
+
+
+def fallback_stats() -> dict:
+    """Snapshot of kernel-vs-fallback dispatch since the last reset.
+
+    ``kernel_calls``/``fallbacks`` count distinct *traces* (shapes are static
+    under jit); ``total_fallbacks`` is the number a kernels-on benchmark
+    config asserts to be zero.
+    """
+    return {
+        "kernel_calls": dict(_KERNEL_CALLS),
+        "fallbacks": [
+            {"op": op, "shape": shape, "reason": reason, "count": int(c)}
+            for (op, shape, reason), c in sorted(_FALLBACKS.items())
+        ],
+        "total_fallbacks": int(sum(_FALLBACKS.values())),
+    }
+
+
+def reset_fallback_stats() -> None:
+    _KERNEL_CALLS.clear()
+    _FALLBACKS.clear()
+
+
+# ------------------------------------------------------------------ dispatch
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("d_block", "use_kernel"))
-def dequant_gather(codes, step, ids, *, d_block: int = 512, use_kernel: bool = True):
+def _pick_block(n: int, target: int) -> int | None:
+    """Largest kernel-legal block for a dimension of size ``n`` (None if the
+    dimension is not sublane-aligned)."""
+    if n % SUBLANE:
+        return None
+    if n <= target:
+        return n
+    for b in (target, 512, 256, 128, 64, 32, 16, 8):
+        if b <= target and n % b == 0:
+            return b
+    return None  # unreachable: SUBLANE divides n
+
+
+def _blocks_2d(rows: int, cols: int):
+    if _default_interpret():
+        # Whole-array blocks off-TPU: tiling is a VMEM concern, and per-tile
+        # interpretation only adds loop overhead on CPU.
+        if rows % SUBLANE == 0 and cols % SUBLANE == 0:
+            return rows, cols
+        return None
+    rb = _pick_block(rows, ROW_BLOCK)
+    cb = _pick_block(cols, COL_BLOCK)
+    if rb is None or cb is None:
+        return None
+    return rb, cb
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def dequant_gather(codes, step, ids, *, use_kernel: bool = True):
+    """Fused int8-row gather + de-quantize: f32 [b, d] rows for flat ids."""
     n, d = codes.shape
-    db = min(d_block, d)
-    if not use_kernel or d % db != 0:
+    if not use_kernel:
         return ref.dequant_gather_ref(codes, step, ids)
+    db = d if _default_interpret() else _pick_block(d, COL_BLOCK)
+    if d % SUBLANE or db is None:
+        _note_fallback("dequant_gather", (n, d), "dim not sublane-aligned")
+        return ref.dequant_gather_ref(codes, step, ids)
+    _note_kernel("dequant_gather")
     return _dequant_gather(
         codes, step, ids, d_block=db, interpret=_default_interpret()
     )
@@ -35,13 +145,85 @@ def dequant_gather(codes, step, ids, *, d_block: int = 512, use_kernel: bool = T
 
 @functools.partial(jax.jit, static_argnames=("bits", "use_kernel"))
 def sr_round(w, step, noise, bits: int = 8, *, use_kernel: bool = True):
+    """Fused clip + stochastic-round + int8 pack (Eq. 1/4)."""
     rows, cols = w.shape
-    rb, cb = min(256, rows), min(512, cols)
-    if not use_kernel or rows % rb or cols % cb:
+    if not use_kernel:
         return ref.sr_round_ref(w, step, noise, bits)
+    blocks = _blocks_2d(rows, cols)
+    if blocks is None:
+        _note_fallback("sr_round", (rows, cols), "shape not sublane-aligned")
+        return ref.sr_round_ref(w, step, noise, bits)
+    _note_kernel("sr_round")
     return _sr_round(
-        w, step, noise, bits, row_block=rb, col_block=cb,
+        w, step, noise, bits, row_block=blocks[0], col_block=blocks[1],
         interpret=_default_interpret(),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "weight_decay", "use_kernel")
+)
+def lpt_update(codes, step, grad, noise, lr, bits: int, *, new_step=None,
+               weight_decay: float = 0.0, use_kernel: bool = True):
+    """Fused Eq. (8) write-back: dequantize -> decayed step -> SR requantize.
+
+    ``grad`` is the formed update direction (raw gradient for SGD, the Adam /
+    Adagrad direction otherwise); ``new_step`` requantizes with ALPT's
+    freshly learned Delta in the same pass.
+    """
+    rows, cols = codes.shape
+    if not use_kernel:
+        return ref.lpt_fused_update_ref(
+            codes, step, grad, noise, lr, bits, new_step=new_step,
+            weight_decay=weight_decay,
+        )
+    blocks = _blocks_2d(rows, cols)
+    if blocks is None:
+        _note_fallback("lpt_update", (rows, cols), "shape not sublane-aligned")
+        return ref.lpt_fused_update_ref(
+            codes, step, grad, noise, lr, bits, new_step=new_step,
+            weight_decay=weight_decay,
+        )
+    _note_kernel("lpt_update")
+    return _lpt_fused_update(
+        codes, step, grad, noise, lr, bits, new_step=new_step,
+        weight_decay=weight_decay, row_block=blocks[0], col_block=blocks[1],
+        interpret=_default_interpret(),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "weight_decay", "use_kernel")
+)
+def sparse_row_update(codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2,
+                      bits: int, *, weight_decay: float = 0.0,
+                      use_kernel: bool = True):
+    """Fused CTR sparse step over unique rows (gather+Adam+SR+scatter).
+
+    ``uniq`` must contain only in-range ids — the caller maps jnp.unique's
+    sentinel padding to the table's scratch row (``pad_to_tiles`` allocates
+    it).  Adam slots must be [N, d] (row-Adam); other row optimizers use the
+    jnp path upstream.  Returns ``(codes', mu', nu', w_new_rows)``.
+    """
+    n, d = codes.shape
+    if not use_kernel:
+        return ref.sparse_row_update_ref(
+            codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits,
+            weight_decay=weight_decay,
+        )
+    if d % SUBLANE or d > COL_BLOCK:
+        _note_fallback(
+            "sparse_row_update", (n, d),
+            "dim not sublane-aligned" if d % SUBLANE else "dim exceeds one block",
+        )
+        return ref.sparse_row_update_ref(
+            codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits,
+            weight_decay=weight_decay,
+        )
+    _note_kernel("sparse_row_update")
+    return _sparse_row_update(
+        codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits,
+        weight_decay=weight_decay, interpret=_default_interpret(),
     )
 
 
@@ -54,8 +236,12 @@ def dequant_matmul(
     m, k = x.shape
     n, _ = codes.shape
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
-    if not use_kernel or m % bm or n % bn or k % bk:
+    if not use_kernel:
         return ref.dequant_matmul_ref(x, codes, step)
+    if m % bm or n % bn or k % bk:
+        _note_fallback("dequant_matmul", (m, n, k), "blocks not divisible")
+        return ref.dequant_matmul_ref(x, codes, step)
+    _note_kernel("dequant_matmul")
     return _dequant_matmul(
         x, codes, step, block_m=bm, block_n=bn, block_k=bk,
         interpret=_default_interpret(),

@@ -1,4 +1,10 @@
-"""Pure-jnp oracles for every Pallas kernel (bit-exact where noise is shared)."""
+"""Pure-jnp oracles for every Pallas kernel (bit-exact where noise is shared).
+
+The oracles are also the *fallback* implementations the ``ops`` wrappers run
+on shape-misaligned inputs, so each one mirrors its kernel's exact operation
+sequence (same association, no re-ordered reductions): kernels-on and
+kernels-off must agree bitwise, not just to tolerance.
+"""
 from __future__ import annotations
 
 import jax
@@ -28,11 +34,70 @@ def dequant_matmul_ref(
 def lpt_fused_update_ref(
     codes: jax.Array, step: jax.Array, grad: jax.Array, noise: jax.Array,
     lr, bits: int, new_step: jax.Array | None = None,
+    weight_decay: float = 0.0,
 ) -> jax.Array:
+    """Eq. (8): dequantize -> (decayed) SGD step -> SR re-quantize.
+
+    ``grad`` is the already-formed update *direction* (the raw gradient for
+    SGD, the bias-corrected Adam direction for the row-Adam path);
+    ``weight_decay`` adds the decoupled ``wd * w`` term against the
+    de-quantized weights, matching ``lpt._row_update``'s sequence exactly.
+    """
     lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
-    w = codes.astype(jnp.float32) * step[:, None] - lr * grad.astype(jnp.float32)
+    # Two statements (dequantize, then update) — the same association as the
+    # unfused core path and the kernel body, so XLA's FMA formation cannot
+    # diverge between them.
+    w = codes.astype(jnp.float32) * step[:, None]
+    upd = grad.astype(jnp.float32)
+    if weight_decay:
+        upd = upd + weight_decay * w
+    w = w - lr * upd
     ns = (step if new_step is None else new_step)[:, None]
     scaled = jnp.clip(w / ns, lo, hi)
     base = jnp.floor(scaled)
     up = (scaled - base > noise).astype(jnp.float32)
     return jnp.clip(base + up, lo, hi).astype(jnp.int8)
+
+
+def sparse_row_update_ref(
+    codes: jax.Array,  # int8 [N, d]
+    step: jax.Array,  # f32 [N]
+    mu: jax.Array,  # f32 [N, d] Adam first moment
+    nu: jax.Array,  # f32 [N, d] Adam second moment
+    uniq: jax.Array,  # int32 [K] unique row ids (all < N)
+    g_sum: jax.Array,  # f32 [K, d] summed per-row gradients
+    noise: jax.Array,  # f32 [K, d] uniform [0,1)
+    lr, c1, c2,  # f32 scalars: learning rate, 1-b1^t, 1-b2^t
+    bits: int,
+    *,
+    weight_decay: float = 0.0,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+):
+    """Oracle for the fused CTR sparse step: gather + Adam + SR + scatter.
+
+    Returns ``(codes', mu', nu', w_new_rows)``.  ``uniq`` must hold distinct
+    in-range ids (the wrapper maps jnp.unique's sentinel padding to the
+    table's scratch row before calling either path).
+    """
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    w = jnp.take(codes, uniq, axis=0).astype(jnp.float32) * jnp.take(step, uniq)[:, None]
+    g = g_sum.astype(jnp.float32)
+    mu_r = b1 * jnp.take(mu, uniq, axis=0) + (1.0 - b1) * g
+    nu_r = b2 * jnp.take(nu, uniq, axis=0) + (1.0 - b2) * jnp.square(g)
+    upd = (mu_r / c1) / (jnp.sqrt(nu_r / c2) + eps)
+    if weight_decay:
+        upd = upd + weight_decay * w
+    w_new = w - lr * upd
+    step_rows = jnp.take(step, uniq)[:, None]
+    scaled = jnp.clip(w_new / step_rows, lo, hi)
+    base = jnp.floor(scaled)
+    up = (scaled - base > noise).astype(jnp.float32)
+    codes_rows = jnp.clip(base + up, lo, hi).astype(jnp.int8)
+    return (
+        codes.at[uniq].set(codes_rows),
+        mu.at[uniq].set(mu_r),
+        nu.at[uniq].set(nu_r),
+        w_new,
+    )

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: fused CTR sparse embedding step (paper Eq. 8, row form).
+
+One ``pallas_call`` over the batch's *unique* rows fuses the whole
+``lpt.sparse_apply`` hot loop:
+
+    gather int8 codes + Adam slots  ->  de-quantize  ->  Adam row step
+    ->  SR re-quantize  ->  scatter codes/slots back in place
+
+The scalar-prefetched unique ids drive both the input and the output
+``BlockSpec`` index maps, so each grid step DMAs exactly one touched row in
+and writes that row back (``input_output_aliases`` — the scatter is the
+aliased write, not a separate XLA scatter).  Per touched element the HBM
+traffic is: 1 B codes in, 1 B codes out, 4 B each for the grad / noise / mu /
+nu operands — the de-quantized fp32 rows and the intermediate ``w``/``w_new``
+never exist in HBM.  The updated float rows are emitted as a dense [K, d]
+output because ALPT's Delta sub-step (Algorithm 1 line 4) re-reads them.
+
+Sentinel handling: ``jnp.unique(size=)`` pads with an out-of-range sentinel.
+The caller must point sentinels at a dedicated *scratch row* (the
+``pad_to_tiles`` policy allocates one past the id space) — sentinel steps then
+read/write only that dead row, so duplicate sentinel writes cannot corrupt
+live state under the TPU DMA pipeline.
+
+Adam bias corrections ``c1 = 1 - b1^t`` / ``c2 = 1 - b2^t`` are computed by
+the caller (they are per-step scalars) and prefetched to SMEM with ``lr``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, scal_ref, codes_ref, step_ref, mu_ref, nu_ref, g_ref,
+            noise_ref, out_codes, out_mu, out_nu, out_w, *,
+            lo: int, hi: int, weight_decay: float, b1: float, b2: float,
+            eps: float):
+    lr = scal_ref[0]
+    c1 = scal_ref[1]
+    c2 = scal_ref[2]
+    w = codes_ref[...].astype(jnp.float32) * step_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    mu = b1 * mu_ref[...] + (1.0 - b1) * g
+    nu = b2 * nu_ref[...] + (1.0 - b2) * jnp.square(g)
+    upd = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+    if weight_decay:
+        upd = upd + weight_decay * w
+    w_new = w - lr * upd
+    scaled = jnp.clip(w_new / step_ref[...].astype(jnp.float32), lo, hi)
+    base = jnp.floor(scaled)
+    up = (scaled - base > noise_ref[...]).astype(jnp.float32)
+    out_codes[...] = jnp.clip(base + up, lo, hi).astype(jnp.int8)
+    out_mu[...] = mu
+    out_nu[...] = nu
+    out_w[...] = w_new
+
+
+def sparse_row_update(
+    codes: jax.Array,  # int8 [N, d] (N > every id in uniq, incl. sentinels)
+    step: jax.Array,  # f32 [N]
+    mu: jax.Array,  # f32 [N, d] Adam first moment
+    nu: jax.Array,  # f32 [N, d] Adam second moment
+    uniq: jax.Array,  # int32 [K] unique ids; sentinels mapped to a scratch row
+    g_sum: jax.Array,  # f32 [K, d] summed per-unique-row gradients
+    noise: jax.Array,  # f32 [K, d] uniform [0,1)
+    lr: jax.Array,  # f32 scalar
+    c1: jax.Array,  # f32 scalar 1 - b1^t
+    c2: jax.Array,  # f32 scalar 1 - b2^t
+    bits: int,
+    *,
+    weight_decay: float = 0.0,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    interpret: bool = False,
+):
+    """Returns ``(codes', mu', nu', w_new_rows)`` — table-shaped outputs are
+    the aliased in-place scatters; ``w_new_rows`` is [K, d] f32."""
+    n, d = codes.shape
+    k = uniq.shape[0]
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # (uniq ids, [lr, c1, c2])
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (i, 0)),
+        ],
+    )
+    fn = pl.pallas_call(
+        functools.partial(
+            _kernel, lo=lo, hi=hi, weight_decay=weight_decay, b1=b1, b2=b2,
+            eps=eps,
+        ),
+        grid_spec=spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.int8),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+        ],
+        # Operand indices count the scalar-prefetch args: 2=codes, 4=mu, 5=nu.
+        input_output_aliases={2: 0, 4: 1, 5: 2},
+        interpret=interpret,
+    )
+    scal = jnp.stack(
+        [jnp.asarray(lr, jnp.float32), jnp.asarray(c1, jnp.float32),
+         jnp.asarray(c2, jnp.float32)]
+    )
+    return fn(
+        uniq.astype(jnp.int32), scal, codes, step.reshape(n, 1), mu, nu,
+        g_sum, noise,
+    )

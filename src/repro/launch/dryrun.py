@@ -62,8 +62,8 @@ def arch_dry_config(arch: str, shape_name: str,
     return cfg
 
 
-def make_serve_step(cfg: tfm.ModelConfig):
-    spec = lm_trainer.embedding_spec_of(cfg)
+def make_serve_step(cfg: tfm.ModelConfig, tcfg=None):
+    spec = lm_trainer.embedding_spec_of(cfg, tcfg)
     method = methods.get(spec.method)
 
     def serve_step(params, table, token, cache, cache_len):
@@ -78,7 +78,12 @@ def build_cell(arch: str, shape_name: str, mesh, policy_override=None,
     """Returns (jitted_fn, example_args_shapes) ready to .lower()."""
     shape = common.SHAPES[shape_name]
     cfg = arch_dry_config(arch, shape_name, embedding)
-    tcfg = lm_trainer.LMTrainerConfig()
+    # Lower the UNFUSED path: the interpret-mode Pallas lowering would turn
+    # each kernel into a grid scan in the SPMD module, distorting the
+    # trip-count-aware HLO analysis (and XLA:CPU cannot run the compiled
+    # kernels anyway).  The kernel suite's data movement enters through the
+    # roofline's fused_embedding_adjustment instead.
+    tcfg = lm_trainer.LMTrainerConfig(use_kernels=False)
     multi_pod = "pod" in mesh.axis_names
     pol = sharding.default_policy(arch, multi_pod=multi_pod,
                                   override=policy_override,
@@ -128,7 +133,7 @@ def build_cell(arch: str, shape_name: str, mesh, policy_override=None,
             sharding.table_pspecs(cfg, pol, tcfg.row_optimizer), mesh
         )
         params_sh = sharding.to_named(sharding.param_pspecs(cfg, pol), mesh)
-        serve = make_serve_step(cfg)
+        serve = make_serve_step(cfg, tcfg)
         jitted = jax.jit(
             serve,
             in_shardings=(params_sh, table_sh, tok_sh, cache_sh, scalar_sh),
@@ -267,21 +272,41 @@ def analytic_memory(cfg: tfm.ModelConfig, shape_name: str, n_chips: int,
     }
 
 
-def roofline(hlo_stats: dict, n_chips: int, cfg, shape_name: str) -> dict:
+def roofline(hlo_stats: dict, n_chips: int, cfg, shape_name: str,
+             use_kernels: bool = True, embed_shards: int = 1) -> dict:
     """Three-term roofline from the trip-count-aware HLO analysis.
 
     All inputs are per-device per-step (the SPMD module's shapes are local):
       compute term    = device_FLOPs / peak_FLOP/s
       memory term     = device_HBM_bytes / HBM_bw
       collective term = device_wire_bytes / link_bw
+
+    ``use_kernels`` applies the fused-embedding byte adjustment
+    (hlo_analysis.fused_embedding_adjustment): the lowered HLO carries the
+    unfused write-back, but the kernel path moves 1 B in / 1 B out per code
+    element, so the memory term is corrected to the data movement training
+    actually performs on TPU.
     """
     flops = hlo_stats["flops"]
     mem = hlo_stats["hbm_bytes"]
     interior = hlo_stats.get("attn_interior_bytes", 0.0)
     cbytes = float(hlo_stats["collectives"].get("total", 0))
     compute_s = flops / PEAK_FLOPS
-    # Fused-adjusted: attention/SSD interiors run in VMEM on TPU (Pallas).
-    memory_s = (mem - interior) / HBM_BW
+    embed_delta = 0.0
+    method = methods.get(cfg.embedding_method)
+    if (use_kernels and method.is_integer_table
+            and common.SHAPES[shape_name]["kind"] == "train"):
+        # Every term here is per-device; the write-back delta divides by
+        # however many ways the caller's mesh shards the vocab table
+        # (run_cell passes the mesh's 'model' axis size; 1 = replicated).
+        adj = hlo_analysis.fused_embedding_adjustment(
+            cfg.vocab_size, cfg.d_model,
+            learned_step=method.has_learned_step,
+        )
+        embed_delta = adj["delta_bytes"] / max(embed_shards, 1)
+    # Fused-adjusted: attention/SSD interiors run in VMEM on TPU (Pallas),
+    # and the embedding write-back runs through the fused kernel suite.
+    memory_s = (mem - interior - embed_delta) / HBM_BW
     collective_s = cbytes / LINK_BW
     mf = model_flops(cfg, shape_name)
     hlo_total = flops * n_chips
@@ -289,6 +314,8 @@ def roofline(hlo_stats: dict, n_chips: int, cfg, shape_name: str) -> dict:
         "compute_s": compute_s,
         "memory_s": memory_s,
         "memory_s_raw": mem / HBM_BW,
+        "embed_fused_delta_bytes": embed_delta,
+        "use_kernels": use_kernels,
         "collective_s": collective_s,
         "model_flops": mf,
         "hlo_flops_per_chip": flops,
@@ -309,7 +336,7 @@ def roofline(hlo_stats: dict, n_chips: int, cfg, shape_name: str) -> dict:
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool, policy=None,
-             embedding=None, save: bool = True) -> dict:
+             embedding=None, save: bool = True, use_kernels: bool = True) -> dict:
     skip = configs.skip_shapes(arch)
     mesh_tag = "pod512" if multi_pod else "pod256"
     cell_id = f"{arch}__{shape_name}__{mesh_tag}" + (
@@ -348,7 +375,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, policy=None,
             memory=mem,
             analytic_memory=analytic_memory(cfg, shape_name, n_chips, pol),
             collectives=stats["collectives"],
-            roofline=roofline(stats, n_chips, cfg, shape_name),
+            roofline=roofline(stats, n_chips, cfg, shape_name,
+                              use_kernels=use_kernels,
+                              embed_shards=dict(mesh.shape).get("model", 1)),
         )
         out["fits_16gb_hbm"] = out["analytic_memory"]["fits_16gb"]
         mem_total = mem.get("total_bytes_per_device")
@@ -395,6 +424,11 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--list", action="store_true")
     ap.add_argument("--force", action="store_true", help="re-run cached cells")
+    ap.add_argument(
+        "--no-kernels", action="store_true",
+        help="roofline the unfused embedding write-back (default accounts "
+        "the fused kernel suite's 1B-in/1B-out data movement)",
+    )
     args = ap.parse_args(argv)
 
     cells = []
@@ -428,7 +462,8 @@ def main(argv=None):
             if prev.get("status") in ("ok", "skipped"):
                 print(f"[dryrun] {cell_id}: cached ({prev['status']})")
                 continue
-        res = run_cell(arch, shape, multi_pod=mp, policy=pol, embedding=emb)
+        res = run_cell(arch, shape, multi_pod=mp, policy=pol, embedding=emb,
+                       use_kernels=not args.no_kernels)
         if res["status"] == "error":
             failures += 1
     return 1 if failures else 0

@@ -375,6 +375,41 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
     return analyze(hlo_text)["collectives"]
 
 
+def fused_embedding_adjustment(
+    vocab: int, d: int, *, learned_step: bool = False
+) -> dict[str, float]:
+    """HBM bytes the fused kernel path removes from one table write-back.
+
+    The dry-run lowers the *unfused* jnp path (Pallas does not partition
+    under the XLA:CPU SPMD lowering), so when ``use_kernels`` is on the
+    roofline must re-account the embedding write-back with the kernel
+    suite's data movement.  Per table element, under the analyzer's
+    output-only x2 convention (each kernel result written once, read ~once):
+
+      unfused (three fp32 round-trips through HBM):
+        de-quantized table f32 out (4 B) + updated table f32 out (4 B)
+        + re-quantized codes int8 out (1 B)                       -> 2 x 9 B
+      fused ``ops.lpt_update`` (one VMEM pass):
+        int8 codes out (1 B; the 1 B codes *in* are charged to their
+        producer under output-only accounting)                    -> 2 x 1 B
+      fused + learned step (ALPT): Algorithm 1 line 4 re-reads the updated
+        float rows, so w_new still materializes (4 B out) and only the SR
+        write-back fuses                                          -> 2 x 5 B
+
+    Returns ``{'unfused_bytes', 'fused_bytes', 'delta_bytes'}`` for one
+    full-table pass; the caller scales nothing (the write-back runs once per
+    step) and subtracts ``delta_bytes`` from the HLO memory term.
+    """
+    elems = float(vocab * d)
+    unfused = 2.0 * 9.0 * elems
+    fused = 2.0 * (5.0 if learned_step else 1.0) * elems
+    return {
+        "unfused_bytes": unfused,
+        "fused_bytes": fused,
+        "delta_bytes": unfused - fused,
+    }
+
+
 def memory_summary(compiled) -> dict[str, float]:
     """Bytes-per-device from compiled.memory_analysis() (None-safe)."""
     ma = None

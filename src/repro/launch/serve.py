@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs, methods
+from repro.kernels import ops as kernel_ops
 from repro.models import transformer as tfm
 from repro.training import lm_trainer
 
@@ -47,10 +48,24 @@ class ContinuousBatcher:
         self.batch = batch
         self.max_len = max_len
         # The registered method's serving export: int-code tables de-quantize
-        # on the way out; fp ships as-is (weights never exist in fp32 for
-        # integer-table methods until this point).
+        # on the way out through the fused gather kernel; fp ships as-is
+        # (weights never exist in fp32 for integer-table methods until this
+        # point).  Any shape fallback off the kernel path is surfaced, never
+        # silent.
         spec = lm_trainer.embedding_spec_of(cfg)
-        self.table_fp = methods.get(spec.method).serving_table(table, spec)
+        method = methods.get(spec.method)
+        if method.is_integer_table and spec.use_kernels:
+            # Fallback counting happens at trace time, so this reflects the
+            # export's dispatch when its shapes trace fresh (the serve CLI's
+            # normal case: the batcher is the process's first jit user).  A
+            # process that already traced these shapes under-reports here
+            # rather than paying a process-wide cache flush to re-count.
+            kernel_ops.reset_fallback_stats()
+        self.table_fp = method.serving_table(table, spec)
+        if method.is_integer_table and spec.use_kernels:
+            for fb in kernel_ops.fallback_stats()["fallbacks"]:
+                print(f"[serve] kernel fallback: {fb['op']} {fb['shape']} "
+                      f"({fb['reason']})")
         self._decode = jax.jit(
             functools.partial(tfm.decode_step, cfg=cfg), donate_argnums=(3,)
         )

@@ -40,6 +40,7 @@ from repro.checkpoint.manager import (
 from repro.data.lm_synth import LMTokenStream
 from repro.dist import context as dist_ctx
 from repro.dist import sharding
+from repro.kernels import ops as kernel_ops
 from repro.launch.mesh import make_host_mesh
 from repro.training import data_parallel, lm_trainer
 
@@ -101,6 +102,16 @@ def main(argv=None) -> int:
         "--mesh-model 1",
     )
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument(
+        "--no-kernels", action="store_true",
+        help="disable the fused Pallas embedding hot paths "
+        "(EmbeddingSpec.use_kernels; default on, auto-interpret off-TPU)",
+    )
+    ap.add_argument(
+        "--pad-to-tiles", action="store_true",
+        help="pad the vocab table to kernel-tile geometry so the fused paths "
+        "run without shape fallbacks (EmbeddingSpec.pad_to_tiles)",
+    )
     args = ap.parse_args(argv)
 
     cfg = configs.smoke_config(args.arch) if args.smoke else configs.full_config(args.arch)
@@ -110,6 +121,8 @@ def main(argv=None) -> int:
     tcfg = lm_trainer.LMTrainerConfig(
         lr=args.lr,
         dp_sync_bits=args.dp_compress_bits if dp_mode else 32,
+        use_kernels=not args.no_kernels,
+        pad_to_tiles=args.pad_to_tiles,
     )
 
     if dp_mode and args.mesh_model != 1:
@@ -262,6 +275,14 @@ def main(argv=None) -> int:
             "straggler_steps": watchdog.flagged,
             "steps": len(losses),
         }
+        if not args.no_kernels:
+            # Explicit fallback accounting: surface any embedding op that
+            # silently would have missed the fused path (never silent).
+            stats = kernel_ops.fallback_stats()
+            summary["kernel_fallbacks"] = stats["total_fallbacks"]
+            for fb in stats["fallbacks"]:
+                print(f"[train] kernel fallback: {fb['op']} {fb['shape']} "
+                      f"({fb['reason']}) — consider --pad-to-tiles")
         print("[train] done:", json.dumps(summary))
         return 0
 

@@ -2,7 +2,10 @@
 
 Inherits the LPT table/state handling; overrides the train-step pieces with
 the two-substep schedule (weight update, then Delta learned via a second
-fake-quant forward at the *updated* dense params).
+fake-quant forward at the *updated* dense params).  ``spec.use_kernels``
+flows into :class:`~repro.core.alpt.ALPTConfig` so both sub-steps run fused:
+the weight step through ``ops.sparse_row_update``/``ops.lpt_update`` and the
+line-5 requantize-with-learned-Delta through ``ops.sr_round``.
 """
 from __future__ import annotations
 
@@ -10,9 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import alpt as alpt_core
-from repro.core import lpt as lpt_core
 from repro.methods.base import register
-from repro.methods.lpt import LPTMethod
+from repro.methods.lpt import LPTMethod, _pad_grads
 
 
 @register("alpt")
@@ -24,12 +26,13 @@ class ALPTMethod(LPTMethod):
     @staticmethod
     def _acfg(spec, weight_decay) -> alpt_core.ALPTConfig:
         return spec.alpt._replace(
-            weight_decay=weight_decay, optimizer=spec.row_optimizer
+            weight_decay=weight_decay, optimizer=spec.row_optimizer,
+            use_kernels=spec.use_kernels,
         )
 
     def fused_row_step(self, state, ids, *, spec, loss_from_rows, dense_params,
                        dense_opt, update_dense, lr, weight_decay, noise_key):
-        rows0 = lpt_core.lookup(state, ids)
+        rows0 = self.lookup(state, ids, spec)
 
         # Dense update (Algorithm 1 line 3) shares step 1's backward.
         loss, g_dense = jax.value_and_grad(
@@ -44,18 +47,27 @@ class ALPTMethod(LPTMethod):
             lr=lr,
             noise_key=noise_key,
             loss_fn_step2=lambda rows: loss_from_rows(rows, new_dense),
+            id_space=spec.n,
+            out_dim=spec.d,
         )
         return new_state, new_dense, new_opt, {"loss": loss2, **aux}
 
     def dense_update(self, state, opt, grads, *, spec, lr, weight_decay,
                      noise_key=None, delta_grad=None, batch_rows=None):
         acfg = self._acfg(spec, weight_decay)
+        grads = _pad_grads(grads, state, spec)
         upd = alpt_core.dense_weight_update(state, grads, cfg=acfg, lr=lr)
         gscale = alpt_core.grad_scale_factor(
-            acfg, batch_rows=int(batch_rows), dim=state.dim
+            acfg, batch_rows=int(batch_rows), dim=spec.d
         )
-        # Algorithm 1 line 4 at the caller's UPDATED dense params.
-        g_step = delta_grad(upd.w_new, state.step, gscale)
+        # Algorithm 1 line 4 at the caller's UPDATED dense params; the caller
+        # sees the live (n, d) table, so padded geometry is sliced away and
+        # the resulting Delta gradient zero-padded back (pad rows untouched).
+        g_step = delta_grad(
+            upd.w_new[: spec.n, : spec.d], state.step[: spec.n], gscale
+        )
+        if g_step.shape != state.step.shape:
+            g_step = jnp.pad(g_step, (0, state.step.shape[0] - g_step.shape[0]))
         new_state = alpt_core.dense_finish(
             state, upd, g_step, cfg=acfg, noise_key=noise_key
         )

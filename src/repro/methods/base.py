@@ -44,7 +44,12 @@ from jax.sharding import PartitionSpec as P
 from repro.core import alpt as alpt_core
 from repro.core import pruning as pruning_core
 from repro.dist.context import hint
+from repro.kernels import ops as kernel_ops
 from repro.optim import adam_update
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,10 +73,36 @@ class EmbeddingSpec:
     row_optimizer: str = "adam"
     hash_compression: float = 2.0
     prune: pruning_core.PruneConfig = pruning_core.PruneConfig()
+    # Route integer-table hot paths (lookup / write-back / sparse step)
+    # through the Pallas kernel suite (repro.kernels.ops).  Default on; the
+    # wrappers auto-interpret off-TPU and fall back — counted, never silently
+    # — on kernel-ineligible shapes.
+    use_kernels: bool = True
+    # Pad the table geometry up to kernel tiles at init: rows round up to the
+    # sublane multiple *past* the id space (the extra row is the scratch row
+    # the fused sparse scatter parks dedup sentinels in), dim rounds up to
+    # the sublane multiple.  Lookups/dense tables are sliced back to (n, d),
+    # so padding is invisible to the model — it exists so real geometries hit
+    # the kernel path instead of the shape fallback.
+    pad_to_tiles: bool = False
 
     @property
     def is_integer_table(self) -> bool:
         return get(self.method).is_integer_table
+
+    @property
+    def n_padded(self) -> int:
+        """Allocated rows: id space (+ scratch row, sublane-rounded) if padded."""
+        if not self.pad_to_tiles:
+            return self.n
+        return _round_up(self.n + 1, kernel_ops.SUBLANE)
+
+    @property
+    def d_padded(self) -> int:
+        """Allocated embedding width (sublane-rounded if padded)."""
+        if not self.pad_to_tiles:
+            return self.d
+        return _round_up(self.d, kernel_ops.SUBLANE)
 
 
 class EmbeddingMethod(abc.ABC):
@@ -279,13 +310,47 @@ class IntegerTableMethod(EmbeddingMethod):
         return self.dense_table(state, spec)
 
     def dense_lookup(self, state, params, ids, spec):
-        return jnp.take(params, ids, axis=0)
+        """Rows for ``ids``, differentiable in the dense [n, d] ``params``.
+
+        Kernels-on, the *forward* reads the int8 codes through the fused
+        ``ops.dequant_gather`` (1 byte/elem instead of gathering the
+        materialized fp32 table), while the *backward* stays the exact
+        transpose of ``jnp.take`` — ``params`` always equals the de-quantized
+        table at call time, so the two forwards are bitwise identical and
+        autodiff sees the same function either way.
+        """
+        if not spec.use_kernels:
+            return jnp.take(params, ids, axis=0)
+        method = self
+
+        @jax.custom_vjp
+        def kernel_gather(p):
+            return method.lookup(state, ids, spec)
+
+        def fwd(p):
+            return kernel_gather(p), p
+
+        def bwd(p, g):
+            _, pull = jax.vjp(lambda q: jnp.take(q, ids, axis=0), p)
+            return pull(g)
+
+        kernel_gather.defvjp(fwd, bwd)
+        return kernel_gather(params)
 
     def dense_table_from(self, state, params, spec):
         return params
 
     def hint_dense_params(self, params):
         return hint(params, "embed_table")
+
+    def serving_table(self, state, spec):
+        """Serving export: de-quantize through the fused gather kernel, so
+        the fp32 table first exists in the serving process's output buffer —
+        the int8 codes are the only table read from HBM (bitwise-identical
+        to the jnp export)."""
+        if not spec.use_kernels:
+            return self.eval_table(state, spec)
+        return self.lookup(state, jnp.arange(spec.n), spec)
 
     def fused_row_step(self, state, ids, *, spec, loss_from_rows, dense_params,
                        dense_opt, update_dense, lr, weight_decay, noise_key):

@@ -1,13 +1,28 @@
 """LPT: int8 codes + per-row Delta, no fp32 master copy (paper §2.3, Eq. 8).
 
 Thin adapter over :mod:`repro.core.lpt` — the paper-faithful math stays there.
+``spec.use_kernels`` routes every hot path through the fused Pallas kernels
+(``repro.kernels.ops``): lookups via ``dequant_gather``, the CTR sparse step
+via ``sparse_row_update``, the dense write-back via ``lpt_update``;
+``spec.pad_to_tiles`` allocates the table at kernel-tile geometry (live
+``(n, d)`` is sliced back out everywhere the model looks).
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import lpt as lpt_core
 from repro.methods.base import IntegerTableMethod, register
+
+
+def _pad_grads(grads, state, spec):
+    """Zero-pad live-geometry dense gradients up to the allocated table."""
+    n_alloc, d_alloc = state.codes.shape
+    n, d = grads.shape
+    if (n, d) == (n_alloc, d_alloc):
+        return grads
+    return jnp.pad(grads, ((0, n_alloc - n), (0, d_alloc - d)))
 
 
 @register("lpt")
@@ -18,22 +33,28 @@ class LPTMethod(IntegerTableMethod):
     def init(self, key, spec):
         return lpt_core.init_table(
             key,
-            spec.n,
-            spec.d,
+            spec.n_padded,
+            spec.d_padded,
             spec.bits,
             init_scale=spec.init_scale,
             clip_value=self._clip_value_of(spec),
             optimizer=spec.row_optimizer,
+            use_kernels=spec.use_kernels,
         )
 
     def lookup(self, state, ids, spec, grad_scale=1.0):
-        return lpt_core.lookup(state, ids)
+        return lpt_core.lookup(
+            state, ids, use_kernels=spec.use_kernels, out_dim=spec.d
+        )
 
     def dense_table(self, state, spec):
-        return lpt_core.dense_table(state)
+        return lpt_core.dense_table(state)[: spec.n, : spec.d]
 
     def memory_bytes(self, state, spec, *, training):
-        return int(spec.n * spec.d * spec.bits / 8) + spec.n * 4
+        return (
+            int(spec.n_padded * spec.d_padded * spec.bits / 8)
+            + spec.n_padded * 4
+        )
 
     def sparse_apply(self, state, ids, g_rows, *, spec, lr, weight_decay,
                      noise_key):
@@ -41,16 +62,17 @@ class LPTMethod(IntegerTableMethod):
             state, ids, g_rows,
             lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
             noise_key=noise_key, optimizer=spec.row_optimizer,
-            weight_decay=weight_decay,
+            weight_decay=weight_decay, id_space=spec.n,
+            use_kernels=spec.use_kernels,
         )
 
     def dense_update(self, state, opt, grads, *, spec, lr, weight_decay,
                      noise_key=None, delta_grad=None, batch_rows=None):
         new_state = lpt_core.dense_apply(
-            state, grads,
+            state, _pad_grads(grads, state, spec),
             lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
             noise_key=noise_key, optimizer=spec.row_optimizer,
-            weight_decay=weight_decay,
+            weight_decay=weight_decay, use_kernels=spec.use_kernels,
         )
         return new_state, None, {}
 

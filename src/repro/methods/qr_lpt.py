@@ -10,6 +10,10 @@ rule: d(rem * quo)/drem = quo and vice versa.
 This file is the registry's existence proof: a brand-new method wired into
 both trainers, the DP wrapper, serving, sharding, and checkpointing without
 touching any of them — everything below is registered state + formulations.
+The kernel path composes for free: each sub-table routes its lookups and row
+updates through the same ``repro.kernels.ops`` hot paths as plain LPT
+(``spec.use_kernels``), each with its own dedup sentinel / scratch row under
+``spec.pad_to_tiles``.
 """
 from __future__ import annotations
 
@@ -21,7 +25,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import hashing
 from repro.core import lpt as lpt_core
-from repro.methods.base import IntegerTableMethod, register
+from repro.kernels import ops as kernel_ops
+from repro.methods.base import IntegerTableMethod, _round_up, register
 
 
 class QRLPTTable(NamedTuple):
@@ -32,26 +37,41 @@ class QRLPTTable(NamedTuple):
 
 @register("qr_lpt")
 class QRLPTMethod(IntegerTableMethod):
+    @staticmethod
+    def _pad_rows(rows: int, spec) -> int:
+        """Sub-table allocation: id space + scratch row, tile-rounded."""
+        if not spec.pad_to_tiles:
+            return rows
+        return _round_up(rows + 1, kernel_ops.SUBLANE)
+
     def init(self, key, spec):
         r, q_rows = hashing.qr_rows(spec.n, spec.hash_compression)
         k1, k2 = jax.random.split(key)
         return QRLPTTable(
             remainder=lpt_core.init_table(
-                k1, r, spec.d, spec.bits, init_scale=spec.init_scale,
-                optimizer=spec.row_optimizer,
+                k1, self._pad_rows(r, spec), spec.d_padded, spec.bits,
+                init_scale=spec.init_scale, optimizer=spec.row_optimizer,
+                use_kernels=spec.use_kernels,
             ),
             # The quotient factor starts near 1 so the product starts ~= the
             # remainder rows (Shi et al. 2020 composition).
             quotient=lpt_core.init_table(
-                k2, q_rows, spec.d, spec.bits, init_scale=spec.init_scale,
-                mean=1.0, optimizer=spec.row_optimizer,
+                k2, self._pad_rows(q_rows, spec), spec.d_padded, spec.bits,
+                init_scale=spec.init_scale, mean=1.0,
+                optimizer=spec.row_optimizer, use_kernels=spec.use_kernels,
             ),
             r=jnp.asarray(r, jnp.int32),
         )
 
     def lookup(self, state, ids, spec, grad_scale=1.0):
-        rem = lpt_core.lookup(state.remainder, ids % state.r)
-        quo = lpt_core.lookup(state.quotient, ids // state.r)
+        rem = lpt_core.lookup(
+            state.remainder, ids % state.r,
+            use_kernels=spec.use_kernels, out_dim=spec.d,
+        )
+        quo = lpt_core.lookup(
+            state.quotient, ids // state.r,
+            use_kernels=spec.use_kernels, out_dim=spec.d,
+        )
         return rem * quo
 
     def dense_table(self, state, spec):
@@ -59,29 +79,38 @@ class QRLPTMethod(IntegerTableMethod):
 
     def memory_bytes(self, state, spec, *, training):
         rows = state.remainder.n_rows + state.quotient.n_rows
-        return int(rows * spec.d * spec.bits / 8) + rows * 4
+        return int(rows * spec.d_padded * spec.bits / 8) + rows * 4
 
-    def _sub_apply(self, table, ids, g_rows, *, spec, lr, weight_decay, key):
+    def _sub_apply(self, table, ids, g_rows, *, spec, lr, weight_decay, key,
+                   id_space):
         return lpt_core.sparse_apply(
             table, ids, g_rows,
             lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
             noise_key=key, optimizer=spec.row_optimizer,
-            weight_decay=weight_decay,
+            weight_decay=weight_decay, id_space=id_space,
+            use_kernels=spec.use_kernels,
         )
 
     def sparse_apply(self, state, ids, g_rows, *, spec, lr, weight_decay,
                      noise_key):
+        r, q_rows = hashing.qr_rows(spec.n, spec.hash_compression)
         rid, qid = ids % state.r, ids // state.r
-        rem = lpt_core.lookup(state.remainder, rid)
-        quo = lpt_core.lookup(state.quotient, qid)
+        rem = lpt_core.lookup(
+            state.remainder, rid, use_kernels=spec.use_kernels, out_dim=spec.d
+        )
+        quo = lpt_core.lookup(
+            state.quotient, qid, use_kernels=spec.use_kernels, out_dim=spec.d
+        )
         # Product rule: each sub-table's row cotangent is g * (other factor).
         new_rem = self._sub_apply(
             state.remainder, rid, g_rows * quo, spec=spec, lr=lr,
             weight_decay=weight_decay, key=jax.random.fold_in(noise_key, 0),
+            id_space=r,
         )
         new_quo = self._sub_apply(
             state.quotient, qid, g_rows * rem, spec=spec, lr=lr,
             weight_decay=weight_decay, key=jax.random.fold_in(noise_key, 1),
+            id_space=q_rows,
         )
         return QRLPTTable(remainder=new_rem, quotient=new_quo, r=state.r)
 
@@ -91,16 +120,25 @@ class QRLPTMethod(IntegerTableMethod):
         of the *virtual* product table; segment-sum it into each sub-table."""
         ids = jnp.arange(spec.n)
         rid, qid = ids % state.r, ids // state.r
-        rem = lpt_core.lookup(state.remainder, rid)
-        quo = lpt_core.lookup(state.quotient, qid)
+        rem = lpt_core.lookup(
+            state.remainder, rid, use_kernels=spec.use_kernels, out_dim=spec.d
+        )
+        quo = lpt_core.lookup(
+            state.quotient, qid, use_kernels=spec.use_kernels, out_dim=spec.d
+        )
+        d_pad = state.remainder.dim - spec.d
         g_rem = jax.ops.segment_sum(
             grads * quo, rid, num_segments=state.remainder.n_rows
         )
         g_quo = jax.ops.segment_sum(
             grads * rem, qid, num_segments=state.quotient.n_rows
         )
+        if d_pad:
+            g_rem = jnp.pad(g_rem, ((0, 0), (0, d_pad)))
+            g_quo = jnp.pad(g_quo, ((0, 0), (0, d_pad)))
         kw = dict(lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
-                  optimizer=spec.row_optimizer, weight_decay=weight_decay)
+                  optimizer=spec.row_optimizer, weight_decay=weight_decay,
+                  use_kernels=spec.use_kernels)
         new_rem = lpt_core.dense_apply(
             state.remainder, g_rem,
             noise_key=jax.random.fold_in(noise_key, 0), **kw,

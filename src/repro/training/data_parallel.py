@@ -69,11 +69,15 @@ class DPConfig:
     ``sync_bits``: 32 = exact fp32 mean; 2..8 = SR-compressed codes.
     ``axis``: mesh axis name the batch is sharded over.
     ``sync_seed``: base PRNG seed for the SR compression noise.
+    ``use_kernels``: run the compressed collectives' SR quantize through the
+    fused Pallas pass (bitwise-identical to the jnp path, so the stacked
+    single-device twins stay exact at every width).
     """
 
     sync_bits: int = 32
     axis: str = "data"
     sync_seed: int = 0
+    use_kernels: bool = True
 
     def __post_init__(self):
         if self.sync_bits not in _VALID_BITS:
@@ -92,7 +96,9 @@ def _base_key(dp: DPConfig) -> jax.Array:
 def _sync_leaf_mesh(leaf, key, dp: DPConfig):
     if dp.sync_bits == 32:
         return collectives.exact_pmean_local(leaf, dp.axis)
-    return collectives.compressed_pmean_local(leaf, dp.axis, key, bits=dp.sync_bits)
+    return collectives.compressed_pmean_local(
+        leaf, dp.axis, key, bits=dp.sync_bits, use_kernels=dp.use_kernels
+    )
 
 
 def _sync_tree_mesh(grads, key, dp: DPConfig):

@@ -55,6 +55,11 @@ class LMTrainerConfig:
     # Gradient-sync bit width for data-parallel training
     # (repro.training.data_parallel): 32 = exact fp32, 2..8 = SR-compressed.
     dp_sync_bits: int = 32
+    # Route integer-table hot paths through the Pallas kernel suite
+    # (EmbeddingSpec.use_kernels; auto-interpret off-TPU, bitwise-identical).
+    use_kernels: bool = True
+    # Pad the vocab table to kernel tiles (EmbeddingSpec.pad_to_tiles).
+    pad_to_tiles: bool = False
 
 
 def embedding_spec_of(
@@ -77,6 +82,8 @@ def embedding_spec_of(
             step_lr=tcfg.alpt_step_lr,
         ),
         prune=tcfg.prune,
+        use_kernels=tcfg.use_kernels,
+        pad_to_tiles=tcfg.pad_to_tiles,
     )
 
 

@@ -158,6 +158,150 @@ def test_one_train_step_both_formulations(name):
     assert not np.array_equal(np.asarray(before), np.asarray(after))
 
 
+# ---------------------------------------------------------------------------
+# Kernels-on vs kernels-off parity: the fused Pallas hot paths
+# (repro.kernels.ops, interpret mode off-TPU) must be numerically IDENTICAL
+# to the jnp path for every integer-table method, in both the sparse (CTR
+# fused) and dense (LM / microbatched) formulations.  SR noise is seeded, so
+# the comparison is exact — any new method registered with integer-table
+# formulations is automatically held to the same contract.
+# ---------------------------------------------------------------------------
+
+INT_TABLE_METHODS = [m for m in ALL_METHODS if methods.get(m).is_integer_table]
+
+
+def _ctr_fixture(name, use_kernels, pad):
+    from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
+    from repro.models.ctr import DCNConfig
+    from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+
+    data_cfg = CTRDatasetConfig(
+        name="kparity", n_fields=4, cardinalities=(23, 37, 11, 53),
+        teacher_rank=3, seed=11,
+    )
+    data = CTRSynthetic(data_cfg)
+    spec = methods.EmbeddingSpec(
+        method=name, n=data_cfg.n_features, d=8, bits=8, init_scale=0.05,
+        use_kernels=use_kernels, pad_to_tiles=pad,
+    )
+    dcn = DCNConfig(n_fields=4, emb_dim=8, cross_depth=1, mlp_widths=(16,))
+    tr = CTRTrainer(TrainerConfig(spec=spec, model="dcn", dcn=dcn, lr=1e-3))
+    return tr, data, spec
+
+
+def _assert_live_state_equal(m, spec_on, st_on, spec_off, st_off, ctx):
+    """Bitwise equality on everything the model can observe: the live
+    de-quantized table and the dense parameters.  (pad_to_tiles scratch rows
+    are deliberately unspecified bytes on both paths.)"""
+    t_on = m.eval_table(st_on.emb_state, spec_on)
+    t_off = m.eval_table(st_off.emb_state, spec_off)
+    np.testing.assert_array_equal(
+        np.asarray(t_on), np.asarray(t_off), err_msg=f"{ctx}: table"
+    )
+    for a, b in zip(jax.tree.leaves(st_on.dense_params),
+                    jax.tree.leaves(st_off.dense_params)):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"{ctx}: dense params"
+        )
+
+
+@pytest.mark.parametrize("pad", [False, True])
+@pytest.mark.parametrize("name", INT_TABLE_METHODS)
+def test_kernel_parity_ctr_sparse(name, pad):
+    """Kernels-on == kernels-off, CTR fused (sparse row) formulation."""
+    m = methods.get(name)
+    tr_on, data, spec_on = _ctr_fixture(name, True, pad)
+    tr_off, _, spec_off = _ctr_fixture(name, False, pad)
+    st_on = tr_on.init_state()
+    st_off = tr_off.init_state()
+    for step in range(3):
+        ids, labels = data.batch("train", step, 16)
+        st_on, m_on = tr_on.train_step(st_on, ids, labels)
+        st_off, m_off = tr_off.train_step(st_off, ids, labels)
+        np.testing.assert_array_equal(
+            np.asarray(m_on["loss"]), np.asarray(m_off["loss"]),
+            err_msg=f"{name} pad={pad} step {step}: loss",
+        )
+        _assert_live_state_equal(
+            m, spec_on, st_on, spec_off, st_off,
+            f"{name} pad={pad} step {step}",
+        )
+
+
+@pytest.mark.parametrize("name", INT_TABLE_METHODS)
+def test_kernel_parity_ctr_dense_microbatched(name):
+    """Kernels-on == kernels-off through the dense formulation (the DP
+    arithmetic: dense_lookup custom-vjp forward + dense_update write-back)."""
+    from repro.training import data_parallel as dpm
+
+    m = methods.get(name)
+    tr_on, data, spec_on = _ctr_fixture(name, True, False)
+    tr_off, _, spec_off = _ctr_fixture(name, False, False)
+    step_on = dpm.make_ctr_microbatch_step(tr_on, 2, dpm.DPConfig(sync_bits=8))
+    step_off = dpm.make_ctr_microbatch_step(tr_off, 2, dpm.DPConfig(sync_bits=8))
+    st_on = tr_on.init_state()
+    st_off = tr_off.init_state()
+    for step in range(2):
+        ids, labels = data.batch("train", step, 16)
+        st_on, _ = step_on(st_on, jnp.asarray(ids), jnp.asarray(labels))
+        st_off, _ = step_off(st_off, jnp.asarray(ids), jnp.asarray(labels))
+        _assert_live_state_equal(
+            m, spec_on, st_on, spec_off, st_off, f"{name} micro step {step}"
+        )
+
+
+@pytest.mark.parametrize("name", INT_TABLE_METHODS)
+def test_kernel_parity_lm_dense(name):
+    """Kernels-on == kernels-off, LM dense formulation (vocab-table
+    write-back through ops.lpt_update / ops.sr_round)."""
+    import dataclasses
+
+    from repro import configs
+    from repro.configs.common import concrete_batch
+    from repro.training import lm_trainer
+
+    cfg = dataclasses.replace(
+        configs.smoke_config("smollm-135m"), embedding_method=name
+    )
+    batch = concrete_batch(cfg, batch=2, seq=16)
+    tables = {}
+    for use_kernels in (True, False):
+        tcfg = lm_trainer.LMTrainerConfig(lr=1e-3, use_kernels=use_kernels)
+        step = jax.jit(lm_trainer.make_train_step(cfg, tcfg))
+        state = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+        losses = []
+        for _ in range(2):
+            state, metrics = step(state, batch)
+            losses.append(np.asarray(metrics["loss"]))
+        spec = lm_trainer.embedding_spec_of(cfg, tcfg)
+        tables[use_kernels] = (
+            np.asarray(methods.get(name).eval_table(state.table, spec)),
+            losses,
+        )
+    np.testing.assert_array_equal(
+        tables[True][0], tables[False][0], err_msg=f"{name}: vocab table"
+    )
+    for l_on, l_off in zip(tables[True][1], tables[False][1]):
+        np.testing.assert_array_equal(l_on, l_off, err_msg=f"{name}: loss")
+
+
+def test_kernel_parity_padded_spec_geometry():
+    """pad_to_tiles allocates a scratch row past the id space and sublane-
+    rounds, and the padding never leaks into model-visible shapes."""
+    spec = methods.EmbeddingSpec(
+        method="lpt", n=103, d=12, bits=8, pad_to_tiles=True
+    )
+    assert spec.n_padded % 8 == 0 and spec.n_padded > spec.n
+    assert spec.d_padded % 8 == 0 and spec.d_padded >= spec.d
+    m = methods.get("lpt")
+    state = m.init(jax.random.PRNGKey(0), spec)
+    assert state.codes.shape == (spec.n_padded, spec.d_padded)
+    rows = m.lookup(state, jnp.array([0, spec.n - 1]), spec)
+    assert rows.shape == (2, spec.d)
+    assert m.eval_table(state, spec).shape == (spec.n, spec.d)
+    assert m.serving_table(state, spec).shape == (spec.n, spec.d)
+
+
 def test_lm_prune_mask_refresh_actually_prunes():
     """The LM path honors has_host_refresh: with an aggressive DeepLight
     schedule the vocab table's mask must leave the all-ones init (the
