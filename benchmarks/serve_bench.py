@@ -1,54 +1,131 @@
-"""Serving throughput on reduced configs (paper Table 1 reports inference
-time; here: prefill latency + decode tok/s for three arch families on CPU —
-absolute numbers are CPU-bound, the derived column carries the per-token
-cache/table bytes that transfer to TPU).
+"""Serving benchmark for the int8-resident Engine (PR 5 artifact).
+
+Per cell it reports what the redesign promises:
+
+* **us/token** (LM continuous-batch decode) and **us/request** (CTR batched
+  scoring) through the same `repro.serving` Engine API — absolute numbers
+  are CPU-bound; the trajectory and the derived bytes transfer to TPU;
+* **resident embedding bytes** — asserted to equal the int8 code bytes plus
+  the scale vectors for every integer-table method, i.e. the Engine never
+  re-inflated the table to fp32 (the acceptance criterion);
+* the per-engine kernel fallback tally (zero on the aligned geometries).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.serve_bench --smoke --out BENCH_PR5.json
 """
-import time
+from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import numpy as np
 
 from benchmarks.common import emit
-from repro import configs
-from repro.launch.serve import ContinuousBatcher, Request
+from repro import configs, methods
+from repro.launch.serve import CTR_DEMO_DATA, CTR_DEMO_DIM, build_ctr_demo_engine
+from repro.serving import table as serving_tbl
+from repro.serving.ctr import CTRRequest
+from repro.serving.lm import LMEngine, LMRequest
 from repro.training import lm_trainer
 
-ARCHS = ["smollm-135m", "mixtral-8x7b", "mamba2-370m"]
+LM_ARCHS = ["smollm-135m", "mamba2-370m", "mixtral-8x7b"]
+CTR_METHODS = ["lpt", "alpt", "qr_lpt", "qr_alpt", "fp"]
 
 
-def _cache_bytes_per_token(cfg) -> float:
-    _, kv = cfg.padded_heads
-    per = 0.0
-    for layer in range(cfg.n_layers):
-        if cfg.layer_type(layer % cfg.period) == "attn":
-            per += 2 * kv * cfg.hd * 2  # bf16-ish K+V
-    return per
+def _assert_int8_resident(engine, fp32_bytes: int) -> None:
+    """The acceptance criterion: resident bytes == codes + scales, not fp32."""
+    m = engine.metrics()
+    resident = m["resident_embedding_bytes"]
+    expect = m["embedding_code_bytes"] + m["embedding_scale_bytes"]
+    assert engine.int8_resident, "integer-table method not int8-resident"
+    assert resident == expect, (resident, expect)
+    assert resident < fp32_bytes, (resident, fp32_bytes)
+    codes = serving_tbl.code_bytes(engine.table)
+    assert codes * 4 <= fp32_bytes, (codes, fp32_bytes)  # int8 vs f32 elems
 
 
-def run():
-    for arch in ARCHS:
-        cfg = configs.smoke_config(arch)
-        tcfg = lm_trainer.LMTrainerConfig()
-        state = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
-        srv = ContinuousBatcher(state.params, state.table, cfg, batch=4,
-                                max_len=48)
-        rng = np.random.RandomState(0)
-        reqs = [Request(rid=i, prompt=rng.randint(
-            0, cfg.vocab_size, 32).astype(np.int32), max_new=8)
-            for i in range(4)]
-        for r in reqs:
-            srv.submit(r)
-        t0 = time.time()
-        done = srv.run()
-        dt = time.time() - t0
-        total = sum(len(v) for v in done.values())
-        emit(
-            f"serve/{arch}",
-            dt / max(total, 1) * 1e6,
-            f"tok_s={total/dt:.1f} cache_B_per_tok={_cache_bytes_per_token(cfg):.0f} "
-            f"int8_table=yes",
-        )
+def bench_lm(arch: str, *, requests: int, gen: int) -> dict:
+    cfg = configs.smoke_config(arch)
+    tcfg = lm_trainer.LMTrainerConfig()
+    state = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    engine = LMEngine.from_state(state, cfg, tcfg, batch=4, max_len=32 + gen)
+    rng = np.random.RandomState(0)
+
+    def submit(n):
+        for _ in range(n):
+            engine.submit(LMRequest(
+                prompt=rng.randint(0, cfg.vocab_size, 32).astype(np.int32),
+                max_new=gen,
+            ))
+
+    submit(2)  # warm the prefill/decode traces
+    engine.run()
+    engine.reset_metrics()
+    submit(requests)
+    engine.run()
+    m = engine.metrics()
+    fp32_bytes = cfg.vocab_size * cfg.d_model * 4
+    _assert_int8_resident(engine, fp32_bytes)
+    assert m["kernel_fallbacks"] == 0, engine.fallback_report()
+    emit(
+        f"serve/lm/{arch}", m["us_per_token"],
+        f"tok_s={m['tokens_generated'] / m['wall_s']:.1f} "
+        f"resident_B={m['resident_embedding_bytes']} fp32_B={fp32_bytes}",
+    )
+    return {**m, "arch": arch, "fp32_bytes": fp32_bytes}
+
+
+def bench_ctr(method: str, *, requests: int, bits: int = 8) -> dict:
+    engine, data = build_ctr_demo_engine(
+        method, bits=bits, batch=32, train_steps=3, train_batch=128,
+    )
+    warm, _ = data.batch("valid", 0, 32)
+    for row in warm:
+        engine.submit(CTRRequest(ids=row))
+    engine.run()
+    engine.reset_metrics()
+    ids, _ = data.batch("test", 0, requests)
+    for row in ids:
+        engine.submit(CTRRequest(ids=row))
+    engine.run()
+    m = engine.metrics()
+    fp32_bytes = CTR_DEMO_DATA.n_features * CTR_DEMO_DIM * 4
+    if methods.get(method).is_integer_table:
+        _assert_int8_resident(engine, fp32_bytes)
+        assert m["kernel_fallbacks"] == 0, engine.fallback_report()
+    emit(
+        f"serve/ctr/{method}", m["us_per_request"],
+        f"resident_B={m['resident_embedding_bytes']} fp32_B={fp32_bytes} "
+        f"int8={m['int8_resident']}",
+    )
+    return {**m, "fp32_bytes": fp32_bytes}
+
+
+def run(smoke: bool = False, out: str | None = None) -> dict:
+    requests = 8 if smoke else 32
+    gen = 8 if smoke else 16
+    archs = LM_ARCHS[:2] if smoke else LM_ARCHS
+    ctr_methods = CTR_METHODS[:4] if smoke else CTR_METHODS
+    results = {
+        "lm": [bench_lm(a, requests=requests, gen=gen) for a in archs],
+        "ctr": [bench_ctr(m, requests=requests * 8) for m in ctr_methods],
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"[serve_bench] wrote {out}")
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    run(args.smoke, args.out)
+    return 0
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,0 +1,21 @@
+"""Batched CTR scoring on the int8-resident serving Engine.
+
+    PYTHONPATH=src python examples/serve_ctr.py
+
+Trains a few ALPT steps on the synthetic CTR data, builds a
+`repro.serving.CTREngine` from the trainer state (the embedding table goes
+into residency as int8 codes + learned per-row scales — no fp32 export), and
+scores a stream of requests through the fixed-geometry jitted scorer.
+"""
+from repro.launch import serve
+
+
+def main():
+    serve.main([
+        "ctr", "--method", "alpt", "--batch", "16", "--requests", "48",
+        "--train-steps", "3",
+    ])
+
+
+if __name__ == "__main__":
+    main()

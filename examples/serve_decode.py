@@ -1,16 +1,17 @@
-"""Batched serving with int8 embedding tables (continuous batcher).
+"""Continuous-batch LM decode on the int8-resident serving Engine.
 
     PYTHONPATH=src python examples/serve_decode.py
 
-Wraps repro.launch.serve: prefill + decode steps are jitted once; finished
-requests are replaced without recompilation; the vocab table stays int8.
+Wraps the `repro.launch.serve lm` CLI: per-request prefill + slot-refill
+decode are jitted once; the vocab table stays int8 codes + scales end-to-end
+(embeds via the fused dequant-gather, tied head via the fused dequant-matmul).
 """
 from repro.launch import serve
 
 
 def main():
     serve.main([
-        "--arch", "mixtral-8x7b", "--smoke",
+        "lm", "--arch", "mixtral-8x7b", "--smoke",
         "--batch", "4", "--prompt-len", "24", "--gen", "12",
         "--requests", "8",
     ])

@@ -3,7 +3,10 @@ from repro.checkpoint.manager import (
     check_embedding_manifest,
     embedding_manifest,
     load_pytree,
+    restore_serving_checkpoint,
     save_pytree,
+    save_serving_checkpoint,
+    serving_template,
 )
 
 __all__ = [
@@ -11,5 +14,8 @@ __all__ = [
     "check_embedding_manifest",
     "embedding_manifest",
     "load_pytree",
+    "restore_serving_checkpoint",
     "save_pytree",
+    "save_serving_checkpoint",
+    "serving_template",
 ]

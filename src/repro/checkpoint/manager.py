@@ -25,6 +25,7 @@ import tempfile
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -69,6 +70,74 @@ def check_embedding_manifest(manifest: dict, spec: Any) -> list[str]:
     if manifest.get("embedding_schema", schema) != schema:
         problems.append("embedding table schema differs (shape/dtype/leaves)")
     return problems
+
+
+def serving_template(spec: Any):
+    """ShapeDtypeStruct pytree of the *serving-resident* state for ``spec``
+    (the method's ``serving_state`` export: codes + scales for integer
+    tables) — the restore template a serving process builds without ever
+    initializing or materializing a training table."""
+    from repro import methods
+
+    method = methods.get(spec.method)
+
+    def resident(key):
+        return method.serving_state(method.init(key, spec), spec)
+
+    return jax.eval_shape(resident, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def save_serving_checkpoint(directory: str | os.PathLike, *, step: int,
+                            params: Any, table: Any, spec: Any) -> pathlib.Path:
+    """Serving export: model/dense params + the serving-*resident* table.
+
+    ``table`` may be the training-time method state (converted through
+    ``serving_state`` here) or an already-built serving table.  Either way
+    the artifact holds inference state only — int8 codes + scale vectors for
+    integer-table methods, never the fp32 table and never training-only
+    leaves (Adam moments, schedule clocks).  The manifest carries
+    :func:`embedding_manifest` so a restore detects a method/geometry
+    mismatch before any array is loaded.
+    """
+    from repro import methods
+    from repro.serving import table as serving_tbl
+
+    if not serving_tbl.is_serving_table(table):
+        table = methods.get(spec.method).serving_state(table, spec)
+    return save_pytree(
+        {"params": params, "table": table}, directory, step=step,
+        extra_meta=embedding_manifest(spec),
+    )
+
+
+def restore_serving_checkpoint(directory: str | os.PathLike, spec: Any,
+                               params_template: Any, *,
+                               step: int | None = None):
+    """Restore a serving checkpoint: ``(params, serving_table, manifest)``.
+
+    The table template comes from the method registry
+    (:func:`serving_template`), so int8 codes restore as int8 and go
+    straight into residency — the fp32 table never exists on the restore
+    path.  A manifest whose embedding method or schema disagrees with
+    ``spec`` raises before loading arrays.
+    """
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    manifest = json.loads(
+        (directory / f"step_{step:09d}" / "manifest.json").read_text()
+    )
+    problems = check_embedding_manifest(manifest, spec)
+    if problems:
+        raise ValueError(
+            "serving restore refused — checkpoint/config mismatch: "
+            + "; ".join(problems)
+        )
+    template = {"params": params_template, "table": serving_template(spec)}
+    tree, manifest = load_pytree(template, directory, step=step)
+    return tree["params"], tree["table"], manifest
 
 
 def save_pytree(tree, directory: str | os.PathLike, *, step: int,

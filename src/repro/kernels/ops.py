@@ -1,4 +1,4 @@
-"""jit'd public wrappers over the Pallas kernels — the embedding hot-path API.
+"""Public wrappers over the Pallas kernels — the embedding hot-path API.
 
 ``interpret`` defaults to True off-TPU so the same call sites run everywhere;
 on TPU the compiled kernels are used.  Off-TPU the elementwise kernels run
@@ -9,23 +9,30 @@ overhead without changing a single bit of the result.
 Alignment contract: a shape is kernel-eligible when every blocked dimension
 is a multiple of 8 (the fp32 sublane granularity; lane padding to 128 happens
 in VMEM).  Non-eligible shapes fall back to the bitwise-identical jnp
-reference in :mod:`repro.kernels.ref` — *never silently*: every distinct
-(op, shape, reason) fallback is counted and logged once, and
+reference in :mod:`repro.kernels.ref` — *never silently*: every fallback is
+counted and logged once per distinct (op, shape, reason), and
 :func:`fallback_stats` exposes the tally so benchmarks and trainers can
 assert the hot path actually runs fused (``EmbeddingSpec.pad_to_tiles`` is
 the knob that makes real table geometries eligible).
 
-Counting happens at trace time (shapes are static under jit), so the tally
-reflects distinct traced shapes, not per-step call counts.
+Dispatch accounting happens when the *wrapper* runs: eagerly per call, or
+once per trace when the call site sits inside an enclosing ``jit``.  The
+wrappers themselves are plain Python over jitted inner implementations, so a
+fresh consumer (a new jitted step function, a serving engine warming up) sees
+its dispatch decisions counted even when the inner kernels were already
+compiled earlier in the process — the old trace-time scheme silently skipped
+those on jit-cache hits.  :func:`fallback_scope` scopes the same tally to a
+``with`` block for consumers that need an accurate local report (the serving
+Engine) without resetting the process-wide counters.
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import functools
 import logging
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.dequant_gather import dequant_gather as _dequant_gather
@@ -45,12 +52,53 @@ COL_BLOCK = 512
 
 # ---------------------------------------------------------------- accounting
 
+
+class FallbackScope:
+    """One scoped tally of kernel-vs-fallback dispatch decisions.
+
+    Created by :func:`fallback_scope`; while active it receives every
+    dispatch note alongside the process-wide counters, so a consumer can
+    report exactly the fallbacks *its* calls hit — independent of what the
+    rest of the process traced before or since.
+    """
+
+    def __init__(self) -> None:
+        self.kernel_calls: collections.Counter = collections.Counter()
+        self.fallbacks: collections.Counter = collections.Counter()
+
+    def stats(self) -> dict:
+        return _stats_of(self.kernel_calls, self.fallbacks)
+
+
 _KERNEL_CALLS: collections.Counter = collections.Counter()
 _FALLBACKS: collections.Counter = collections.Counter()
+_SCOPES: list[FallbackScope] = []
+
+
+@contextlib.contextmanager
+def fallback_scope(scope: FallbackScope | None = None):
+    """Collect dispatch accounting for the duration of a ``with`` block.
+
+    Yields a :class:`FallbackScope` whose counters see only the dispatch
+    decisions made while the scope is active.  Pass an existing scope to
+    re-enter it (the serving Engine accumulates one scope across its
+    lifetime's call sites).  Unlike ``reset_fallback_stats()`` +
+    ``fallback_stats()``, a scope neither clears nor double-reads the
+    process-wide tally, and it observes decisions even when the inner jitted
+    kernels were already compiled earlier in the process.
+    """
+    scope = FallbackScope() if scope is None else scope
+    _SCOPES.append(scope)
+    try:
+        yield scope
+    finally:
+        _SCOPES.remove(scope)
 
 
 def _note_kernel(op: str) -> None:
     _KERNEL_CALLS[op] += 1
+    for scope in _SCOPES:
+        scope.kernel_calls[op] += 1
 
 
 def _note_fallback(op: str, shape, reason: str) -> None:
@@ -61,6 +109,8 @@ def _note_fallback(op: str, shape, reason: str) -> None:
             op, tuple(shape), reason,
         )
     _FALLBACKS[key] += 1
+    for scope in _SCOPES:
+        scope.fallbacks[key] += 1
 
 
 def note_fallback(op: str, shape, reason: str) -> None:
@@ -71,21 +121,26 @@ def note_fallback(op: str, shape, reason: str) -> None:
     _note_fallback(op, shape, reason)
 
 
+def _stats_of(kernel_calls: collections.Counter,
+              fallbacks: collections.Counter) -> dict:
+    return {
+        "kernel_calls": dict(kernel_calls),
+        "fallbacks": [
+            {"op": op, "shape": shape, "reason": reason, "count": int(c)}
+            for (op, shape, reason), c in sorted(fallbacks.items())
+        ],
+        "total_fallbacks": int(sum(fallbacks.values())),
+    }
+
+
 def fallback_stats() -> dict:
     """Snapshot of kernel-vs-fallback dispatch since the last reset.
 
-    ``kernel_calls``/``fallbacks`` count distinct *traces* (shapes are static
-    under jit); ``total_fallbacks`` is the number a kernels-on benchmark
-    config asserts to be zero.
+    ``kernel_calls``/``fallbacks`` count wrapper dispatches (per call when
+    eager, per trace under an enclosing jit); ``total_fallbacks`` is the
+    number a kernels-on benchmark config asserts to be zero.
     """
-    return {
-        "kernel_calls": dict(_KERNEL_CALLS),
-        "fallbacks": [
-            {"op": op, "shape": shape, "reason": reason, "count": int(c)}
-            for (op, shape, reason), c in sorted(_FALLBACKS.items())
-        ],
-        "total_fallbacks": int(sum(_FALLBACKS.values())),
-    }
+    return _stats_of(_KERNEL_CALLS, _FALLBACKS)
 
 
 def reset_fallback_stats() -> None:
@@ -127,42 +182,123 @@ def _blocks_2d(rows: int, cols: int):
     return rb, cb
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel",))
+# Inner jitted implementations: the public wrappers stay plain Python so the
+# dispatch decision (and its accounting) runs on every call / enclosing
+# trace, while the arithmetic still compiles once per shape here.
+
+_ref_dequant_gather = jax.jit(ref.dequant_gather_ref)
+_ref_sr_round = jax.jit(ref.sr_round_ref, static_argnums=(3,))
+_ref_dequant_matmul = jax.jit(ref.dequant_matmul_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
+def _dequant_gather_jit(codes, step, ids, *, d_block, interpret):
+    return _dequant_gather(codes, step, ids, d_block=d_block, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "row_block", "col_block", "interpret")
+)
+def _sr_round_jit(w, step, noise, bits, *, row_block, col_block, interpret):
+    return _sr_round(
+        w, step, noise, bits, row_block=row_block, col_block=col_block,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "weight_decay", "row_block", "col_block",
+                     "interpret", "has_new_step"),
+)
+def _lpt_update_jit(codes, step, grad, noise, lr, new_step, bits, *,
+                    weight_decay, row_block, col_block, interpret,
+                    has_new_step):
+    return _lpt_fused_update(
+        codes, step, grad, noise, lr, bits,
+        new_step=new_step if has_new_step else None,
+        weight_decay=weight_decay, row_block=row_block, col_block=col_block,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "weight_decay", "has_new_step")
+)
+def _ref_lpt_update_jit(codes, step, grad, noise, lr, new_step, bits, *,
+                        weight_decay, has_new_step):
+    return ref.lpt_fused_update_ref(
+        codes, step, grad, noise, lr, bits,
+        new_step=new_step if has_new_step else None,
+        weight_decay=weight_decay,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "weight_decay", "interpret")
+)
+def _sparse_row_update_jit(codes, step, mu, nu, uniq, g_sum, noise, lr, c1,
+                           c2, bits, *, weight_decay, interpret):
+    return _sparse_row_update(
+        codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits,
+        weight_decay=weight_decay, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "weight_decay"))
+def _ref_sparse_row_update_jit(codes, step, mu, nu, uniq, g_sum, noise, lr,
+                               c1, c2, bits, *, weight_decay):
+    return ref.sparse_row_update_ref(
+        codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits,
+        weight_decay=weight_decay,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def _dequant_matmul_jit(x, codes, step, *, block_m, block_n, block_k,
+                        interpret):
+    return _dequant_matmul(
+        x, codes, step, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+# ------------------------------------------------------------------- wrappers
+
+
 def dequant_gather(codes, step, ids, *, use_kernel: bool = True):
     """Fused int8-row gather + de-quantize: f32 [b, d] rows for flat ids."""
     n, d = codes.shape
     if not use_kernel:
-        return ref.dequant_gather_ref(codes, step, ids)
+        return _ref_dequant_gather(codes, step, ids)
     db = d if _default_interpret() else _pick_block(d, COL_BLOCK)
     if d % SUBLANE or db is None:
         _note_fallback("dequant_gather", (n, d), "dim not sublane-aligned")
-        return ref.dequant_gather_ref(codes, step, ids)
+        return _ref_dequant_gather(codes, step, ids)
     _note_kernel("dequant_gather")
-    return _dequant_gather(
+    return _dequant_gather_jit(
         codes, step, ids, d_block=db, interpret=_default_interpret()
     )
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "use_kernel"))
 def sr_round(w, step, noise, bits: int = 8, *, use_kernel: bool = True):
     """Fused clip + stochastic-round + int8 pack (Eq. 1/4)."""
     rows, cols = w.shape
     if not use_kernel:
-        return ref.sr_round_ref(w, step, noise, bits)
+        return _ref_sr_round(w, step, noise, bits)
     blocks = _blocks_2d(rows, cols)
     if blocks is None:
         _note_fallback("sr_round", (rows, cols), "shape not sublane-aligned")
-        return ref.sr_round_ref(w, step, noise, bits)
+        return _ref_sr_round(w, step, noise, bits)
     _note_kernel("sr_round")
-    return _sr_round(
+    return _sr_round_jit(
         w, step, noise, bits, row_block=blocks[0], col_block=blocks[1],
         interpret=_default_interpret(),
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("bits", "weight_decay", "use_kernel")
-)
 def lpt_update(codes, step, grad, noise, lr, bits: int, *, new_step=None,
                weight_decay: float = 0.0, use_kernel: bool = True):
     """Fused Eq. (8) write-back: dequantize -> decayed step -> SR requantize.
@@ -172,29 +308,28 @@ def lpt_update(codes, step, grad, noise, lr, bits: int, *, new_step=None,
     freshly learned Delta in the same pass.
     """
     rows, cols = codes.shape
+    has_new_step = new_step is not None
+    ns = step if new_step is None else new_step  # placeholder keeps jit arity
     if not use_kernel:
-        return ref.lpt_fused_update_ref(
-            codes, step, grad, noise, lr, bits, new_step=new_step,
-            weight_decay=weight_decay,
+        return _ref_lpt_update_jit(
+            codes, step, grad, noise, lr, ns, bits,
+            weight_decay=weight_decay, has_new_step=has_new_step,
         )
     blocks = _blocks_2d(rows, cols)
     if blocks is None:
         _note_fallback("lpt_update", (rows, cols), "shape not sublane-aligned")
-        return ref.lpt_fused_update_ref(
-            codes, step, grad, noise, lr, bits, new_step=new_step,
-            weight_decay=weight_decay,
+        return _ref_lpt_update_jit(
+            codes, step, grad, noise, lr, ns, bits,
+            weight_decay=weight_decay, has_new_step=has_new_step,
         )
     _note_kernel("lpt_update")
-    return _lpt_fused_update(
-        codes, step, grad, noise, lr, bits, new_step=new_step,
+    return _lpt_update_jit(
+        codes, step, grad, noise, lr, ns, bits,
         weight_decay=weight_decay, row_block=blocks[0], col_block=blocks[1],
-        interpret=_default_interpret(),
+        interpret=_default_interpret(), has_new_step=has_new_step,
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("bits", "weight_decay", "use_kernel")
-)
 def sparse_row_update(codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2,
                       bits: int, *, weight_decay: float = 0.0,
                       use_kernel: bool = True):
@@ -207,7 +342,7 @@ def sparse_row_update(codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2,
     """
     n, d = codes.shape
     if not use_kernel:
-        return ref.sparse_row_update_ref(
+        return _ref_sparse_row_update_jit(
             codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits,
             weight_decay=weight_decay,
         )
@@ -216,33 +351,42 @@ def sparse_row_update(codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2,
             "sparse_row_update", (n, d),
             "dim not sublane-aligned" if d % SUBLANE else "dim exceeds one block",
         )
-        return ref.sparse_row_update_ref(
+        return _ref_sparse_row_update_jit(
             codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits,
             weight_decay=weight_decay,
         )
     _note_kernel("sparse_row_update")
-    return _sparse_row_update(
+    return _sparse_row_update_jit(
         codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits,
         weight_decay=weight_decay, interpret=_default_interpret(),
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_m", "block_n", "block_k", "use_kernel")
-)
 def dequant_matmul(
     x, codes, step, *, block_m=128, block_n=128, block_k=512, use_kernel=True
 ):
+    """Fused de-quantize x int8-weight matmul: ``x @ (step * codes).T``.
+
+    The serving LM head: the int8 vocab table is scaled tile-by-tile in VMEM
+    immediately before the MXU contraction — the fp32 table never exists in
+    HBM.  Off-TPU any geometry runs as one whole-array interpreted block; on
+    TPU the (m, n, k) dims must divide the (128, 128, 512) tiles or the call
+    falls back (counted) to the jnp reference.
+    """
     m, k = x.shape
     n, _ = codes.shape
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
     if not use_kernel:
-        return ref.dequant_matmul_ref(x, codes, step)
+        return _ref_dequant_matmul(x, codes, step)
     if m % bm or n % bn or k % bk:
-        _note_fallback("dequant_matmul", (m, n, k), "blocks not divisible")
-        return ref.dequant_matmul_ref(x, codes, step)
+        if _default_interpret():
+            # Whole-array blocks: tiling is a TPU bandwidth concern only.
+            bm, bn, bk = m, n, k
+        else:
+            _note_fallback("dequant_matmul", (m, n, k), "blocks not divisible")
+            return _ref_dequant_matmul(x, codes, step)
     _note_kernel("dequant_matmul")
-    return _dequant_matmul(
+    return _dequant_matmul_jit(
         x, codes, step, block_m=bm, block_n=bn, block_k=bk,
         interpret=_default_interpret(),
     )

@@ -1,150 +1,149 @@
-"""Batched serving driver: continuous-batch decode with int8 embedding tables.
+"""Serving driver: a thin CLI over the `repro.serving` Engine API.
 
-Usage (CPU, reduced config):
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+Two scenarios share one int8-resident Engine:
 
-Serving loop structure (the production shape):
-  * one jitted ``prefill`` building the KV cache per admitted batch,
-  * one jitted ``decode_step`` (single token, cache donated in/out),
-  * slot-based continuous batching: finished sequences' slots are refilled
-    from the request queue without recompiling (fixed batch geometry),
-  * the embedding table stays int8 (LPT) — decode reads de-quantize rows on
-    the fly; weights never exist in fp32.
+  LM decode (slot-based continuous batching):
+    PYTHONPATH=src python -m repro.launch.serve lm --arch qwen3-1.7b --smoke \
+        --batch 4 --prompt-len 32 --gen 16 --requests 8
+
+  CTR scoring (fixed-geometry batched admission):
+    PYTHONPATH=src python -m repro.launch.serve ctr --method alpt \
+        --batch 32 --requests 64
+
+Everything interesting lives in :mod:`repro.serving` — the Engine builds the
+method's ``serving_state`` (codes + scales for integer tables; the fp32
+table is never materialized), steps the scheduler, and reports metrics
+including resident embedding bytes and an accurate per-engine kernel
+fallback tally (``ops.fallback_scope``).  This file only parses flags,
+fabricates synthetic requests, and prints the report.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import functools
 import sys
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs, methods
-from repro.kernels import ops as kernel_ops
-from repro.models import transformer as tfm
+from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
+from repro.models.ctr import DCNConfig
+from repro.serving.ctr import CTREngine, CTRRequest
+from repro.serving.lm import LMEngine, LMRequest
 from repro.training import lm_trainer
+from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+
+# One synthetic CTR fixture shared by this CLI and benchmarks/serve_bench.py,
+# so the artifact's cells stay comparable with what the CLI demonstrates.
+CTR_DEMO_DATA = CTRDatasetConfig(
+    name="serve-synth", n_fields=8,
+    cardinalities=(97, 41, 13, 211, 89, 53, 17, 149),
+    teacher_rank=4, seed=0,
+)
+CTR_DEMO_DIM = 16
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # [T] int32
-    max_new: int
+def build_ctr_demo_engine(method: str, *, bits: int = 8, batch: int,
+                          train_steps: int, train_batch: int = 256):
+    """Train a few steps on the demo fixture, return ``(engine, data)``."""
+    data = CTRSynthetic(CTR_DEMO_DATA)
+    spec = methods.EmbeddingSpec(
+        method=method, n=CTR_DEMO_DATA.n_features, d=CTR_DEMO_DIM, bits=bits,
+        init_scale=0.05,
+    )
+    trainer = CTRTrainer(TrainerConfig(
+        spec=spec, model="dcn",
+        dcn=DCNConfig(n_fields=CTR_DEMO_DATA.n_fields, emb_dim=CTR_DEMO_DIM,
+                      cross_depth=2, mlp_widths=(64, 32)),
+    ))
+    state = trainer.init_state()
+    for i in range(train_steps):
+        ids, labels = data.batch("train", i, train_batch)
+        state, _ = trainer.train_step(state, ids, labels)
+    return CTREngine.from_state(state, trainer.cfg, batch=batch), data
 
 
-class ContinuousBatcher:
-    """Fixed-geometry slot scheduler (the vLLM-style loop, minus paging)."""
-
-    def __init__(self, params, table, cfg: tfm.ModelConfig, *, batch: int,
-                 max_len: int):
-        self.cfg = cfg
-        self.params = params
-        self.table = table
-        self.batch = batch
-        self.max_len = max_len
-        # The registered method's serving export: int-code tables de-quantize
-        # on the way out through the fused gather kernel; fp ships as-is
-        # (weights never exist in fp32 for integer-table methods until this
-        # point).  Any shape fallback off the kernel path is surfaced, never
-        # silent.
-        spec = lm_trainer.embedding_spec_of(cfg)
-        method = methods.get(spec.method)
-        if method.is_integer_table and spec.use_kernels:
-            # Fallback counting happens at trace time, so this reflects the
-            # export's dispatch when its shapes trace fresh (the serve CLI's
-            # normal case: the batcher is the process's first jit user).  A
-            # process that already traced these shapes under-reports here
-            # rather than paying a process-wide cache flush to re-count.
-            kernel_ops.reset_fallback_stats()
-        self.table_fp = method.serving_table(table, spec)
-        if method.is_integer_table and spec.use_kernels:
-            for fb in kernel_ops.fallback_stats()["fallbacks"]:
-                print(f"[serve] kernel fallback: {fb['op']} {fb['shape']} "
-                      f"({fb['reason']})")
-        self._decode = jax.jit(
-            functools.partial(tfm.decode_step, cfg=cfg), donate_argnums=(3,)
-        )
-        self._prefill = jax.jit(
-            functools.partial(tfm.prefill, cfg=cfg, max_len=max_len)
-        )
-        self.queue: list[Request] = []
-        self.done: dict[int, list[int]] = {}
-
-    def submit(self, req: Request):
-        self.queue.append(req)
-
-    def run(self):
-        """Prefill-then-decode in admission waves; returns {rid: tokens}."""
-        while self.queue:
-            wave = [self.queue.pop(0) for _ in range(min(self.batch,
-                                                         len(self.queue)))]
-            # Left-align prompts to a common length (pad with 0, mask decode).
-            plen = max(len(r.prompt) for r in wave)
-            toks = np.zeros((self.batch, plen), np.int32)
-            for i, r in enumerate(wave):
-                toks[i, -len(r.prompt):] = r.prompt  # right-aligned
-            logits, cache = self._prefill(
-                self.params, self.table_fp, jnp.asarray(toks)
-            )
-            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out = [[int(cur[i])] for i in range(len(wave))]
-            max_new = max(r.max_new for r in wave)
-            cache_len = jnp.asarray(plen, jnp.int32)
-            for step in range(max_new - 1):
-                logits, cache = self._decode(
-                    self.params, self.table_fp, cur, cache, cache_len
-                )
-                cache_len = cache_len + 1
-                cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                for i, r in enumerate(wave):
-                    if len(out[i]) < r.max_new:
-                        out[i].append(int(cur[i]))
-            for i, r in enumerate(wave):
-                self.done[r.rid] = out[i][: r.max_new]
-        return self.done
+def _print_report(engine) -> None:
+    m = engine.metrics()
+    per = (
+        f"{m.get('us_per_token', 0.0):.0f} us/token"
+        if engine.scenario == "lm" else f"{m.get('us_per_request', 0.0):.0f} us/request"
+    )
+    print(
+        f"[serve] {m['scenario']}/{m['embedding_method']}: "
+        f"{m['requests_completed']} requests in {m['wall_s']:.2f}s ({per}); "
+        f"resident embedding bytes {m['resident_embedding_bytes']} "
+        f"(codes {m['embedding_code_bytes']} + scales "
+        f"{m['embedding_scale_bytes']}; int8_resident={m['int8_resident']})"
+    )
+    report = engine.fallback_report()
+    for fb in report["fallbacks"]:
+        print(f"[serve] kernel fallback: {fb['op']} {fb['shape']} "
+              f"({fb['reason']})")
+    if not report["fallbacks"]:
+        print("[serve] kernel fallbacks: none")
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(configs.ARCHS), required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--requests", type=int, default=8)
-    args = ap.parse_args(argv)
-
-    cfg = configs.smoke_config(args.arch) if args.smoke else configs.full_config(args.arch)
+def _run_lm(args) -> int:
+    cfg = (configs.smoke_config(args.arch) if args.smoke
+           else configs.full_config(args.arch))
     if cfg.input_mode == "embeds":
         print("[serve] encoder-only arch has no decode; nothing to serve")
         return 0
     tcfg = lm_trainer.LMTrainerConfig()
     state = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
-    srv = ContinuousBatcher(
-        state.params, state.table, cfg, batch=args.batch,
+    engine = LMEngine.from_state(
+        state, cfg, tcfg, batch=args.batch,
         max_len=args.prompt_len + args.gen,
     )
     rng = np.random.RandomState(0)
-    t0 = time.time()
-    for rid in range(args.requests):
-        srv.submit(Request(
-            rid=rid,
+    for _ in range(args.requests):
+        engine.submit(LMRequest(
             prompt=rng.randint(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
             max_new=args.gen,
         ))
-    done = srv.run()
-    dt = time.time() - t0
-    total_tokens = sum(len(v) for v in done.values())
-    print(f"[serve] {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s)")
+    done = engine.run()
+    _print_report(engine)
     for rid in sorted(done)[:2]:
         print(f"  rid={rid} tokens={done[rid][:8]}...")
     return 0
+
+
+def _run_ctr(args) -> int:
+    engine, data = build_ctr_demo_engine(
+        args.method, bits=args.bits, batch=args.batch,
+        train_steps=args.train_steps,
+    )
+    ids, _ = data.batch("test", 0, args.requests)
+    rids = [engine.submit(CTRRequest(ids=row)) for row in ids]
+    done = engine.run()
+    _print_report(engine)
+    probs = [done[r]["prob"] for r in rids[:4]]
+    print(f"  first probs: {[round(p, 4) for p in probs]}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="scenario", required=True)
+
+    lm = sub.add_parser("lm", help="continuous-batch LM decode")
+    lm.add_argument("--arch", choices=sorted(configs.ARCHS), required=True)
+    lm.add_argument("--smoke", action="store_true")
+    lm.add_argument("--batch", type=int, default=4)
+    lm.add_argument("--prompt-len", type=int, default=32)
+    lm.add_argument("--gen", type=int, default=16)
+    lm.add_argument("--requests", type=int, default=8)
+
+    ctr = sub.add_parser("ctr", help="batched CTR request scoring")
+    ctr.add_argument("--method", choices=methods.available(), default="alpt")
+    ctr.add_argument("--bits", type=int, default=8)
+    ctr.add_argument("--batch", type=int, default=32)
+    ctr.add_argument("--requests", type=int, default=64)
+    ctr.add_argument("--train-steps", type=int, default=5)
+
+    args = ap.parse_args(argv)
+    return _run_lm(args) if args.scenario == "lm" else _run_ctr(args)
 
 
 if __name__ == "__main__":

@@ -6,6 +6,10 @@ fake-quant forward at the *updated* dense params).  ``spec.use_kernels``
 flows into :class:`~repro.core.alpt.ALPTConfig` so both sub-steps run fused:
 the weight step through ``ops.sparse_row_update``/``ops.lpt_update`` and the
 line-5 requantize-with-learned-Delta through ``ops.sr_round``.
+
+The learned Delta is exactly what serving keeps: ``serving_state`` (inherited
+int8-resident export) ships codes + the *learned* per-row scales straight
+into the ``repro.serving`` Engine.
 """
 from __future__ import annotations
 

@@ -46,6 +46,7 @@ from repro.core import pruning as pruning_core
 from repro.dist.context import hint
 from repro.kernels import ops as kernel_ops
 from repro.optim import adam_update
+from repro.serving import table as serving_tbl
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -250,6 +251,17 @@ class EmbeddingMethod(abc.ABC):
         """The [n, d] table a serving process ships (post-training export)."""
         return self.eval_table(state, spec)
 
+    def serving_state(self, state: Any, spec: EmbeddingSpec):
+        """What a serving Engine keeps *resident* (repro.serving).
+
+        Integer-table methods return their codes + scales
+        (:class:`repro.serving.table.QuantTable` — the fp32 table is never
+        materialized); the float-leaf default wraps the fp export.  Optimizer
+        slots (Adam moments, masks' training state) are always dropped here:
+        serving residency is inference state only.
+        """
+        return serving_tbl.FloatTable(self.serving_table(state, spec))
+
     # -------------------------------------------------- sharding / metadata
 
     def table_pspec(self, row, col, *, row_optimizer: str = "adam"):
@@ -351,6 +363,20 @@ class IntegerTableMethod(EmbeddingMethod):
         if not spec.use_kernels:
             return self.eval_table(state, spec)
         return self.lookup(state, jnp.arange(spec.n), spec)
+
+    def serving_state(self, state, spec):
+        """int8-resident serving export: the codes + per-row Delta as-is.
+
+        No de-quantization happens here at all — the Engine's jitted steps
+        read rows through ``ops.dequant_gather`` and the tied LM head through
+        ``ops.dequant_matmul``, so the fp32 table is deleted from the serving
+        story entirely (the PR-5 redesign).  Works for any state whose table
+        is a single ``LPTTable`` (lpt, alpt); composed tables override.
+        """
+        return serving_tbl.QuantTable(
+            codes=state.codes, step=state.step, n=spec.n, d=spec.d,
+            use_kernels=spec.use_kernels,
+        )
 
     def fused_row_step(self, state, ids, *, spec, loss_from_rows, dense_params,
                        dense_opt, update_dense, lr, weight_decay, noise_key):

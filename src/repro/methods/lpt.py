@@ -6,6 +6,11 @@ Thin adapter over :mod:`repro.core.lpt` — the paper-faithful math stays there.
 via ``sparse_row_update``, the dense write-back via ``lpt_update``;
 ``spec.pad_to_tiles`` allocates the table at kernel-tile geometry (live
 ``(n, d)`` is sliced back out everywhere the model looks).
+
+Serving ships the table as-is: ``serving_state`` (inherited from
+:class:`~repro.methods.base.IntegerTableMethod`) hands the codes + per-row
+Delta to the ``repro.serving`` Engine, which reads rows through
+``ops.dequant_gather`` inside its jitted steps — no fp32 export.
 """
 from __future__ import annotations
 

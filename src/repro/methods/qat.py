@@ -7,6 +7,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import qat as qat_core
 from repro.core import quant
 from repro.methods.base import EmbeddingMethod, register
+from repro.serving import table as serving_tbl
 
 
 class _QATMethod(EmbeddingMethod):
@@ -41,6 +42,15 @@ class _QATMethod(EmbeddingMethod):
     def serving_table(self, state, spec):
         codes, step = qat_core.export_int8(state, spec.bits, method=self.variant)
         return quant.dequantize(codes, step)
+
+    def serving_state(self, state, spec):
+        """QAT's whole deployment story is the int8 export — serve it
+        int8-resident (codes + step), not re-inflated to fp32."""
+        codes, step = qat_core.export_int8(state, spec.bits, method=self.variant)
+        return serving_tbl.QuantTable(
+            codes=codes, step=step, n=spec.n, d=spec.d,
+            use_kernels=spec.use_kernels,
+        )
 
     def table_pspec(self, row, col, *, row_optimizer="adam"):
         return qat_core.QATTable(weights=P(row, col), scale=P(row))

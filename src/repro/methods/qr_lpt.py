@@ -1,4 +1,4 @@
-"""qr_lpt: quotient-remainder hashing composed with int8 LPT tables.
+"""qr_lpt / qr_alpt: quotient-remainder hashing composed with int8 LPT tables.
 
 The composed compressor the old two-bucket ``FLOAT_METHODS``/``INT_METHODS``
 split could not express: both QR sub-tables (Shi et al. 2020) live as int8
@@ -23,10 +23,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import alpt as alpt_core
 from repro.core import hashing
 from repro.core import lpt as lpt_core
+from repro.core import quant
 from repro.kernels import ops as kernel_ops
 from repro.methods.base import IntegerTableMethod, _round_up, register
+from repro.serving import table as serving_tbl
 
 
 class QRLPTTable(NamedTuple):
@@ -153,3 +156,232 @@ class QRLPTMethod(IntegerTableMethod):
         # Sub-table row counts rarely divide the mesh axes; stay replicated.
         sub = lpt_core.LPTTable(codes=P(), step=P(), mu=P(), nu=P(), count=P())
         return QRLPTTable(remainder=sub, quotient=sub, r=P())
+
+    def serving_state(self, state, spec):
+        """int8-resident composition: both sub-tables ship codes + their own
+        per-row scale vector (qr_alpt *learns* both; serving honors each)."""
+        r, q_rows = hashing.qr_rows(spec.n, spec.hash_compression)
+
+        def sub(table, live_rows):
+            return serving_tbl.QuantTable(
+                codes=table.codes, step=table.step, n=live_rows, d=spec.d,
+                use_kernels=spec.use_kernels,
+            )
+
+        # The modulus comes from the spec (qr_rows is deterministic), not
+        # int(state.r): serving templates build this under jax.eval_shape,
+        # where the state is abstract.
+        return serving_tbl.QRQuantTable(
+            remainder=sub(state.remainder, r),
+            quotient=sub(state.quotient, q_rows),
+            r=r, n=spec.n, d=spec.d,
+        )
+
+
+@register("qr_alpt")
+class QRALPTMethod(QRLPTMethod):
+    """qr_lpt with ALPT's learned step size on BOTH sub-tables.
+
+    The ROADMAP follow-up ("ALPT-ize qr_lpt"): each sub-table keeps its own
+    per-row Delta and learns it via the LSQ-style second forward (paper
+    Algorithm 1 line 4) evaluated *through the composed product table*, so
+    the two scale vectors co-adapt — d(loss)/d(Delta_rem) sees the quotient
+    factor and vice versa, exactly like the weight gradients do.  The weight
+    sub-step is qr_lpt's product-rule update unchanged; serving inherits the
+    per-sub-table-scale :class:`~repro.serving.table.QRQuantTable` export.
+    """
+
+    has_learned_step = True
+
+    @staticmethod
+    def _acfg(spec, weight_decay) -> alpt_core.ALPTConfig:
+        return spec.alpt._replace(
+            weight_decay=weight_decay, optimizer=spec.row_optimizer,
+            use_kernels=spec.use_kernels,
+        )
+
+    def _delta_writeback(self, table, uniq, w_new, step_b, g_step, *, cfg,
+                         noise_key):
+        """Algorithm 1 line 5 for one sub-table: Delta update + SR
+        re-quantize of the already-float-updated unique rows (mirrors
+        ``alpt_core.alpt_step``'s tail, including its noise keying)."""
+        new_step_b = step_b - cfg.step_lr * (
+            g_step + cfg.step_weight_decay * step_b
+        )
+        new_step_b = jnp.maximum(new_step_b, 1e-8)
+        noise = quant.sr_noise(jax.random.fold_in(noise_key, 1), w_new.shape)
+        if cfg.use_kernels and cfg.rounding == "sr":
+            codes_rows = kernel_ops.sr_round(w_new, new_step_b, noise, cfg.bits)
+        else:
+            if cfg.use_kernels:
+                kernel_ops.note_fallback("sr_round", w_new.shape, "dr rounding")
+            codes_rows = quant.quantize_codes(
+                w_new, new_step_b, cfg.bits, cfg.rounding, noise
+            )
+        return table._replace(
+            codes=table.codes.at[uniq].set(codes_rows, mode="drop"),
+            step=table.step.at[uniq].set(new_step_b, mode="drop"),
+        )
+
+    def fused_row_step(self, state, ids, *, spec, loss_from_rows, dense_params,
+                       dense_opt, update_dense, lr, weight_decay, noise_key):
+        cfg = self._acfg(spec, weight_decay)
+        r, q_rows = hashing.qr_rows(spec.n, spec.hash_compression)
+        rid, qid = ids % state.r, ids // state.r
+        rem = lpt_core.lookup(
+            state.remainder, rid, use_kernels=spec.use_kernels, out_dim=spec.d
+        )
+        quo = lpt_core.lookup(
+            state.quotient, qid, use_kernels=spec.use_kernels, out_dim=spec.d
+        )
+
+        # Step 1 (weights): one joint backward, product-rule row cotangents,
+        # each sub-table's sparse update keeps its updated float rows around
+        # for the Delta sub-step.
+        loss, (g_rows, g_dense) = jax.value_and_grad(loss_from_rows, (0, 1))(
+            rem * quo, dense_params
+        )
+        new_dense, new_opt = update_dense(g_dense, dense_opt, dense_params)
+        k_rem = jax.random.fold_in(noise_key, 0)
+        k_quo = jax.random.fold_in(noise_key, 1)
+        kw = dict(lr=lr, bits=spec.bits, rounding=spec.alpt.rounding,
+                  optimizer=spec.row_optimizer, weight_decay=weight_decay,
+                  return_updated_rows=True, use_kernels=spec.use_kernels)
+        rem1, (uniq_r, w_new_r) = lpt_core.sparse_apply(
+            state.remainder, rid, g_rows * quo, noise_key=k_rem, id_space=r,
+            **kw,
+        )
+        quo1, (uniq_q, w_new_q) = lpt_core.sparse_apply(
+            state.quotient, qid, g_rows * rem, noise_key=k_quo,
+            id_space=q_rows, **kw,
+        )
+
+        # Step 2 (Delta, Algorithm 1 line 4): both step vectors jointly, at
+        # the UPDATED dense params, through the fake-quantized product of the
+        # updated sub-table rows.
+        d = state.remainder.dim
+        step_r = jnp.take(
+            state.remainder.step, jnp.minimum(uniq_r, state.remainder.n_rows - 1)
+        )
+        step_q = jnp.take(
+            state.quotient.step, jnp.minimum(uniq_q, state.quotient.n_rows - 1)
+        )
+        inv_r = lpt_core.dedup_ids(rid, r)[1]
+        inv_q = lpt_core.dedup_ids(qid, q_rows)[1]
+        gscale = alpt_core.grad_scale_factor(
+            cfg, batch_rows=int(ids.size), dim=spec.d
+        )
+
+        def loss_wrt_steps(steps):
+            s_r, s_q = steps
+            rq = quant.fake_quant_lsq(
+                jax.lax.stop_gradient(w_new_r), s_r, cfg.bits, gscale
+            )
+            qq = quant.fake_quant_lsq(
+                jax.lax.stop_gradient(w_new_q), s_q, cfg.bits, gscale
+            )
+            occ = (
+                jnp.take(rq, inv_r, axis=0) * jnp.take(qq, inv_q, axis=0)
+            ).reshape(ids.shape + (d,))
+            if spec.d != d:
+                occ = occ[..., : spec.d]
+            return loss_from_rows(occ, new_dense)
+
+        g_sr, g_sq = jax.grad(loss_wrt_steps)((step_r, step_q))
+        new_rem = self._delta_writeback(
+            rem1, uniq_r, w_new_r, step_r, g_sr, cfg=cfg, noise_key=k_rem
+        )
+        new_quo = self._delta_writeback(
+            quo1, uniq_q, w_new_q, step_q, g_sq, cfg=cfg, noise_key=k_quo
+        )
+        aux = {
+            "step_grad_norm": jnp.sqrt(
+                jnp.sum(jnp.square(g_sr)) + jnp.sum(jnp.square(g_sq))
+            ),
+            "mean_step": 0.5 * (jnp.mean(new_rem.step) + jnp.mean(new_quo.step)),
+        }
+        return (
+            QRLPTTable(remainder=new_rem, quotient=new_quo, r=state.r),
+            new_dense, new_opt, {"loss": loss, **aux},
+        )
+
+    def dense_update(self, state, opt, grads, *, spec, lr, weight_decay,
+                     noise_key=None, delta_grad=None, batch_rows=None):
+        """Rank-invariant formulation: segment-summed sub-table gradients,
+        then the joint two-sub-table Delta sub-step (``delta_grad`` receives
+        pytrees of both sub-tables' updated rows / step vectors)."""
+        cfg = self._acfg(spec, weight_decay)
+        r, q_rows = hashing.qr_rows(spec.n, spec.hash_compression)
+        ids = jnp.arange(spec.n)
+        rid, qid = ids % state.r, ids // state.r
+        rem = lpt_core.lookup(
+            state.remainder, rid, use_kernels=spec.use_kernels, out_dim=spec.d
+        )
+        quo = lpt_core.lookup(
+            state.quotient, qid, use_kernels=spec.use_kernels, out_dim=spec.d
+        )
+        d_pad = state.remainder.dim - spec.d
+        g_rem = jax.ops.segment_sum(
+            grads * quo, rid, num_segments=state.remainder.n_rows
+        )
+        g_quo = jax.ops.segment_sum(
+            grads * rem, qid, num_segments=state.quotient.n_rows
+        )
+        if d_pad:
+            g_rem = jnp.pad(g_rem, ((0, 0), (0, d_pad)))
+            g_quo = jnp.pad(g_quo, ((0, 0), (0, d_pad)))
+        upd_r = alpt_core.dense_weight_update(state.remainder, g_rem, cfg=cfg, lr=lr)
+        upd_q = alpt_core.dense_weight_update(state.quotient, g_quo, cfg=cfg, lr=lr)
+        gscale = alpt_core.grad_scale_factor(
+            cfg, batch_rows=int(batch_rows), dim=spec.d
+        )
+        # Algorithm 1 line 4 at the caller's UPDATED dense params; live
+        # geometry only (pad rows/cols never looked up), gradients padded back.
+        g_sr, g_sq = delta_grad(
+            (upd_r.w_new[:r, : spec.d], upd_q.w_new[:q_rows, : spec.d]),
+            (state.remainder.step[:r], state.quotient.step[:q_rows]),
+            gscale,
+        )
+        if g_sr.shape != state.remainder.step.shape:
+            g_sr = jnp.pad(g_sr, (0, state.remainder.step.shape[0] - g_sr.shape[0]))
+        if g_sq.shape != state.quotient.step.shape:
+            g_sq = jnp.pad(g_sq, (0, state.quotient.step.shape[0] - g_sq.shape[0]))
+        new_rem = alpt_core.dense_finish(
+            state.remainder, upd_r, g_sr, cfg=cfg,
+            noise_key=jax.random.fold_in(noise_key, 0),
+        )
+        new_quo = alpt_core.dense_finish(
+            state.quotient, upd_q, g_sq, cfg=cfg,
+            noise_key=jax.random.fold_in(noise_key, 1),
+        )
+        aux = {
+            "step_grad_norm": jnp.sqrt(
+                jnp.sum(jnp.square(g_sr)) + jnp.sum(jnp.square(g_sq))
+            ),
+            "mean_step": 0.5 * (jnp.mean(new_rem.step) + jnp.mean(new_quo.step)),
+        }
+        return QRLPTTable(remainder=new_rem, quotient=new_quo, r=state.r), None, aux
+
+    def dense_delta_grad(self, w_new, step_vec, loss_fn_q, *, spec,
+                         weight_decay, gscale):
+        """Joint Delta gradient through the composed table: ``w_new`` /
+        ``step_vec`` are (remainder, quotient) pytrees; the fake-quantized
+        product is what ``loss_fn_q`` scores (Eq. 6/7 routes each gradient to
+        its own scale vector)."""
+        cfg = self._acfg(spec, weight_decay)
+        r, _ = hashing.qr_rows(spec.n, spec.hash_compression)
+        w_r, w_q = w_new
+        ids = jnp.arange(spec.n)
+        rid, qid = ids % r, ids // r
+
+        def loss_wrt_steps(steps):
+            s_r, s_q = steps
+            rq = quant.fake_quant_lsq(
+                jax.lax.stop_gradient(w_r), s_r, cfg.bits, gscale
+            )
+            qq = quant.fake_quant_lsq(
+                jax.lax.stop_gradient(w_q), s_q, cfg.bits, gscale
+            )
+            return loss_fn_q(jnp.take(rq, rid, axis=0) * jnp.take(qq, qid, axis=0))
+
+        return jax.grad(loss_wrt_steps)((step_vec[0], step_vec[1]))

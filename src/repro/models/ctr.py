@@ -142,6 +142,30 @@ def deepfm_forward(
     return fm1 + fm2 + deep
 
 
+def logits_from_rows(
+    dense_params: dict[str, Any],
+    rows: jax.Array,  # [B, F, d] (DeepFM: d+1 — last column is first-order)
+    cfg: DCNConfig | DeepFMConfig,
+    *,
+    model: str = "dcn",
+    dropout_key: jax.Array | None = None,
+) -> jax.Array:
+    """One entry point from looked-up rows to logits for every CTR backbone.
+
+    Shared by the trainer (which differentiates through it w.r.t. the rows)
+    and the serving engine (which feeds it rows read straight off the int8
+    codes via ``serving.table.rows``).  DeepFM packs the first-order scalar
+    table as the last embedding column, so one [B, F, d+1] lookup serves both
+    towers.
+    """
+    if model == "deepfm":
+        r, first = rows[..., :-1], rows[..., -1]
+        return deepfm_forward(
+            dense_params, r, first, cfg, dropout_key=dropout_key
+        )
+    return dcn_forward(dense_params, rows, cfg, dropout_key=dropout_key)
+
+
 def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
     """Mean binary cross-entropy from logits (numerically stable)."""
     return jnp.mean(

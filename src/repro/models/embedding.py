@@ -14,7 +14,7 @@ Lookup/update semantics per method family:
   * float-leaf methods ('fp', 'lsq', 'pact', 'hash', 'prune') —
     ``trainable_params`` exposes differentiable leaves, updated by the
     caller's optimizer.
-  * integer-table methods ('lpt', 'alpt', 'qr_lpt') — the table is int8
+  * integer-table methods ('lpt', 'alpt', 'qr_lpt', 'qr_alpt') — the table is int8
     state, not a differentiable leaf.  The trainer differentiates w.r.t. the
     *looked-up rows* and the method applies them (Eq. 8 / Algorithm 1).
 """

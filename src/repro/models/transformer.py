@@ -30,6 +30,7 @@ from repro.dist.context import hint
 from repro.models import layers as L
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
+from repro.serving import table as serving_tbl
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,10 +233,21 @@ def _attn_block(p, x, cfg: ModelConfig, *, positions, cache=None, cache_len=None
         # this is what bounds long_500k memory for mixtral/h2o-danube.
         cache_size = cache["k"].shape[1]
         ring = cfg.sliding_window is not None and cache_size <= cfg.sliding_window
-        write_idx = cache_len % cache_size if ring else cache_len
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, write_idx, 1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, write_idx, 1)
-        valid_len = jnp.minimum(cache_len + 1, cache_size) if ring else cache_len + 1
+        cl = jnp.asarray(cache_len)
+        if cl.ndim == 0:
+            write_idx = cl % cache_size if ring else cl
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, write_idx, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, write_idx, 1)
+        else:
+            # Per-slot lengths (the serving Engine's continuous batching):
+            # each batch row writes its token at its own cache position.
+            write_idx = (
+                cl % cache_size if ring else jnp.minimum(cl, cache_size - 1)
+            )
+            rows = jnp.arange(b)
+            k_cache = cache["k"].at[rows, write_idx].set(k[:, 0])
+            v_cache = cache["v"].at[rows, write_idx].set(v[:, 0])
+        valid_len = jnp.minimum(cl + 1, cache_size) if ring else cl + 1
         o = L.decode_attention(
             q, k_cache, v_cache, valid_len,
             window=None if ring else cfg.sliding_window,
@@ -355,8 +367,12 @@ def backbone(
     return L.rms_norm(x, params["final_norm"]), aux
 
 
-def embed_tokens(table_fp: jax.Array, tokens: jax.Array, cfg: ModelConfig):
-    emb = jnp.take(table_fp, tokens, axis=0).astype(cfg.dtype)
+def embed_tokens(table_fp, tokens: jax.Array, cfg: ModelConfig):
+    """Token rows from either a float [V, d] table or an int8-resident
+    serving table (repro.serving.table) — the latter reads through the fused
+    ``ops.dequant_gather`` inside the jitted step, bitwise-equal to gathering
+    the de-quantized export."""
+    emb = serving_tbl.rows(table_fp, tokens).astype(cfg.dtype)
     # Standard embedding scale keeps quantized-table variance usable.
     return emb
 
@@ -367,8 +383,22 @@ def head_logits(params, table_fp, h, cfg: ModelConfig):
     The hint reshards the weight to vocab-sharded at the matmul: for untied
     heads it is a no-op / FSDP gather; for the tied quantized table it is the
     d-sharded -> vocab-sharded reshard, paid in cfg.dtype (bf16) bytes.
+
+    A tied int8-resident serving table instead contracts through
+    ``ops.dequant_matmul``: weight tiles de-quantize in VMEM right before the
+    MXU, 1 byte/weight off HBM, no fp32 table anywhere.  The contraction runs
+    in f32, so under ``cfg.dtype == float32`` (every serving config today) it
+    is bitwise-equal to the fp-exported einsum; a bf16 config would make the
+    quantized head *more* precise than the bf16 float path, not less, and
+    parity becomes approximate.  The ``head_weight`` reshard hint is not
+    emitted here — single-host serving only; the multi-host follow-up
+    (ROADMAP) owns sharding the codes.
     """
     w = table_fp if cfg.tie_embeddings else params["head"]
+    if serving_tbl.is_integer_resident(w):
+        return serving_tbl.head_logits(w, h)
+    if isinstance(w, serving_tbl.FloatTable):
+        w = w.table
     w = hint(w.astype(cfg.dtype), "head_weight")
     return jnp.einsum("...d,vd->...v", h, w).astype(jnp.float32)
 
@@ -490,14 +520,21 @@ def decode_step(
     table_fp,
     token: jax.Array,  # [B] int32 current token
     cache: list,
-    cache_len: jax.Array,  # scalar int32 — tokens already in cache
+    cache_len: jax.Array,  # int32 [] or [B] — tokens already in cache per slot
     cfg: ModelConfig,
 ):
-    """One serve_step: returns (logits [B, V], new_cache)."""
+    """One serve_step: returns (logits [B, V], new_cache).
+
+    ``cache_len`` may be a scalar (all slots in lock-step, the historical
+    wave path) or a per-slot [B] vector — the serving Engine's slot-based
+    continuous batching, where refilled slots carry different lengths.
+    """
     b = token.shape[0]
     x = embed_tokens(table_fp, token[:, None], cfg)
-    # RoPE positions are the absolute index of the new token.
-    positions = default_positions(b, 1, cfg, offset=0) + cache_len
+    # RoPE positions are the absolute index of each slot's new token.
+    cl = jnp.asarray(cache_len)
+    offset = cl[:, None] if cl.ndim == 1 else cl
+    positions = default_positions(b, 1, cfg, offset=0) + offset
 
     def group_step(x, xs):
         gparams, gcache = xs
@@ -522,9 +559,23 @@ def decode_step(
 
 
 def prefill(
-    params, table_fp, tokens: jax.Array, cfg: ModelConfig, max_len: int
+    params, table_fp, tokens: jax.Array, cfg: ModelConfig, max_len: int,
+    lens: jax.Array | None = None,
 ):
-    """Run the full prompt, build the decode cache. Returns (logits_last, cache)."""
+    """Run the full prompt, build the decode cache. Returns (logits_last, cache).
+
+    ``lens`` ([B] int32, optional) marks each row's true prompt length for
+    right-padded batches: the returned logits come from position ``lens-1``
+    per row.  Causal attention masks the padding *exactly* (pad keys
+    contribute zero), so the first ``lens`` cache positions are valid and the
+    decoder masks the rest via its per-slot ``cache_len`` — but the padded
+    sequence length changes XLA's reduction shapes, so results match an
+    exact-length prefill numerically (~1 ulp), not bitwise.  Only meaningful
+    for attention-only stacks — an SSM layer's final state would have
+    scanned through the padding; the serving Engine therefore prefills at
+    exact length (bitwise per-request determinism) and keeps this as the
+    future bucketed-prefill path.
+    """
     b, t = tokens.shape
     x = embed_tokens(table_fp, tokens, cfg)
     positions = default_positions(b, t, cfg)
@@ -558,5 +609,10 @@ def prefill(
 
     x, cache = jax.lax.scan(group_step, x, params["blocks"])
     h_final = L.rms_norm(x, params["final_norm"])
-    logits = head_logits(params, table_fp, h_final[:, -1], cfg)
+    if lens is None:
+        h_last = h_final[:, -1]
+    else:
+        idx = jnp.clip(lens - 1, 0, t - 1)
+        h_last = jnp.take_along_axis(h_final, idx[:, None, None], axis=1)[:, 0]
+    logits = head_logits(params, table_fp, h_last, cfg)
     return logits, cache

@@ -1,0 +1,40 @@
+"""`repro.serving` — the int8-resident serving subsystem.
+
+One :class:`~repro.serving.engine.Engine` API (build from a checkpoint or
+trainer state + ``EmbeddingSpec``; submit/poll requests; step the scheduler;
+report metrics) with two scenario frontends sharing it:
+
+* :mod:`repro.serving.lm` — slot-based continuous-batch LM prefill/decode;
+* :mod:`repro.serving.ctr` — batched CTR request scoring.
+
+For integer-table embedding methods the resident state is
+:class:`~repro.serving.table.QuantTable` codes + scales — the fp32 table is
+never materialized, in HBM or host memory (``Engine.resident_embedding_bytes``
+is the int8 footprint ``benchmarks/serve_bench.py`` asserts).
+
+The engine/frontends import the model and method layers, which themselves
+import :mod:`repro.serving.table`; this ``__init__`` therefore loads only the
+table types eagerly and resolves the engine classes lazily.
+"""
+from repro.serving import table  # noqa: F401
+
+_LAZY = {
+    "Engine": ("repro.serving.engine", "Engine"),
+    "EngineMetrics": ("repro.serving.engine", "EngineMetrics"),
+    "LMEngine": ("repro.serving.lm", "LMEngine"),
+    "LMRequest": ("repro.serving.lm", "LMRequest"),
+    "CTREngine": ("repro.serving.ctr", "CTREngine"),
+    "CTRRequest": ("repro.serving.ctr", "CTRRequest"),
+}
+
+__all__ = ["table", *_LAZY]
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(module), attr)

@@ -1,0 +1,116 @@
+"""CTR serving frontend: batched request scoring at fixed jit geometry.
+
+The missing half of a CTR reproduction's deployment story: requests (one
+[n_fields] categorical id vector each) are admitted in waves of up to
+``batch``, padded to the fixed [batch, n_fields] geometry the jitted scorer
+was traced at (pad rows repeat the first real request and their outputs are
+discarded), and scored through the shared :func:`repro.models.ctr
+.logits_from_rows` forward.
+
+Embedding reads go straight off the int8 codes through ``ops.dequant_gather``
+inside the jitted step — for integer-table methods the engine's resident
+embedding bytes are the code bytes + scale vectors, nothing else.  Scores are
+per-row independent, so a request's (logit, prob) is bitwise identical
+whatever batch it lands in (the CTR determinism contract, tested in
+tests/test_serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import methods
+from repro.models import ctr as ctr_models
+from repro.serving import table as serving_tbl
+from repro.serving.engine import Engine
+
+
+@dataclasses.dataclass(frozen=True)
+class CTRRequest:
+    ids: np.ndarray  # [n_fields] int32 global feature ids
+    rid: int | None = None
+
+
+class CTREngine(Engine):
+    scenario = "ctr"
+
+    def __init__(self, dense_params, serving_table,
+                 model_cfg, spec: methods.EmbeddingSpec, *, batch: int,
+                 model: str = "dcn"):
+        super().__init__(serving_table=serving_table, spec=spec)
+        self.dense_params = dense_params
+        self.model_cfg = model_cfg
+        self.model = model
+        self.batch = batch
+        self.n_fields = model_cfg.n_fields
+
+        def score(table, dense, ids):
+            rows = serving_tbl.rows(table, ids)
+            # Materialize the rows interface: the dense forward compiles to
+            # the same program whatever produced the rows (fused int8 gather
+            # or an fp export), which is what makes the quant-vs-float parity
+            # bitwise instead of fusion-dependent.
+            rows = jax.lax.optimization_barrier(rows)
+            logits = ctr_models.logits_from_rows(
+                dense, rows, model_cfg, model=model
+            )
+            return logits, jax.nn.sigmoid(logits)
+
+        self._score = jax.jit(score)
+
+    # ------------------------------------------------------------ build
+
+    @classmethod
+    def from_state(cls, state, cfg, *, batch: int) -> "CTREngine":
+        """Build from a ``ctr_trainer.TrainState`` + its ``TrainerConfig``."""
+        model_cfg = cfg.dcn if cfg.model == "dcn" else cfg.deepfm
+        table = cls.build_serving_state(state.emb_state, cfg.spec)
+        return cls(state.dense_params, table, model_cfg, cfg.spec,
+                   batch=batch, model=cfg.model)
+
+    @classmethod
+    def from_checkpoint(cls, directory, cfg, dense_template, *,
+                        batch: int, step: int | None = None) -> "CTREngine":
+        """Restore dense params + the serving-resident table from a serving
+        checkpoint (int8 codes restore as int8, straight into residency)."""
+        from repro.checkpoint import manager
+
+        dense, table, _ = manager.restore_serving_checkpoint(
+            directory, cfg.spec, dense_template, step=step
+        )
+        model_cfg = cfg.dcn if cfg.model == "dcn" else cfg.deepfm
+        return cls(dense, table, model_cfg, cfg.spec, batch=batch,
+                   model=cfg.model)
+
+    # ------------------------------------------------------------ scheduler
+
+    def submit(self, request: CTRRequest) -> int:
+        if np.shape(request.ids) != (self.n_fields,):
+            raise ValueError(
+                f"request ids shape {np.shape(request.ids)} != "
+                f"({self.n_fields},)"
+            )
+        return super().submit(request)
+
+    def _advance(self) -> None:
+        wave = [
+            self._queue.popleft()
+            for _ in range(min(self.batch, len(self._queue)))
+        ]
+        ids = np.zeros((self.batch, self.n_fields), np.int32)
+        for i, req in enumerate(wave):
+            ids[i] = req.ids
+        # Pad rows repeat request 0 (always in range); outputs discarded.
+        ids[len(wave):] = ids[0]
+        logits, probs = self._score(
+            self.table, self.dense_params, jnp.asarray(ids)
+        )
+        logits = np.asarray(logits)
+        probs = np.asarray(probs)
+        for i, req in enumerate(wave):
+            self._finish(
+                req.rid, {"logit": float(logits[i]), "prob": float(probs[i])}
+            )

@@ -1,0 +1,169 @@
+"""The `Engine`: one serving API for every scenario frontend.
+
+An Engine owns
+
+* the **resident embedding state** — built once from a trainer state or a
+  checkpoint via the method's ``serving_state`` capability.  For integer-
+  table methods that is :class:`~repro.serving.table.QuantTable` codes +
+  scales; the fp32 table is never materialized (``resident_embedding_bytes``
+  is the int8 footprint the serve benchmark asserts);
+* the **request lifecycle** — ``submit`` enqueues, ``step`` advances the
+  scenario's scheduler by one unit of work, ``poll`` returns a finished
+  request's result, ``run`` drains everything;
+* the **metrics surface** — request/step/token counters, wall-clock split by
+  phase, the resident-bytes accounting, and an accurate per-engine kernel
+  fallback report (``ops.fallback_scope`` wraps every jitted call site, so
+  dispatch decisions are observed even when the process traced the same
+  shapes before the engine existed — the bug the old serve CLI's
+  reset-then-read dance admitted to).
+
+Scenario frontends subclass this: :class:`repro.serving.lm.LMEngine`
+(slot-based continuous-batch prefill/decode) and
+:class:`repro.serving.ctr.CTREngine` (fixed-geometry batched scoring).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any
+
+from repro import methods
+from repro.kernels import ops as kernel_ops
+from repro.serving import table as serving_tbl
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Mutable per-engine counters; ``Engine.metrics()`` renders the dict."""
+
+    requests_submitted: int = 0
+    requests_completed: int = 0
+    steps: int = 0
+    tokens_generated: int = 0  # LM only
+    wall_s: float = 0.0
+
+
+class Engine:
+    """Shared serving core: resident table + queue + scheduler + metrics."""
+
+    #: Scenario tag frontends set ('lm' | 'ctr'); shows up in metrics.
+    scenario: str = "?"
+
+    def __init__(self, *, serving_table, spec: methods.EmbeddingSpec):
+        self.table = serving_table
+        self.spec = spec
+        self._queue: collections.deque = collections.deque()
+        self._done: dict[int, Any] = {}
+        self._next_rid = 0
+        self._metrics = EngineMetrics()
+        # One scope for the engine's lifetime: every jitted call site below
+        # runs under it, so the report covers exactly this engine's dispatch.
+        self._fallbacks = kernel_ops.FallbackScope()
+
+    # ------------------------------------------------------------ build
+
+    @staticmethod
+    def build_serving_state(table_state, spec: methods.EmbeddingSpec):
+        """The method's serving-resident export for a trained table state."""
+        return methods.get(spec.method).serving_state(table_state, spec)
+
+    # ------------------------------------------------------------ requests
+
+    def submit(self, request) -> int:
+        """Enqueue one request; returns its rid (assigned if the request has
+        ``rid=None``)."""
+        rid = getattr(request, "rid", None)
+        if rid is None:
+            rid = self._next_rid
+            request = dataclasses.replace(request, rid=rid)
+        self._next_rid = max(self._next_rid, rid + 1)
+        self._queue.append(request)
+        self._metrics.requests_submitted += 1
+        return rid
+
+    def poll(self, rid: int):
+        """The finished result for ``rid``, or None while still in flight."""
+        return self._done.get(rid)
+
+    @property
+    def pending(self) -> int:
+        """Requests not yet finished (queued + in flight)."""
+        return self._metrics.requests_submitted - self._metrics.requests_completed
+
+    def step(self) -> bool:
+        """Advance the scheduler by one unit of work.
+
+        Returns True while there is (or was) work; False once idle.  All
+        device work runs inside the engine's fallback scope so the metrics
+        report every kernel fallback this engine's shapes hit.
+        """
+        if not self._has_work():
+            return False
+        t0 = time.perf_counter()
+        with kernel_ops.fallback_scope(self._fallbacks):
+            self._advance()
+        self._metrics.wall_s += time.perf_counter() - t0
+        self._metrics.steps += 1
+        return True
+
+    def run(self) -> dict[int, Any]:
+        """Drain the queue; returns {rid: result} for everything finished."""
+        while self.step():
+            pass
+        return dict(self._done)
+
+    # ------------------------------------------------------------ scenario
+
+    def _has_work(self) -> bool:
+        return bool(self._queue)
+
+    def _advance(self) -> None:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def _finish(self, rid: int, result) -> None:
+        self._done[rid] = result
+        self._metrics.requests_completed += 1
+
+    # ------------------------------------------------------------ metrics
+
+    @property
+    def resident_embedding_bytes(self) -> int:
+        """Bytes of embedding state this engine keeps resident — for
+        integer-table methods: int8 code bytes + scale bytes, nothing else."""
+        return serving_tbl.resident_bytes(self.table)
+
+    @property
+    def int8_resident(self) -> bool:
+        return serving_tbl.is_integer_resident(self.table)
+
+    def fallback_report(self) -> dict:
+        """Kernel-vs-fallback dispatch seen by THIS engine's call sites."""
+        return self._fallbacks.stats()
+
+    def reset_metrics(self) -> None:
+        """Zero the counters (benchmarks warm the jit traces, then measure).
+        Finished results and the fallback report are kept."""
+        self._metrics = EngineMetrics()
+
+    def metrics(self) -> dict:
+        m = self._metrics
+        out = {
+            "scenario": self.scenario,
+            "embedding_method": self.spec.method,
+            "requests_submitted": m.requests_submitted,
+            "requests_completed": m.requests_completed,
+            "steps": m.steps,
+            "wall_s": m.wall_s,
+            "resident_embedding_bytes": self.resident_embedding_bytes,
+            "embedding_code_bytes": serving_tbl.code_bytes(self.table),
+            "embedding_scale_bytes": serving_tbl.scale_bytes(self.table),
+            "int8_resident": self.int8_resident,
+            "kernel_fallbacks": self.fallback_report()["total_fallbacks"],
+        }
+        if m.requests_completed:
+            out["us_per_request"] = m.wall_s / m.requests_completed * 1e6
+        if m.tokens_generated:
+            out["tokens_generated"] = m.tokens_generated
+            out["us_per_token"] = m.wall_s / m.tokens_generated * 1e6
+        return out

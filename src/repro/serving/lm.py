@@ -1,0 +1,177 @@
+"""LM serving frontend: slot-based continuous-batch prefill/decode.
+
+The production decode shape, re-homed from the old ``launch/serve.py`` loop
+and upgraded from wave admission to real slot refill:
+
+* one jitted ``prefill`` per prompt length (batch=1 — exact length, so the
+  result is bitwise independent of whatever else is in flight, and recurrent
+  (SSM) layers see no padding),
+* one jitted ``decode_step`` over the fixed slot batch (cache donated
+  in/out) with a **per-slot** ``cache_len`` vector, so a freshly refilled
+  slot decodes next to slots deep into generation without recompiling,
+* finished slots are refilled from the queue immediately — no wave barrier.
+
+Per-request determinism (the slot-refill contract, tested in
+tests/test_serve.py): every per-row op in the decode step is independent of
+the other rows, and prefill is per-request, so a request's tokens are
+bitwise identical whatever the arrival order or slot assignment.
+
+The embedding table stays int8-resident end-to-end: slot embeds read through
+``ops.dequant_gather`` and the tied head contracts through
+``ops.dequant_matmul`` inside the jitted steps (see repro.serving.table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import methods
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine
+
+
+@dataclasses.dataclass(frozen=True)
+class LMRequest:
+    prompt: np.ndarray  # [T] int32 token ids
+    max_new: int
+    rid: int | None = None
+
+
+class LMEngine(Engine):
+    scenario = "lm"
+
+    def __init__(self, params, serving_table, cfg: tfm.ModelConfig,
+                 spec: methods.EmbeddingSpec, *, batch: int, max_len: int):
+        if cfg.input_mode == "embeds":
+            raise ValueError(
+                f"{cfg.name}: encoder-only archs have no decode path"
+            )
+        super().__init__(serving_table=serving_table, spec=spec)
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            functools.partial(tfm.prefill, cfg=cfg, max_len=max_len)
+        )
+        self._decode = jax.jit(
+            functools.partial(tfm.decode_step, cfg=cfg), donate_argnums=(3,)
+        )
+        self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+        # Device state: the slot cache + per-slot current token / length.
+        self._cache = tfm.init_cache(cfg, batch, max_len)
+        self._cur = np.zeros((batch,), np.int32)
+        self._cache_len = np.zeros((batch,), np.int32)
+        # Host state per slot.
+        self._slot_rid: list[int | None] = [None] * batch
+        self._slot_budget = [0] * batch
+        self._slot_out: list[list[int]] = [[] for _ in range(batch)]
+
+    @staticmethod
+    def _insert_fn(cache, cache_one, slot):
+        """Copy a batch-1 prefilled cache into batch slot ``slot``; every
+        cache leaf is laid out [groups, batch, ...]."""
+        return jax.tree.map(
+            lambda full, one: full.at[:, slot].set(one[:, 0]), cache, cache_one
+        )
+
+    # ------------------------------------------------------------ build
+
+    @classmethod
+    def from_state(cls, state, cfg: tfm.ModelConfig, tcfg=None, *,
+                   batch: int, max_len: int) -> "LMEngine":
+        """Build from a live ``lm_trainer.LMTrainState``."""
+        from repro.training import lm_trainer
+
+        spec = lm_trainer.embedding_spec_of(cfg, tcfg)
+        table = cls.build_serving_state(state.table, spec)
+        return cls(state.params, table, cfg, spec, batch=batch, max_len=max_len)
+
+    @classmethod
+    def from_checkpoint(cls, directory, cfg: tfm.ModelConfig, tcfg=None, *,
+                        batch: int, max_len: int, step: int | None = None
+                        ) -> "LMEngine":
+        """Restore params + table from a serving checkpoint
+        (``checkpoint.manager.save_serving_checkpoint``); the artifact holds
+        the serving-resident state itself, so int8 codes restore as int8 and
+        go straight into residency — no fp32 detour, no training leaves."""
+        from repro.checkpoint import manager
+        from repro.training import lm_trainer
+
+        spec = lm_trainer.embedding_spec_of(cfg, tcfg)
+        params_template = jax.eval_shape(
+            functools.partial(tfm.init_params, cfg=cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        params, table, _ = manager.restore_serving_checkpoint(
+            directory, spec, params_template, step=step
+        )
+        return cls(params, table, cfg, spec, batch=batch, max_len=max_len)
+
+    # ------------------------------------------------------------ scheduler
+
+    def submit(self, request: LMRequest) -> int:
+        if len(request.prompt) + request.max_new > self.max_len + 1:
+            raise ValueError(
+                f"prompt {len(request.prompt)} + max_new {request.max_new} "
+                f"exceeds engine max_len {self.max_len}"
+            )
+        return super().submit(request)
+
+    def _has_work(self) -> bool:
+        return bool(self._queue) or any(
+            rid is not None for rid in self._slot_rid
+        )
+
+    def _free_slots(self):
+        return [i for i, rid in enumerate(self._slot_rid) if rid is None]
+
+    def _admit(self) -> None:
+        """Refill free slots from the queue: per-request exact-length prefill
+        (its own jit trace per distinct length), cache spliced into the slot."""
+        free = self._free_slots()
+        while free and self._queue:
+            req = self._queue.popleft()
+            if req.max_new <= 0:
+                self._finish(req.rid, [])  # zero generation budget
+                continue
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache_one = self._prefill(self.params, self.table, prompt)
+            first = int(jnp.argmax(logits[0]))
+            self._metrics.tokens_generated += 1
+            if req.max_new <= 1:
+                self._finish(req.rid, [first])  # done at prefill; no slot used
+                continue
+            slot = free.pop(0)
+            self._cache = self._insert(
+                self._cache, cache_one, jnp.asarray(slot, jnp.int32)
+            )
+            self._slot_rid[slot] = req.rid
+            self._slot_budget[slot] = req.max_new
+            self._slot_out[slot] = [first]
+            self._cur[slot] = first
+            self._cache_len[slot] = len(req.prompt)
+
+    def _advance(self) -> None:
+        self._admit()
+        active = [i for i, rid in enumerate(self._slot_rid) if rid is not None]
+        if not active:
+            return
+        logits, self._cache = self._decode(
+            self.params, self.table, jnp.asarray(self._cur),
+            self._cache, jnp.asarray(self._cache_len),
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._cache_len += 1
+        for slot in active:
+            self._cur[slot] = nxt[slot]
+            self._slot_out[slot].append(int(nxt[slot]))
+            self._metrics.tokens_generated += 1
+            if len(self._slot_out[slot]) >= self._slot_budget[slot]:
+                self._finish(self._slot_rid[slot], self._slot_out[slot])
+                self._slot_rid[slot] = None
+                self._slot_out[slot] = []

@@ -1,0 +1,196 @@
+"""Serving-resident embedding tables: the codes+scales the Engine keeps live.
+
+The training side answers "how do embeddings *learn* in low precision"; this
+module answers what a serving process actually holds in memory.  Three
+resident forms, all registered jax pytrees so they flow through jitted
+prefill/decode/score steps:
+
+* :class:`QuantTable` — int8 codes + per-row Delta (LPT/ALPT tables, and the
+  int8 export of the QAT baselines).  Row reads run through the fused
+  ``ops.dequant_gather`` and the tied LM head through ``ops.dequant_matmul``;
+  the fp32 table **never exists** — not in HBM, not in host memory.
+* :class:`QRQuantTable` — two :class:`QuantTable` sub-tables composed by the
+  quotient-remainder product (qr_lpt / qr_alpt), each with its own learned
+  scale vector.
+* :class:`FloatTable` — the fp32 export for float-leaf methods (fp, hash,
+  prune); also the reference the int8-resident parity tests compare against.
+
+``rows`` / ``head_logits`` also accept a raw ``jax.Array`` table and then
+reproduce the historical fp paths bitwise, so the model code
+(:mod:`repro.models.transformer`, :mod:`repro.models.ctr`) calls one function
+for training, eval, and serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatTable:
+    """fp32-resident [n, d] table (float-leaf methods' serving export)."""
+
+    table: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantTable:
+    """int8-resident table: codes [N, D] + per-row scale [N].
+
+    ``n``/``d`` are the *live* geometry (``pad_to_tiles`` allocates N >= n,
+    D >= d so real tables hit the kernel path); they are static pytree aux
+    data, so jitted consumers slice with concrete bounds.
+    """
+
+    codes: jax.Array  # int8 [N_alloc, D_alloc]
+    step: jax.Array  # f32 [N_alloc]
+    n: int  # live id space (ids must be < n)
+    d: int  # live embedding width
+    use_kernels: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class QRQuantTable:
+    """Quotient-remainder composition of two int8-resident sub-tables.
+
+    Virtual row ``i`` is ``remainder[i % r] * quotient[i // r]`` — each
+    sub-table carries its own learned per-row Delta (the qr_alpt serving
+    contract: both scale vectors are honored independently)."""
+
+    remainder: QuantTable
+    quotient: QuantTable
+    r: int  # static remainder modulus
+    n: int
+    d: int
+
+
+jax.tree_util.register_pytree_node(
+    FloatTable,
+    lambda t: ((t.table,), None),
+    lambda aux, ch: FloatTable(*ch),
+)
+jax.tree_util.register_pytree_node(
+    QuantTable,
+    lambda t: ((t.codes, t.step), (t.n, t.d, t.use_kernels)),
+    lambda aux, ch: QuantTable(ch[0], ch[1], *aux),
+)
+jax.tree_util.register_pytree_node(
+    QRQuantTable,
+    lambda t: ((t.remainder, t.quotient), (t.r, t.n, t.d)),
+    lambda aux, ch: QRQuantTable(ch[0], ch[1], *aux),
+)
+
+ServingTable = FloatTable | QuantTable | QRQuantTable
+
+
+def is_serving_table(table) -> bool:
+    return isinstance(table, (FloatTable, QuantTable, QRQuantTable))
+
+
+def is_integer_resident(table) -> bool:
+    """True when the resident bytes are integer codes (+ scales), not fp32."""
+    return isinstance(table, (QuantTable, QRQuantTable))
+
+
+def resident_bytes(table) -> int:
+    """Bytes the table keeps resident (the serve_bench int8 assertion)."""
+    if isinstance(table, jax.Array):
+        return int(table.size) * table.dtype.itemsize
+    return int(sum(
+        leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(table)
+    ))
+
+
+def code_bytes(table) -> int:
+    """The integer-code footprint alone (excludes the scale vectors)."""
+    if isinstance(table, QuantTable):
+        return int(table.codes.size) * table.codes.dtype.itemsize
+    if isinstance(table, QRQuantTable):
+        return code_bytes(table.remainder) + code_bytes(table.quotient)
+    return 0
+
+
+def scale_bytes(table) -> int:
+    if isinstance(table, QuantTable):
+        return int(table.step.size) * table.step.dtype.itemsize
+    if isinstance(table, QRQuantTable):
+        return scale_bytes(table.remainder) + scale_bytes(table.quotient)
+    return 0
+
+
+def n_rows(table) -> int:
+    """Live id space of the table."""
+    if isinstance(table, jax.Array):
+        return int(table.shape[0])
+    if isinstance(table, FloatTable):
+        return int(table.table.shape[0])
+    return table.n
+
+
+def rows(table, ids: jax.Array) -> jax.Array:
+    """De-quantized rows for ``ids`` (any leading shape) -> f32 [..., d].
+
+    int8-resident tables read through the fused gather+dequantize kernel
+    (1 byte/element off HBM); raw arrays / FloatTable reproduce the
+    historical ``jnp.take`` bitwise.
+    """
+    if isinstance(table, FloatTable):
+        return jnp.take(table.table, ids, axis=0)
+    if isinstance(table, QuantTable):
+        flat = ids.reshape(-1)
+        out = ops.dequant_gather(
+            table.codes, table.step, flat, use_kernel=table.use_kernels
+        )
+        out = out.reshape(ids.shape + (table.codes.shape[1],))
+        if table.d != out.shape[-1]:
+            out = out[..., : table.d]
+        return out
+    if isinstance(table, QRQuantTable):
+        return rows(table.remainder, ids % table.r) * rows(
+            table.quotient, ids // table.r
+        )
+    return jnp.take(table, ids, axis=0)
+
+
+def head_logits(table, h: jax.Array) -> jax.Array:
+    """Tied-head contraction ``h [..., d] -> logits [..., n]`` (f32).
+
+    int8-resident tables contract through ``ops.dequant_matmul`` — weight
+    tiles are de-quantized in VMEM right before the MXU, so the head costs
+    1 byte/weight of HBM traffic and the fp32 table never materializes.
+    Bitwise-equal to the einsum over the de-quantized table (the pre-redesign
+    fp-exported path).
+    """
+    if isinstance(table, QuantTable):
+        lead = h.shape[:-1]
+        h2 = h.reshape(-1, h.shape[-1]).astype(jnp.float32)
+        d_alloc = table.codes.shape[1]
+        if h2.shape[-1] != d_alloc:
+            # Padded columns hold codes for dims the model never writes;
+            # zero activations there keep the contraction exact.
+            h2 = jnp.pad(h2, ((0, 0), (0, d_alloc - h2.shape[-1])))
+        logits = ops.dequant_matmul(
+            h2, table.codes, table.step, use_kernel=table.use_kernels
+        )
+        if table.n != logits.shape[-1]:
+            logits = logits[:, : table.n]
+        return logits.reshape(lead + (table.n,)).astype(jnp.float32)
+    if isinstance(table, QRQuantTable):
+        # The QR product head is not a single matmul over codes; the virtual
+        # rows are composed from the two fused gathers per step (transient
+        # [n, d] — resident state stays int8).  A decomposed contraction
+        # (einsum('bd,qd,rd->bqr') over the two small sub-tables) would avoid
+        # the transient entirely but re-associates the product and breaks
+        # bitwise parity with the fp-exported table — the parity contract
+        # wins here; the decomposed head is a ROADMAP follow-up.
+        w = rows(table, jnp.arange(table.n))
+        return jnp.einsum("...d,vd->...v", h.astype(jnp.float32), w).astype(
+            jnp.float32
+        )
+    w = table.table if isinstance(table, FloatTable) else table
+    return jnp.einsum("...d,vd->...v", h.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(jnp.float32)

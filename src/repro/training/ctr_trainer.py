@@ -58,12 +58,10 @@ class CTRTrainer:
         if cfg.model == "dcn":
             assert cfg.dcn is not None
             self.model_cfg = cfg.dcn
-            self._forward = ctr_models.dcn_forward
             self._init_model = ctr_models.init_dcn
         else:
             assert cfg.deepfm is not None
             self.model_cfg = cfg.deepfm
-            self._forward = ctr_models.deepfm_forward
             self._init_model = ctr_models.init_deepfm
         self._train_step = self._build_train_step()
         self._eval_logits = jax.jit(self._logits_fn)
@@ -102,12 +100,10 @@ class CTRTrainer:
         return self._logits_from_rows(rows, dense_params, dropout_key)
 
     def _logits_from_rows(self, rows, dense_params, dropout_key=None):
-        if self.cfg.model == "deepfm":
-            r, first = rows[..., :-1], rows[..., -1]
-            return self._forward(
-                dense_params, r, first, self.model_cfg, dropout_key=dropout_key
-            )
-        return self._forward(dense_params, rows, self.model_cfg, dropout_key=dropout_key)
+        return ctr_models.logits_from_rows(
+            dense_params, rows, self.model_cfg, model=self.cfg.model,
+            dropout_key=dropout_key,
+        )
 
     # ------------------------------------------------------------ train step
 

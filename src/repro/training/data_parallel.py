@@ -127,6 +127,31 @@ def _combine_tree_stacked(grad_stacks, key, dp: DPConfig):
     return treedef.unflatten(out)
 
 
+# The ALPT Delta gradient is one array for alpt (key used directly — the
+# historical noise stream) but a pytree of per-sub-table vectors for composed
+# learned-step methods (qr_alpt); multi-leaf trees fold the key per leaf.
+
+
+def _sync_delta_mesh(g_step, key, dp: DPConfig):
+    leaves, treedef = jax.tree.flatten(g_step)
+    if len(leaves) == 1:
+        return treedef.unflatten([_sync_leaf_mesh(leaves[0], key, dp)])
+    return treedef.unflatten([
+        _sync_leaf_mesh(leaf, jax.random.fold_in(key, i), dp)
+        for i, leaf in enumerate(leaves)
+    ])
+
+
+def _combine_delta_stacked(g_stack, key, dp: DPConfig):
+    leaves, treedef = jax.tree.flatten(g_stack)
+    if len(leaves) == 1:
+        return treedef.unflatten([_combine_leaf_stacked(leaves[0], key, dp)])
+    return treedef.unflatten([
+        _combine_leaf_stacked(leaf, jax.random.fold_in(key, i), dp)
+        for i, leaf in enumerate(leaves)
+    ])
+
+
 def _reshape_shards(leaf, n_shards: int):
     if leaf.shape[0] % n_shards:
         raise ValueError(
@@ -176,7 +201,7 @@ def make_ctr_dp_step(trainer, mesh, dp: DPConfig | None = None, *, jit: bool = T
                 g_step = delta_fn(
                     w_new, step_vec, new_dense, ids, labels, kd, gscale
                 )
-                return _sync_leaf_mesh(
+                return _sync_delta_mesh(
                     g_step, jax.random.fold_in(key, _DELTA_SALT), dp
                 )
 
@@ -248,7 +273,7 @@ def make_ctr_microbatch_step(
                     return carry, g
 
                 _, g_stack = jax.lax.scan(body2, None, (ids_s, labels_s))
-                return _combine_leaf_stacked(
+                return _combine_delta_stacked(
                     g_stack, jax.random.fold_in(key, _DELTA_SALT), dp
                 )
 
@@ -295,7 +320,7 @@ def make_lm_dp_step(
 
     def step_grad_sync(g_step, step):
         key = jax.random.fold_in(jax.random.fold_in(base, step), _DELTA_SALT)
-        return _sync_leaf_mesh(g_step, key, dp)
+        return _sync_delta_mesh(g_step, key, dp)
 
     # The LM trainer's own step, with its DP hooks filled in: the all-reduces
     # run between backward and update, and dp_size keeps the ALPT Delta
@@ -377,7 +402,7 @@ def make_lm_microbatch_step(
                     )
 
                 _, g_stack = jax.lax.scan(body2, None, batch_s)
-                return _combine_leaf_stacked(
+                return _combine_delta_stacked(
                     g_stack, jax.random.fold_in(key, _DELTA_SALT), dp
                 )
 

@@ -189,6 +189,35 @@ def test_fallback_stats_sr_round_misaligned_rows():
     ops.reset_fallback_stats()
 
 
+def test_fallback_scope_reports_despite_prior_trace():
+    """Satellite contract (PR 5): a scope sees every dispatch made while it
+    is active — including shapes the process already traced and reset away,
+    which the old reset-then-read dance in launch/serve.py under-reported."""
+    ops.reset_fallback_stats()
+    step = jnp.full((24,), 0.02)
+    ids = jnp.array([1, 5], jnp.int32)
+    odd = jax.random.randint(jax.random.PRNGKey(30), (24, 9), -128, 128, jnp.int8)
+    ops.dequant_gather(odd, step, ids)  # compiled + counted globally
+    assert ops.fallback_stats()["total_fallbacks"] == 1
+    ops.reset_fallback_stats()  # the historical dance: reset...
+    with ops.fallback_scope() as scope:
+        ops.dequant_gather(odd, step, ids)  # ...same shapes, already compiled
+    # ...and the scope still reports the fallback the dispatch actually hit.
+    assert scope.stats()["total_fallbacks"] == 1
+    assert scope.stats()["fallbacks"][0]["op"] == "dequant_gather"
+    # Dispatches outside the scope are not attributed to it.
+    ops.dequant_gather(odd, step, ids)
+    assert scope.stats()["total_fallbacks"] == 1
+    # Re-entering an existing scope accumulates (the Engine's usage).
+    aligned = jax.random.randint(jax.random.PRNGKey(31), (24, 16), -128, 128,
+                                 jnp.int8)
+    with ops.fallback_scope(scope):
+        ops.dequant_gather(aligned, step, ids)
+    assert scope.stats()["kernel_calls"].get("dequant_gather", 0) == 1
+    assert scope.stats()["total_fallbacks"] == 1
+    ops.reset_fallback_stats()
+
+
 def test_ops_jit_wrappers_run():
     w = jax.random.normal(jax.random.PRNGKey(9), (256, 512)) * 0.1
     step = jnp.full((256,), 0.01)

@@ -1,31 +1,76 @@
-"""Serving loop: continuous batcher correctness (greedy decode == reference)."""
+"""`repro.serving` Engine: int8-resident parity, slot-refill determinism,
+serving checkpoint restore.
+
+The PR-5 acceptance contract:
+
+* LM decode and CTR scoring run through the same Engine API, and for every
+  integer-table method the outputs are **bitwise** equal to the
+  pre-redesign fp-exported path (prefill/decode and rows-scoring against the
+  materialized ``method.serving_table`` export);
+* the Engine never materializes an fp32 table for integer-table methods —
+  resident embedding bytes == int8 code bytes + scale vectors;
+* slot-refill determinism: the same requests produce the same per-request
+  tokens/scores whatever the arrival order or slot assignment.
+"""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro import configs
-from repro.launch.serve import ContinuousBatcher, Request
+from repro import configs, methods
+from repro.checkpoint import manager as ckpt
+from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
 from repro.models import transformer as tfm
+from repro.models.ctr import DCNConfig
+from repro.serving import table as serving_tbl
+from repro.serving.ctr import CTREngine, CTRRequest
+from repro.serving.lm import LMEngine, LMRequest
 from repro.training import lm_trainer
+from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
 
 jax.config.update("jax_platform_name", "cpu")
 
+pytestmark = pytest.mark.serve
 
-def test_batcher_greedy_matches_manual_decode():
-    cfg = configs.smoke_config("smollm-135m")
+INT_METHODS = ["lpt", "alpt", "qr_lpt", "qr_alpt"]
+
+
+# ----------------------------------------------------------------------- LM
+
+
+def _lm_fixture(arch="smollm-135m", method=None, seed=0):
+    cfg = configs.smoke_config(arch)
+    if method is not None:
+        cfg = dataclasses.replace(cfg, embedding_method=method)
     tcfg = lm_trainer.LMTrainerConfig()
-    state = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    state = lm_trainer.init_state(jax.random.PRNGKey(seed), cfg, tcfg)
+    return cfg, tcfg, state
+
+
+def _float_lm_engine(state, cfg, tcfg, *, batch, max_len):
+    """The pre-redesign path as an Engine: fp-exported table resident."""
+    spec = lm_trainer.embedding_spec_of(cfg, tcfg)
+    method = methods.get(spec.method)
+    table = serving_tbl.FloatTable(method.serving_table(state.table, spec))
+    return LMEngine(state.params, table, cfg, spec, batch=batch,
+                    max_len=max_len)
+
+
+def test_lm_engine_matches_manual_decode():
+    """Engine greedy tokens == the raw prefill/decode_step loop over the
+    fp-exported table (the pre-redesign serving arithmetic, untouched)."""
+    cfg, tcfg, state = _lm_fixture()
     table_fp = lm_trainer.table_fp_of(state, cfg)
     rng = np.random.RandomState(1)
     prompt = rng.randint(0, cfg.vocab_size, 12).astype(np.int32)
 
-    # Manual greedy reference.
     logits, cache = tfm.prefill(
         state.params, table_fp, jnp.asarray(prompt)[None], cfg, max_len=20
     )
-    want = []
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    want.append(int(tok[0]))
+    want = [int(tok[0])]
     for i in range(3):
         logits, cache = tfm.decode_step(
             state.params, table_fp, tok, cache, jnp.asarray(12 + i, jnp.int32),
@@ -34,25 +79,249 @@ def test_batcher_greedy_matches_manual_decode():
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         want.append(int(tok[0]))
 
-    srv = ContinuousBatcher(state.params, state.table, cfg, batch=1, max_len=20)
-    srv.submit(Request(rid=0, prompt=prompt, max_new=4))
-    done = srv.run()
-    assert done[0] == want
+    engine = LMEngine.from_state(state, cfg, tcfg, batch=1, max_len=20)
+    rid = engine.submit(LMRequest(prompt=prompt, max_new=4))
+    done = engine.run()
+    assert done[rid] == want
+    assert engine.int8_resident
 
 
-def test_batcher_multiple_waves_complete():
-    cfg = configs.smoke_config("qwen3-1.7b")
-    tcfg = lm_trainer.LMTrainerConfig()
-    state = lm_trainer.init_state(jax.random.PRNGKey(1), cfg, tcfg)
-    srv = ContinuousBatcher(state.params, state.table, cfg, batch=2,
-                            max_len=24)
+@pytest.mark.parametrize("method", INT_METHODS)
+def test_lm_engine_int8_resident_bitwise_vs_fp_export(method):
+    """int8-resident Engine == fp-export-resident Engine, token for token,
+    while holding codes+scales instead of an fp32 table."""
+    cfg, tcfg, state = _lm_fixture(method=method)
+    spec = lm_trainer.embedding_spec_of(cfg, tcfg)
     rng = np.random.RandomState(2)
-    for rid in range(5):  # 5 requests through batch-2 slots -> 3 waves
-        srv.submit(Request(
-            rid=rid, prompt=rng.randint(0, cfg.vocab_size, 8).astype(np.int32),
-            max_new=3,
+    reqs = [
+        LMRequest(rid=i,
+                  prompt=rng.randint(0, cfg.vocab_size, 10).astype(np.int32),
+                  max_new=3)
+        for i in range(3)
+    ]
+
+    quant_eng = LMEngine.from_state(state, cfg, tcfg, batch=2, max_len=16)
+    float_eng = _float_lm_engine(state, cfg, tcfg, batch=2, max_len=16)
+    for r in reqs:
+        quant_eng.submit(r)
+        float_eng.submit(r)
+    got, want = quant_eng.run(), float_eng.run()
+    assert got == want
+
+    assert quant_eng.int8_resident and not float_eng.int8_resident
+    m = quant_eng.metrics()
+    assert m["resident_embedding_bytes"] == (
+        m["embedding_code_bytes"] + m["embedding_scale_bytes"]
+    )
+    fp32 = cfg.vocab_size * cfg.d_model * 4
+    assert m["resident_embedding_bytes"] < fp32
+    assert float_eng.metrics()["resident_embedding_bytes"] == fp32
+    assert methods.get(spec.method).is_integer_table
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-370m"])
+def test_lm_slot_refill_determinism(arch):
+    """Same requests, any arrival order -> same per-request tokens.
+
+    Mixed prompt lengths and generation budgets force slots to free and
+    refill at staggered times, so the orders exercise genuinely different
+    slot assignments (and, for mamba2, the exact-length SSM prefill)."""
+    cfg, tcfg, state = _lm_fixture(arch=arch)
+    rng = np.random.RandomState(3)
+    reqs = [
+        LMRequest(rid=i,
+                  prompt=rng.randint(0, cfg.vocab_size, n).astype(np.int32),
+                  max_new=g)
+        for i, (n, g) in enumerate([(12, 5), (8, 2), (10, 4), (8, 1), (12, 3)])
+    ]
+    results = []
+    for order in [reqs, reqs[::-1], reqs[2:] + reqs[:2]]:
+        engine = LMEngine.from_state(state, cfg, tcfg, batch=2, max_len=20)
+        for r in order:
+            engine.submit(r)
+        results.append(engine.run())
+    assert results[0] == results[1] == results[2]
+    assert sorted(results[0]) == [0, 1, 2, 3, 4]
+    for r in reqs:
+        assert len(results[0][r.rid]) == r.max_new
+
+
+def test_lm_engine_rejects_oversized_request():
+    cfg, tcfg, state = _lm_fixture()
+    engine = LMEngine.from_state(state, cfg, tcfg, batch=1, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        engine.submit(LMRequest(
+            prompt=np.zeros(12, np.int32), max_new=16,
         ))
-    done = srv.run()
-    assert sorted(done) == [0, 1, 2, 3, 4]
-    assert all(len(v) == 3 for v in done.values())
-    assert all(0 <= t < cfg.vocab_size for v in done.values() for t in v)
+    # Zero generation budget: finished with an empty token list, no slot used.
+    rid = engine.submit(LMRequest(prompt=np.zeros(4, np.int32), max_new=0))
+    assert engine.run()[rid] == []
+
+
+def test_prefill_lens_right_padded_matches_exact():
+    """`tfm.prefill(lens=)` (the future bucketed-prefill path): a right-padded
+    row's last-real logits and its decode continuation match the exact-length
+    batch-1 prefill — causal attention masks the padding exactly (to ~1 ulp:
+    the padded shape changes XLA reduction order, see the prefill docstring;
+    bitwise per-request determinism is why the Engine prefills exact-length).
+    """
+    cfg, tcfg, state = _lm_fixture()  # attention-only stack
+    table_fp = lm_trainer.table_fp_of(state, cfg)
+    rng = np.random.RandomState(7)
+    p_short = rng.randint(0, cfg.vocab_size, 5).astype(np.int32)
+    p_long = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+
+    padded = np.zeros((2, 8), np.int32)
+    padded[0, :5] = p_short
+    padded[1] = p_long
+    lens = jnp.asarray([5, 8], jnp.int32)
+    logits_pad, cache_pad = tfm.prefill(
+        state.params, table_fp, jnp.asarray(padded), cfg, max_len=16,
+        lens=lens,
+    )
+
+    logits_a, cache_a = tfm.prefill(
+        state.params, table_fp, jnp.asarray(p_short)[None], cfg, max_len=16
+    )
+    logits_b, _ = tfm.prefill(
+        state.params, table_fp, jnp.asarray(p_long)[None], cfg, max_len=16
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_pad[0]), np.asarray(logits_a[0]), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_pad[1]), np.asarray(logits_b[0]), rtol=1e-5, atol=1e-5
+    )
+
+    # Decode continuation off the padded cache with per-slot cache_len: the
+    # short row masks its pad tail and matches the exact-length decode.
+    tok = jnp.argmax(logits_pad, -1).astype(jnp.int32)
+    dec_pad, _ = tfm.decode_step(
+        state.params, table_fp, tok, cache_pad, lens, cfg
+    )
+    dec_a, _ = tfm.decode_step(
+        state.params, table_fp, tok[:1], cache_a, jnp.asarray(5, jnp.int32), cfg
+    )
+    np.testing.assert_allclose(
+        np.asarray(dec_pad[0]), np.asarray(dec_a[0]), rtol=1e-5, atol=1e-5
+    )
+
+
+# ----------------------------------------------------------------------- CTR
+
+
+CTR_DATA = CTRDatasetConfig(
+    name="serve-test", n_fields=4, cardinalities=(23, 37, 11, 53),
+    teacher_rank=3, seed=11,
+)
+
+
+def _ctr_fixture(method, steps=2):
+    data = CTRSynthetic(CTR_DATA)
+    spec = methods.EmbeddingSpec(
+        method=method, n=CTR_DATA.n_features, d=8, bits=8, init_scale=0.05,
+    )
+    dcn = DCNConfig(n_fields=4, emb_dim=8, cross_depth=1, mlp_widths=(16,))
+    trainer = CTRTrainer(TrainerConfig(spec=spec, model="dcn", dcn=dcn))
+    state = trainer.init_state()
+    for i in range(steps):
+        ids, labels = data.batch("train", i, 16)
+        state, _ = trainer.train_step(state, ids, labels)
+    return trainer, state, data, spec
+
+
+def _float_ctr_engine(trainer, state, spec, *, batch):
+    method = methods.get(spec.method)
+    table = serving_tbl.FloatTable(
+        method.serving_table(state.emb_state, spec)
+    )
+    return CTREngine(state.dense_params, table, trainer.model_cfg, spec,
+                     batch=batch, model=trainer.cfg.model)
+
+
+@pytest.mark.parametrize("method", INT_METHODS)
+def test_ctr_engine_int8_resident_bitwise_vs_fp_export(method):
+    """CTR scoring: int8-resident Engine == fp-export-resident Engine,
+    bit for bit on logits and probabilities."""
+    trainer, state, data, spec = _ctr_fixture(method)
+    quant_eng = CTREngine.from_state(state, trainer.cfg, batch=4)
+    float_eng = _float_ctr_engine(trainer, state, spec, batch=4)
+    ids, _ = data.batch("test", 0, 10)
+    for i, row in enumerate(ids):
+        quant_eng.submit(CTRRequest(rid=i, ids=row))
+        float_eng.submit(CTRRequest(rid=i, ids=row))
+    got, want = quant_eng.run(), float_eng.run()
+    assert got == want  # dict of floats: bitwise (same f64 repr) per request
+
+    assert quant_eng.int8_resident and not float_eng.int8_resident
+    m = quant_eng.metrics()
+    assert m["resident_embedding_bytes"] == (
+        m["embedding_code_bytes"] + m["embedding_scale_bytes"]
+    )
+    assert m["resident_embedding_bytes"] < CTR_DATA.n_features * 8 * 4
+
+
+def test_ctr_engine_arrival_order_determinism():
+    """Same requests, any arrival order / batch packing -> same scores."""
+    trainer, state, data, spec = _ctr_fixture("alpt")
+    ids, _ = data.batch("test", 0, 9)
+    results = []
+    for order, batch in [(range(9), 4), (range(8, -1, -1), 4),
+                         (range(9), 3)]:
+        engine = CTREngine.from_state(state, trainer.cfg, batch=batch)
+        for i in order:
+            engine.submit(CTRRequest(rid=i, ids=ids[i]))
+        results.append(engine.run())
+    assert results[0] == results[1] == results[2]
+
+
+def test_ctr_engine_rejects_bad_shape():
+    trainer, state, _, _ = _ctr_fixture("lpt", steps=0)
+    engine = CTREngine.from_state(state, trainer.cfg, batch=2)
+    with pytest.raises(ValueError, match="shape"):
+        engine.submit(CTRRequest(ids=np.zeros(7, np.int32)))
+
+
+# ---------------------------------------------------------------- checkpoint
+
+
+def test_lm_engine_from_serving_checkpoint(tmp_path):
+    """Serving restore: int8 codes come off disk as int8, straight into
+    residency; the restored Engine is bitwise-identical to the live one."""
+    cfg, tcfg, state = _lm_fixture()
+    spec = lm_trainer.embedding_spec_of(cfg, tcfg)
+    ckpt.save_serving_checkpoint(
+        tmp_path, step=7, params=state.params, table=state.table, spec=spec,
+    )
+
+    # The artifact holds inference state only: codes + scales (+ params),
+    # never the row-Adam moments the training table carries.
+    import json
+
+    manifest = json.loads(
+        (tmp_path / "step_000000007" / "manifest.json").read_text()
+    )
+    table_leaves = [e for e in manifest["leaves"] if "table" in e["path"]]
+    assert len(table_leaves) == 2  # codes + step
+    assert sorted(e["dtype"] for e in table_leaves) == ["float32", "int8"]
+
+    engine = LMEngine.from_checkpoint(tmp_path, cfg, tcfg, batch=1, max_len=16)
+    assert engine.int8_resident
+    assert engine.table.codes.dtype == jnp.int8
+
+    live = LMEngine.from_state(state, cfg, tcfg, batch=1, max_len=16)
+    prompt = np.random.RandomState(5).randint(0, cfg.vocab_size, 8).astype(np.int32)
+    rid_a = engine.submit(LMRequest(prompt=prompt, max_new=3))
+    rid_b = live.submit(LMRequest(prompt=prompt, max_new=3))
+    assert engine.run()[rid_a] == live.run()[rid_b]
+
+
+def test_serving_restore_refuses_method_mismatch(tmp_path):
+    cfg, tcfg, state = _lm_fixture()
+    spec = lm_trainer.embedding_spec_of(cfg, tcfg)
+    ckpt.save_serving_checkpoint(
+        tmp_path, step=1, params=state.params, table=state.table, spec=spec,
+    )
+    other = dataclasses.replace(spec, method="lpt")
+    with pytest.raises(ValueError, match="mismatch"):
+        ckpt.restore_serving_checkpoint(tmp_path, other, params_template=None)
