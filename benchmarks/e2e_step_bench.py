@@ -1,10 +1,15 @@
 """End-to-end train-step benchmark: kernels-on vs kernels-off, CTR and LM.
 
 Measures us/step and models the embedding-path HBM bytes for
-{ctr, lm} x {kernels on, off} x bits {4, 8}, asserting the kernels-on path
+{ctr, lm} x {kernels on, off} x bits {2, 4, 8}, asserting the kernels-on path
 runs with ZERO shape fallbacks (the configs are pad_to_tiles-aligned), and
 writes ``BENCH_PR4.json`` at the repo root — the first entry in the repo's
 perf trajectory; later PRs append cells to the same schema.
+
+Each cell also records ``packed_bytes`` — the measured resident bytes of the
+live code container (sub-byte widths live packed at ``8 // bits`` codes per
+byte) — and the run asserts the packed-storage acceptance bar: the 4-bit
+table is at most 0.55x the 8-bit table's resident bytes.
 
 Two caveats the numbers carry explicitly:
 
@@ -36,6 +41,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro import configs, methods
 from repro.configs.common import concrete_batch
+from repro.core import codestore
 from repro.core.alpt import ALPTConfig
 from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
 from repro.kernels import ops
@@ -55,34 +61,42 @@ CTR_D = 16
 CTR_BATCH = 256
 
 
-def ctr_embed_bytes(n_ids: int, d: int, on: bool) -> int:
+def _code_b(bits: int) -> float:
+    """Bytes per code as stored: packed sub-byte widths move bits/8 B."""
+    return bits / 8 if codestore.is_packable(bits) else 1.0
+
+
+def ctr_embed_bytes(n_ids: int, d: int, bits: int, on: bool) -> int:
     """Embedding bytes per CTR sparse step (operand + result accounting).
 
-    Shared by both paths (K = n_ids unique-row slots):
-      lookup: K*d codes in (1B) + K*d f32 rows out (4B)
-      update: K*d each of grad/noise/mu/nu in (4B), codes in (1B),
-              codes out (1B) + mu/nu out (4B each) + w_new out (4B)
+    Shared by both paths (K = n_ids unique-row slots, c = stored bytes per
+    code — 1 for 8-bit, bits/8 for the packed sub-byte widths):
+      lookup: K*d codes in (cB) + K*d f32 rows out (4B)
+      update: K*d each of grad/noise/mu/nu in (4B), codes in (cB),
+              codes out (cB) + mu/nu out (4B each) + w_new out (4B)
     The unfused path additionally materializes the gathered codes, the
-    de-quantized f32 rows and the pre-requantize f32 rows in HBM (+9B/elem) —
-    exactly the intermediates the fused kernels keep in VMEM.
+    de-quantized f32 rows and the pre-requantize f32 rows in HBM
+    (+c+8 B/elem) — exactly the intermediates the fused kernels keep in VMEM.
     """
-    per_elem = (1 + 4) + (4 + 4 + 4 + 4 + 1) + (1 + 4 + 4 + 4)
+    c = _code_b(bits)
+    per_elem = (c + 4) + (4 + 4 + 4 + 4 + c) + (c + 4 + 4 + 4)
     if not on:
-        per_elem += 1 + 4 + 4
-    return n_ids * d * per_elem
+        per_elem += c + 4 + 4
+    return int(n_ids * d * per_elem)
 
 
-def lm_embed_bytes(vocab: int, d: int, on: bool) -> int:
+def lm_embed_bytes(vocab: int, d: int, bits: int, on: bool) -> int:
     """Embedding bytes per LM dense step (write-back only; the forward's
     dense-table materialization is identical on both paths).
 
     Unfused: de-quantized table f32 out+in (8B) + updated table f32 out+in
-    (8B) + requantized codes out (1B) + codes in (1B) = 18B/elem.
-    Fused ``ops.lpt_update``: codes in (1B) + direction in (4B) + noise in
-    (4B) + codes out (1B) = 10B/elem — the fp32 table never round-trips.
+    (8B) + requantized codes out (cB) + codes in (cB) = 16+2c B/elem.
+    Fused ``ops.lpt_update``: codes in (cB) + direction in (4B) + noise in
+    (4B) + codes out (cB) = 8+2c B/elem — the fp32 table never round-trips.
     """
-    per_elem = 10 if on else 18
-    return vocab * d * per_elem
+    c = _code_b(bits)
+    per_elem = (8 + 2 * c) if on else (16 + 2 * c)
+    return int(vocab * d * per_elem)
 
 
 def _bench_loop(step_fn, state, batches, warmup: int = 1):
@@ -117,8 +131,10 @@ def run_ctr(bits: int, use_kernels: bool, steps: int) -> dict:
     return {
         "us_per_step": round(us, 1),
         "embed_bytes_per_step": ctr_embed_bytes(
-            CTR_BATCH * CTR_DATA.n_fields, spec.d_padded, use_kernels
+            CTR_BATCH * CTR_DATA.n_fields, spec.d_padded, bits, use_kernels
         ),
+        # Measured resident bytes of the live code container (not a model).
+        "packed_bytes": codestore.resident_bytes_of(state.emb_state.codes),
         "shape_fallbacks": stats["total_fallbacks"],
         "kernel_calls": stats["kernel_calls"],
         "table_rows": spec.n_padded,
@@ -149,8 +165,9 @@ def run_lm(bits: int, use_kernels: bool, steps: int) -> dict:
     return {
         "us_per_step": round(us, 1),
         "embed_bytes_per_step": lm_embed_bytes(
-            spec.n_padded, spec.d_padded, use_kernels
+            spec.n_padded, spec.d_padded, bits, use_kernels
         ),
+        "packed_bytes": codestore.resident_bytes_of(state.table.codes),
         "shape_fallbacks": stats["total_fallbacks"],
         "kernel_calls": stats["kernel_calls"],
         "vocab_rows": spec.n_padded,
@@ -162,13 +179,14 @@ def run(steps_ctr: int = 20, steps_lm: int = 8) -> dict:
     for workload, runner, steps in (
         ("ctr", run_ctr, steps_ctr), ("lm", run_lm, steps_lm)
     ):
-        for bits in (4, 8):
+        for bits in (2, 4, 8):
             for on in (True, False):
                 cell = runner(bits, on, steps)
                 name = f"{workload}/bits{bits}/kernels_{'on' if on else 'off'}"
                 cells[name] = cell
                 emit(f"e2e/{name}", cell["us_per_step"],
                      f"embed_bytes={cell['embed_bytes_per_step']} "
+                     f"packed_bytes={cell['packed_bytes']} "
                      f"fallbacks={cell['shape_fallbacks']}")
                 if on and cell["shape_fallbacks"]:
                     raise SystemExit(
@@ -176,6 +194,18 @@ def run(steps_ctr: int = 20, steps_lm: int = 8) -> dict:
                         f"shape fallbacks — the benchmark configs must be "
                         f"tile-aligned: {ops.fallback_stats()['fallbacks']}"
                     )
+        # Packed-storage acceptance bar: sub-byte containers actually shrink
+        # the resident table (4-bit <= 0.55x 8-bit, 2-bit <= 0.30x 8-bit).
+        for on in ("on", "off"):
+            b8 = cells[f"{workload}/bits8/kernels_{on}"]["packed_bytes"]
+            b4 = cells[f"{workload}/bits4/kernels_{on}"]["packed_bytes"]
+            b2 = cells[f"{workload}/bits2/kernels_{on}"]["packed_bytes"]
+            if b4 > 0.55 * b8 or b2 > 0.30 * b8:
+                raise SystemExit(
+                    f"{workload}/kernels_{on}: packed_bytes ratio regressed "
+                    f"(bits2={b2}, bits4={b4}, bits8={b8}) — sub-byte codes "
+                    f"must stay packed"
+                )
     return cells
 
 

@@ -23,6 +23,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro import configs, methods
+from repro.core import codestore
 from repro.launch.serve import CTR_DEMO_DATA, CTR_DEMO_DIM, build_ctr_demo_engine
 from repro.serving import table as serving_tbl
 from repro.serving.ctr import CTRRequest
@@ -94,12 +95,28 @@ def bench_ctr(method: str, *, requests: int, bits: int = 8) -> dict:
     if methods.get(method).is_integer_table:
         _assert_int8_resident(engine, fp32_bytes)
         assert m["kernel_fallbacks"] == 0, engine.fallback_report()
+    if codestore.is_packable(bits):
+        # Sub-byte cells serve straight off the PACKED container: every code
+        # leaf is a packed CodeStore and the reported code bytes are the
+        # container's actual (sub-byte) footprint, not one-byte-per-code.
+        stores = [
+            leaf for leaf in jax.tree.leaves(
+                engine.table,
+                is_leaf=lambda x: isinstance(x, codestore.CodeStore),
+            )
+            if isinstance(leaf, codestore.CodeStore)
+        ]
+        assert stores and all(s.packed for s in stores), "codes not packed"
+        assert m["embedding_code_bytes"] == sum(
+            s.resident_bytes for s in stores
+        )
     emit(
-        f"serve/ctr/{method}", m["us_per_request"],
+        f"serve/ctr/{method}" + (f"/bits{bits}" if bits != 8 else ""),
+        m["us_per_request"],
         f"resident_B={m['resident_embedding_bytes']} fp32_B={fp32_bytes} "
         f"int8={m['int8_resident']}",
     )
-    return {**m, "fp32_bytes": fp32_bytes}
+    return {**m, "bits": bits, "fp32_bytes": fp32_bytes}
 
 
 def run(smoke: bool = False, out: str | None = None) -> dict:
@@ -111,6 +128,19 @@ def run(smoke: bool = False, out: str | None = None) -> dict:
         "lm": [bench_lm(a, requests=requests, gen=gen) for a in archs],
         "ctr": [bench_ctr(m, requests=requests * 8) for m in ctr_methods],
     }
+    # Packed sub-byte cell: same engine, 4-bit codes resident at 2/byte.
+    packed4 = bench_ctr("lpt", requests=requests * 8, bits=4)
+    results["ctr"].append(packed4)
+    lpt8 = next(
+        c for c in results["ctr"]
+        if c["embedding_method"] == "lpt" and c["bits"] == 8
+    )
+    assert (packed4["resident_embedding_bytes"]
+            <= 0.55 * lpt8["resident_embedding_bytes"]), (
+        "bits=4 serving table not packed: "
+        f"{packed4['resident_embedding_bytes']} vs "
+        f"{lpt8['resident_embedding_bytes']} (bits=8)"
+    )
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=2)

@@ -38,11 +38,30 @@ def config_hash(cfg: Any) -> str:
     return hashlib.sha256(repr(cfg).encode()).hexdigest()[:16]
 
 
+def embedding_storage(spec: Any) -> dict:
+    """Code-container layout for a manifest: whether codes are stored packed
+    (sub-byte widths share bytes), how many codes ride per resident byte, and
+    the bit layout — so a restore can refuse a packed artifact loaded under
+    an unpacked config (same logical shapes, different bytes) and vice
+    versa."""
+    from repro.core import codestore
+
+    packed = bool(getattr(spec, "packed", True)) and codestore.is_packable(
+        spec.bits
+    )
+    return {
+        "bits": spec.bits,
+        "packed": packed,
+        "codes_per_byte": codestore.codes_per_byte(spec.bits) if packed else 1,
+        "layout": "low-bits-first",
+    }
+
+
 def embedding_manifest(spec: Any) -> dict:
     """Embedding-method checkpoint metadata for a manifest's ``extra_meta``:
-    the registered method's name, capability flags, and leaf schema — so a
-    restore can detect a method mismatch (e.g. int8 codes restored into an
-    fp template) before shapes happen to collide."""
+    the registered method's name, capability flags, leaf schema, and code
+    container layout — so a restore can detect a method mismatch (e.g. int8
+    codes restored into an fp template) before shapes happen to collide."""
     from repro import methods
 
     method = methods.get(spec.method)
@@ -50,6 +69,7 @@ def embedding_manifest(spec: Any) -> dict:
         "embedding_method": spec.method,
         "embedding_capabilities": method.capabilities(),
         "embedding_schema": method.checkpoint_schema(spec),
+        "embedding_storage": embedding_storage(spec),
     }
 
 
@@ -69,6 +89,11 @@ def check_embedding_manifest(manifest: dict, spec: Any) -> list[str]:
     schema = methods.get(spec.method).checkpoint_schema(spec)
     if manifest.get("embedding_schema", schema) != schema:
         problems.append("embedding table schema differs (shape/dtype/leaves)")
+    storage = embedding_storage(spec)
+    if manifest.get("embedding_storage", storage) != storage:
+        problems.append(
+            "embedding storage layout differs (bits/packing/container)"
+        )
     return problems
 
 
@@ -201,7 +226,15 @@ def load_pytree(template, directory: str | os.PathLike, *, step: int | None = No
         if tuple(arr.shape) != tuple(getattr(t, "shape", np.shape(t))):
             raise ValueError(f"shape mismatch {arr.shape} vs {np.shape(t)}")
     if shardings is not None:
-        flat_s = treedef.flatten_up_to(shardings)
+        # jit-style prefix broadcast: a sharding sitting at an internal
+        # template node (e.g. a CodeStore code container, whose single leaf
+        # is the packed data array) applies to every leaf underneath it.
+        is_shard = lambda x: isinstance(x, jax.sharding.Sharding)
+        expanded = jax.tree_util.tree_map(
+            lambda s, sub: jax.tree_util.tree_map(lambda _: s, sub),
+            shardings, template, is_leaf=is_shard,
+        )
+        flat_s = treedef.flatten_up_to(expanded)
         arrays = [jax.device_put(a, s) for a, s in zip(arrays, flat_s)]
     else:
         arrays = [jax.numpy.asarray(a) for a in arrays]

@@ -23,7 +23,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import lpt, quant
+from repro.core import codestore, lpt, quant
 from repro.kernels import ops
 
 
@@ -140,7 +140,7 @@ def alpt_step(
         codes_rows = quant.quantize_codes(
             w_new, new_step_b, cfg.bits, cfg.rounding, noise
         )
-    codes = table1.codes.at[uniq].set(codes_rows, mode="drop")
+    codes = codestore.set_rows(table1.codes, uniq, codes_rows, mode="drop")
     step = table1.step.at[uniq].set(new_step_b, mode="drop")
     new_table = table1._replace(codes=codes, step=step)
     aux = {
@@ -229,7 +229,7 @@ def dense_finish(
             upd.w_new, new_step, cfg.bits, cfg.rounding, noise
         )
     mask = upd.touched[:, None]
-    codes = jnp.where(mask, codes_new, table.codes)
+    codes = codestore.where_rows(table.codes, upd.touched, codes_new)
     if table.mu.ndim == 2:
         mu = jnp.where(mask, upd.mu_new, table.mu)
         nu = jnp.where(mask, upd.nu_new, table.nu)

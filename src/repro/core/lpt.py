@@ -28,14 +28,16 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant
+from repro.core import codestore, quant
 from repro.kernels import ops
 
 
 class LPTTable(NamedTuple):
     """Quantized embedding table + per-row step + row optimizer state."""
 
-    codes: jax.Array  # int8 [n, d]
+    # A CodeStore (packed uint8 at bits<=4, int8 otherwise) or a raw int8
+    # array for hand-built tables; `.shape` is the logical [n, d] either way.
+    codes: "codestore.CodeStore | jax.Array"
     step: jax.Array  # f32  [n]   (feature-wise Delta; ALPT learns this)
     # Row-optimizer slots (zeros-shaped () when unused):
     mu: jax.Array  # f32 [n, d] (adam) | [n] zeros (adagrad/sgd)
@@ -63,6 +65,7 @@ def init_table(
     clip_value: float | None = None,
     optimizer: str = "adam",
     use_kernels: bool = False,
+    packed: bool | None = None,
 ) -> LPTTable:
     """Initialize weights ~ N(mean, init_scale^2), choose Delta, quantize.
 
@@ -71,6 +74,11 @@ def init_table(
     given, Delta is set per-row LSQ-style from the init (the ALPT default).
     ``mean`` shifts the init (composed tables start multiplicative factors
     near 1); the paper's tables use the zero-mean default.
+
+    ``packed`` selects the code container (see :mod:`repro.core.codestore`):
+    None/True packs sub-byte widths (bits in {2, 4}) into uint8; False keeps
+    one byte per code.  Packing is a storage-layout choice only — training is
+    bitwise identical either way.
     """
     kw, kn = jax.random.split(key)
     w = jax.random.normal(kw, (n, d), jnp.float32) * init_scale
@@ -87,6 +95,7 @@ def init_table(
         codes = ops.sr_round(w, step, noise, bits)
     else:
         codes = quant.quantize_codes(w, step, bits, "sr", noise)
+    codes = codestore.CodeStore.from_codes(codes, bits, packed=packed)
     if optimizer == "adam":
         mu = jnp.zeros((n, d), jnp.float32)
         nu = jnp.zeros((n, d), jnp.float32)
@@ -120,7 +129,7 @@ def lookup(
         rows = ops.dequant_gather(table.codes, table.step, flat)
         rows = rows.reshape(ids.shape + (table.dim,))
     else:
-        codes = jnp.take(table.codes, ids, axis=0)
+        codes = codestore.take_rows(table.codes, ids)
         step = jnp.take(table.step, ids, axis=0)
         rows = quant.dequantize(codes, step)
     if out_dim is not None and out_dim != rows.shape[-1]:
@@ -130,7 +139,7 @@ def lookup(
 
 def dense_table(table: LPTTable) -> jax.Array:
     """Materialize the full de-quantized table (dense/pjit path)."""
-    return quant.dequantize(table.codes, table.step)
+    return quant.dequantize(codestore.logical_codes(table.codes), table.step)
 
 
 # ---------------------------------------------------------------------------
@@ -287,7 +296,9 @@ def sparse_apply(
     # Gather current rows + optimizer slots (sentinel gathers row 0 harmlessly;
     # its scatter is dropped).
     safe = jnp.minimum(uniq, n - 1)
-    w = quant.dequantize(jnp.take(table.codes, safe, axis=0), jnp.take(table.step, safe))
+    w = quant.dequantize(
+        codestore.take_rows(table.codes, safe), jnp.take(table.step, safe)
+    )
     # Slot layout is optimizer-dependent ([k, d] adam / [k] otherwise) but the
     # gather is row-indexed either way.
     mu = jnp.take(table.mu, safe, axis=0)
@@ -303,7 +314,7 @@ def sparse_apply(
     else:
         noise = None
     new_codes_rows = quant.quantize_codes(w_new, step_rows, bits, rounding, noise)
-    codes = table.codes.at[uniq].set(new_codes_rows, mode="drop")
+    codes = codestore.set_rows(table.codes, uniq, new_codes_rows, mode="drop")
     step = table.step.at[uniq].set(step_rows, mode="drop")
     mu_t = table.mu.at[uniq].set(mu_new, mode="drop")
     nu_t = table.nu.at[uniq].set(nu_new, mode="drop")
@@ -370,7 +381,7 @@ def dense_apply(
             noise = None
         codes_new = quant.quantize_codes(w_new, step, bits, rounding, noise)
     mask = touched[:, None]
-    codes = jnp.where(mask, codes_new, table.codes)
+    codes = codestore.where_rows(table.codes, touched, codes_new)
     if table.mu.ndim == 2:
         mu = jnp.where(mask, mu_new, table.mu)
         nu = jnp.where(mask, nu_new, table.nu)
@@ -382,9 +393,15 @@ def dense_apply(
 
 
 def memory_bytes(table: LPTTable, bits: int, count_optimizer: bool = False) -> int:
-    """Training-memory accounting as in paper Table 1 (codes + Delta)."""
-    n, d = table.codes.shape
-    code_bytes = n * d * bits / 8.0
+    """Training-memory accounting (codes + Delta), storage-actual.
+
+    Reports the *container's* resident bytes — ``ceil(d * bits / 8)`` per row
+    for a packed CodeStore, one byte per code otherwise — so the paper Table 1
+    compression figures reflect what is actually allocated, not an idealized
+    bits/8 that an int8-per-code layout never achieved.
+    """
+    n, _ = table.codes.shape
+    code_bytes = codestore.resident_bytes_of(table.codes)
     step_bytes = n * 4
     total = code_bytes + step_bytes
     if count_optimizer:

@@ -199,30 +199,29 @@ fake_quant_pact.defvjp(_pact_fwd, _pact_bwd)
 
 
 # ---------------------------------------------------------------------------
-# Sub-byte storage: the int8 container is the compute format; for m <= 4 the
-# *storage* format packs two codes per byte (deployment detail the paper's
-# compression ratios assume at 2/4-bit).
+# Sub-byte storage: the int8 container is the compute format; for bits <= 4
+# the *storage* format packs 8//bits codes per byte.  The container itself
+# lives in repro.core.codestore (packed pack4/unpack4 generalized into
+# pack_codes/unpack_codes); re-exported here for the quantization API surface.
 # ---------------------------------------------------------------------------
+
+from repro.core.codestore import pack_codes, unpack_codes  # noqa: E402
 
 
 def pack4(codes: jax.Array) -> jax.Array:
-    """int8 codes in [-8, 7] -> packed uint8 [n, d//2] (low nibble first)."""
+    """int8 codes in [-8, 7] -> packed uint8 [n, d//2] (low nibble first).
+
+    Thin wrapper over :func:`repro.core.codestore.pack_codes` at bits=4,
+    kept for the historical even-width contract (byte-identical layout).
+    """
     if codes.shape[-1] % 2:
         raise ValueError("last dim must be even to pack")
-    u = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)
-    lo, hi = u[..., 0::2], u[..., 1::2]
-    return (lo | (hi << 4)).astype(jnp.uint8)
+    return pack_codes(codes, 4)
 
 
 def unpack4(packed: jax.Array) -> jax.Array:
     """Inverse of pack4 -> int8 codes in [-8, 7]."""
-    lo = (packed & 0xF).astype(jnp.int8)
-    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
-    # Sign-extend 4-bit two's complement.
-    lo = jnp.where(lo >= 8, lo - 16, lo)
-    hi = jnp.where(hi >= 8, hi - 16, hi)
-    out = jnp.stack([lo, hi], axis=-1)
-    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+    return unpack_codes(packed, 4, packed.shape[-1] * 2)
 
 
 def init_step_size(w: jax.Array, bits: int, per_row: bool = True) -> jax.Array:

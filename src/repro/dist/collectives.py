@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant
+from repro.core import codestore, quant
 from repro.kernels import ops as kernel_ops
 
 
@@ -83,8 +83,31 @@ def compressed_psum_local(
         jax.random.fold_in(key, _linear_rank(axis)), grad.shape
     )
     codes = _sr_codes(grad, step, noise, bits, use_kernels)
-    total = jax.lax.psum(codes.astype(jnp.int32), axis)
+    if codestore.is_packable(bits):
+        total = _packed_psum_codes(codes, axis, bits)
+    else:
+        total = jax.lax.psum(codes.astype(jnp.int32), axis)
     return total.astype(jnp.float32) * step
+
+
+def _packed_psum_codes(codes: jax.Array, axis, bits: int) -> jax.Array:
+    """Sum sub-byte codes over ``axis`` shipping the *packed* wire format.
+
+    Each rank packs its codes 8//bits per byte, the uint8 payload is
+    all-gathered (that's what crosses the wire — ``sync_wire_bytes`` charges
+    exactly these bytes), and every rank unpacks the stack and sums in int32.
+    Integer addition is associative, so this is bitwise-identical to a direct
+    ``psum`` of the codes — the compressed-sync twins contract is unchanged.
+    """
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    wire = codestore.pack_codes(codes.reshape(1, -1), bits)
+    for a in reversed(axes):
+        wire = jax.lax.all_gather(wire, a, axis=0, tiled=False)
+    for _ in axes[1:]:
+        wire = wire.reshape((-1,) + wire.shape[2:])
+    stack = codestore.unpack_codes(wire, bits, codes.size)
+    total = jnp.sum(stack.astype(jnp.int32), axis=0)
+    return total.reshape(codes.shape)
 
 
 def compressed_pmean_local(
@@ -186,12 +209,14 @@ def sync_wire_bytes(grads, bits: int) -> int:
     """Per-rank gradient payload (bytes) put on the wire for one sync.
 
     ``grads`` is a pytree of arrays or ``ShapeDtypeStruct``s.  The fp32
-    baseline ships 4 bytes per element; the compressed path ships the
-    ``bits``-bit codes in their packed wire format (sub-byte widths pack two
-    codes per byte, ``quant.pack4``) plus one fp32 step scalar per tensor for
-    the shared-absmax (pmax) exchange.  Ring-schedule constant factors
-    (2(n-1)/n hops) multiply both paths equally and cancel in the ratio, so
-    they are left out.
+    baseline ships 4 bytes per element; the compressed path ships the codes
+    in their actual wire format — sub-byte widths (bits in {2, 4}) travel
+    packed by ``codestore.pack_codes`` at ``8 // bits`` codes per byte
+    (that's the payload ``_packed_psum_codes`` all-gathers), every other
+    integer width ships one byte per code — plus one fp32 step scalar per
+    tensor for the shared-absmax (pmax) exchange.  Ring-schedule constant
+    factors (2(n-1)/n hops) multiply both paths equally and cancel in the
+    ratio, so they are left out.
     """
     if not 2 <= bits <= 8 and bits != 32:
         raise ValueError(f"sync_bits must be 32 or in [2, 8], got {bits}")
@@ -202,9 +227,12 @@ def sync_wire_bytes(grads, bits: int) -> int:
             size *= int(dim)
         if bits == 32:
             total += size * 4
-        else:
+        elif codestore.is_packable(bits):
             # Packed codes round up to whole bytes per tensor.
-            total += -(-size * bits // 8) + 4
+            total += -(-size // codestore.codes_per_byte(bits)) + 4
+        else:
+            # Non-byte-divisor widths ship one byte per code.
+            total += size + 4
     return total
 
 

@@ -15,17 +15,27 @@ Block shape: (1, d_block) per grid step, d_block = min(d, 512) lanes
 """
 from __future__ import annotations
 
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.codestore import unpack_codes
+
 
 def _kernel(ids_ref, codes_ref, step_ref, out_ref):
     # codes_ref: (1, d_block) int8 tile of the row selected by the index map.
     # step_ref:  (1, 1) f32 step of that row.
     codes = codes_ref[...].astype(jnp.float32)
+    out_ref[...] = codes * step_ref[0, 0]
+
+
+def _kernel_packed(ids_ref, codes_ref, step_ref, out_ref, *, bits, d):
+    # codes_ref: (1, w) packed uint8 row — the HBM->VMEM DMA moved bits/8
+    # bytes per code; the sub-byte codes only exist unpacked here in VMEM.
+    codes = unpack_codes(codes_ref[...], bits, d).astype(jnp.float32)
     out_ref[...] = codes * step_ref[0, 0]
 
 
@@ -63,3 +73,41 @@ def dequant_gather(
         interpret=interpret,
     )
     return fn(ids.astype(jnp.int32), codes, step2d)
+
+
+def dequant_gather_packed(
+    packed: jax.Array,  # uint8 [n, w] packed container (w = ceil(d*bits/8))
+    step: jax.Array,  # f32  [n]
+    ids: jax.Array,  # int32 [b]
+    *,
+    bits: int,
+    d: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed-container gather: moves w bytes/row from HBM, unpacks in VMEM.
+
+    Returns f32 [b, d] de-quantized rows, bitwise equal to
+    ``dequant_gather(unpack_codes(packed), ...)`` — the unpack is exact and
+    the de-quantize runs in the same operation order.  Rows stay whole (one
+    grid step per id): sub-byte column tiling would split mid-byte.
+    """
+    n, w = packed.shape
+    (b,) = ids.shape
+    step2d = step.reshape(n, 1)
+
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i, ids_ref: (ids_ref[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, ids_ref: (ids_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids_ref: (i, 0)),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel_packed, bits=bits, d=d),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )
+    return fn(ids.astype(jnp.int32), packed, step2d)

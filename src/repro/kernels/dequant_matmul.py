@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.codestore import unpack_codes
+
 
 def _kernel(x_ref, codes_ref, step_ref, out_ref, acc_ref, *, k_steps: int):
     k = pl.program_id(2)
@@ -78,3 +80,58 @@ def dequant_matmul(
         interpret=interpret,
     )
     return fn(x, codes, step.reshape(n, 1))
+
+
+def _kernel_packed(x_ref, codes_ref, step_ref, out_ref, *, bits, k):
+    # codes_ref: (bn, w) packed uint8 tile — whole-K (column tiling would
+    # split codes mid-byte).  Unpack in VMEM, scale, contract on the MXU.
+    x = x_ref[...].astype(jnp.float32)  # (bm, k)
+    codes = unpack_codes(codes_ref[...], bits, k).astype(jnp.float32)
+    w = codes * step_ref[...].astype(jnp.float32)
+    out_ref[...] = jax.lax.dot_general(
+        x,
+        w,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
+
+
+def dequant_matmul_packed(
+    x: jax.Array,  # [M, K] f32/bf16 activations
+    packed: jax.Array,  # uint8 [N, W] packed codes (W = ceil(K*bits/8))
+    step: jax.Array,  # [N] f32 per-row Delta
+    *,
+    bits: int,
+    k: int,  # logical K (contraction length)
+    block_m: int = 128,
+    block_n: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed-container twin of :func:`dequant_matmul` (whole-K blocks).
+
+    Reads bits/8 bytes per weight from HBM; the int8 codes and the fp32 tile
+    both exist only in VMEM.  Bitwise equal to
+    ``dequant_matmul(x, unpack_codes(packed), step)`` at whole-K blocking.
+    """
+    m, k2 = x.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x[{m},{k2}] vs logical k={k}")
+    n, w = packed.shape
+    bm, bn = min(block_m, m), min(block_n, n)
+    if m % bm or n % bn:
+        raise ValueError(f"({m},{n}) not divisible by blocks ({bm},{bn})")
+    grid = (m // bm, n // bn)
+    fn = pl.pallas_call(
+        functools.partial(_kernel_packed, bits=bits, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )
+    return fn(x, packed, step.reshape(n, 1))

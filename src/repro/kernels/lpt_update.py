@@ -20,10 +20,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.codestore import pack_codes, unpack_codes
+
 
 def _kernel(codes_ref, step_ref, grad_ref, noise_ref, new_step_ref, lr_ref,
-            out_ref, *, lo: int, hi: int, weight_decay: float):
-    codes = codes_ref[...].astype(jnp.float32)
+            out_ref, *, lo: int, hi: int, weight_decay: float,
+            bits: int = 8, d: int = 0):
+    packed = d > 0  # packed container: codes blocks are uint8 [rb, w]
+    if packed:
+        codes = unpack_codes(codes_ref[...], bits, d).astype(jnp.float32)
+    else:
+        codes = codes_ref[...].astype(jnp.float32)
     step = step_ref[...].astype(jnp.float32)  # [rb, 1]
     w = codes * step
     upd = grad_ref[...].astype(jnp.float32)
@@ -36,7 +43,8 @@ def _kernel(codes_ref, step_ref, grad_ref, noise_ref, new_step_ref, lr_ref,
     scaled = jnp.clip(w / ns, lo, hi)
     base = jnp.floor(scaled)
     up = (scaled - base > noise_ref[...]).astype(jnp.float32)
-    out_ref[...] = jnp.clip(base + up, lo, hi).astype(jnp.int8)
+    codes_new = jnp.clip(base + up, lo, hi).astype(jnp.int8)
+    out_ref[...] = pack_codes(codes_new, bits) if packed else codes_new
 
 
 def lpt_fused_update(
@@ -79,4 +87,57 @@ def lpt_fused_update(
     return fn(
         codes, step.reshape(rows, 1), grad, noise, new_step.reshape(rows, 1),
         jnp.asarray(lr, jnp.float32).reshape(1, 1),
+    )
+
+
+def lpt_fused_update_packed(
+    packed: jax.Array,  # uint8 [R, W] packed container (W = ceil(C*bits/8))
+    step: jax.Array,  # f32 [R]
+    grad: jax.Array,  # [R, C]
+    noise: jax.Array,  # f32 [R, C]
+    lr: jax.Array,
+    bits: int,
+    d: int,  # logical C
+    *,
+    new_step: jax.Array | None = None,
+    weight_decay: float = 0.0,
+    row_block: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed-container twin of :func:`lpt_fused_update`.
+
+    Tiles over rows only (full-width blocks): column tiling would split codes
+    mid-byte.  Per tile the code traffic is W bytes/row in and out — the
+    unpack/update/re-pack all happen in VMEM, and the body between them is
+    statement-for-statement the unpacked kernel's, so the result is bitwise
+    equal to ``pack(lpt_fused_update(unpack(packed), ...))``.
+    """
+    rows, w = packed.shape
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    rb = min(row_block, rows)
+    if rows % rb:
+        raise ValueError(f"rows={rows} not divisible by row_block={rb}")
+    if new_step is None:
+        new_step = step
+    grid = (rows // rb,)
+    fn = pl.pallas_call(
+        functools.partial(
+            _kernel, lo=lo, hi=hi, weight_decay=weight_decay, bits=bits, d=d
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, w), lambda i: (i, 0)),
+            pl.BlockSpec((rb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((rb, d), lambda i: (i, 0)),
+            pl.BlockSpec((rb, d), lambda i: (i, 0)),
+            pl.BlockSpec((rb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, w), jnp.uint8),
+        interpret=interpret,
+    )
+    return fn(
+        packed, step.reshape(rows, 1), grad, noise,
+        new_step.reshape(rows, 1), jnp.asarray(lr, jnp.float32).reshape(1, 1),
     )

@@ -34,11 +34,24 @@ import logging
 
 import jax
 
+from repro.core.codestore import CodeStore
 from repro.kernels import ref
 from repro.kernels.dequant_gather import dequant_gather as _dequant_gather
+from repro.kernels.dequant_gather import (
+    dequant_gather_packed as _dequant_gather_packed,
+)
 from repro.kernels.dequant_matmul import dequant_matmul as _dequant_matmul
+from repro.kernels.dequant_matmul import (
+    dequant_matmul_packed as _dequant_matmul_packed,
+)
 from repro.kernels.lpt_update import lpt_fused_update as _lpt_fused_update
+from repro.kernels.lpt_update import (
+    lpt_fused_update_packed as _lpt_fused_update_packed,
+)
 from repro.kernels.sparse_row_update import sparse_row_update as _sparse_row_update
+from repro.kernels.sparse_row_update import (
+    sparse_row_update_packed as _sparse_row_update_packed,
+)
 from repro.kernels.sr_round import sr_round as _sr_round
 from repro.kernels.sr_round import sr_round_seeded as sr_round_seeded  # re-export
 
@@ -189,11 +202,24 @@ def _blocks_2d(rows: int, cols: int):
 _ref_dequant_gather = jax.jit(ref.dequant_gather_ref)
 _ref_sr_round = jax.jit(ref.sr_round_ref, static_argnums=(3,))
 _ref_dequant_matmul = jax.jit(ref.dequant_matmul_ref)
+_ref_dequant_gather_packed = jax.jit(
+    ref.dequant_gather_packed_ref, static_argnames=("bits", "d")
+)
+_ref_dequant_matmul_packed = jax.jit(
+    ref.dequant_matmul_packed_ref, static_argnames=("bits", "k")
+)
 
 
 @functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
 def _dequant_gather_jit(codes, step, ids, *, d_block, interpret):
     return _dequant_gather(codes, step, ids, d_block=d_block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "d", "interpret"))
+def _dequant_gather_packed_jit(packed, step, ids, *, bits, d, interpret):
+    return _dequant_gather_packed(
+        packed, step, ids, bits=bits, d=d, interpret=interpret
+    )
 
 
 @functools.partial(
@@ -235,6 +261,33 @@ def _ref_lpt_update_jit(codes, step, grad, noise, lr, new_step, bits, *,
 
 
 @functools.partial(
+    jax.jit,
+    static_argnames=("bits", "d", "weight_decay", "row_block", "interpret",
+                     "has_new_step"),
+)
+def _lpt_update_packed_jit(packed, step, grad, noise, lr, new_step, *, bits,
+                           d, weight_decay, row_block, interpret,
+                           has_new_step):
+    return _lpt_fused_update_packed(
+        packed, step, grad, noise, lr, bits, d,
+        new_step=new_step if has_new_step else None,
+        weight_decay=weight_decay, row_block=row_block, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "d", "weight_decay", "has_new_step")
+)
+def _ref_lpt_update_packed_jit(packed, step, grad, noise, lr, new_step, *,
+                               bits, d, weight_decay, has_new_step):
+    return ref.lpt_fused_update_packed_ref(
+        packed, step, grad, noise, lr, bits, d,
+        new_step=new_step if has_new_step else None,
+        weight_decay=weight_decay,
+    )
+
+
+@functools.partial(
     jax.jit, static_argnames=("bits", "weight_decay", "interpret")
 )
 def _sparse_row_update_jit(codes, step, mu, nu, uniq, g_sum, noise, lr, c1,
@@ -255,6 +308,28 @@ def _ref_sparse_row_update_jit(codes, step, mu, nu, uniq, g_sum, noise, lr,
 
 
 @functools.partial(
+    jax.jit, static_argnames=("bits", "d", "weight_decay", "interpret")
+)
+def _sparse_row_update_packed_jit(packed, step, mu, nu, uniq, g_sum, noise,
+                                  lr, c1, c2, *, bits, d, weight_decay,
+                                  interpret):
+    return _sparse_row_update_packed(
+        packed, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits, d,
+        weight_decay=weight_decay, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "d", "weight_decay"))
+def _ref_sparse_row_update_packed_jit(packed, step, mu, nu, uniq, g_sum,
+                                      noise, lr, c1, c2, *, bits, d,
+                                      weight_decay):
+    return ref.sparse_row_update_packed_ref(
+        packed, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits, d,
+        weight_decay=weight_decay,
+    )
+
+
+@functools.partial(
     jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
 )
 def _dequant_matmul_jit(x, codes, step, *, block_m, block_n, block_k,
@@ -265,11 +340,49 @@ def _dequant_matmul_jit(x, codes, step, *, block_m, block_n, block_k,
     )
 
 
+@functools.partial(
+    jax.jit, static_argnames=("bits", "k", "block_m", "block_n", "interpret")
+)
+def _dequant_matmul_packed_jit(x, packed, step, *, bits, k, block_m, block_n,
+                               interpret):
+    return _dequant_matmul_packed(
+        x, packed, step, bits=bits, k=k, block_m=block_m, block_n=block_n,
+        interpret=interpret,
+    )
+
+
 # ------------------------------------------------------------------- wrappers
 
 
 def dequant_gather(codes, step, ids, *, use_kernel: bool = True):
-    """Fused int8-row gather + de-quantize: f32 [b, d] rows for flat ids."""
+    """Fused int8-row gather + de-quantize: f32 [b, d] rows for flat ids.
+
+    ``codes`` may be a raw int8 array or a :class:`CodeStore`; a packed store
+    dispatches to the packed-container kernel (packed bytes move HBM->VMEM,
+    the unpack happens in VMEM) — bitwise equal to the unpacked path.
+    """
+    if isinstance(codes, CodeStore) and codes.packed:
+        n, d = codes.shape
+        if not use_kernel:
+            return _ref_dequant_gather_packed(
+                codes.data, step, ids, bits=codes.bits, d=d
+            )
+        if d % SUBLANE or (not _default_interpret() and d > COL_BLOCK):
+            _note_fallback(
+                "dequant_gather", (n, d),
+                "dim not sublane-aligned" if d % SUBLANE
+                else "dim exceeds one block",
+            )
+            return _ref_dequant_gather_packed(
+                codes.data, step, ids, bits=codes.bits, d=d
+            )
+        _note_kernel("dequant_gather")
+        return _dequant_gather_packed_jit(
+            codes.data, step, ids, bits=codes.bits, d=d,
+            interpret=_default_interpret(),
+        )
+    if isinstance(codes, CodeStore):
+        codes = codes.data
     n, d = codes.shape
     if not use_kernel:
         return _ref_dequant_gather(codes, step, ids)
@@ -306,10 +419,51 @@ def lpt_update(codes, step, grad, noise, lr, bits: int, *, new_step=None,
     ``grad`` is the formed update direction (raw gradient for SGD, the Adam /
     Adagrad direction otherwise); ``new_step`` requantizes with ALPT's
     freshly learned Delta in the same pass.
+
+    A :class:`CodeStore` input returns a CodeStore with the same layout; a
+    packed store runs the packed kernel (unpack -> identical body -> re-pack,
+    all in VMEM) or its packed jnp oracle on ineligible shapes.
     """
+    if isinstance(codes, CodeStore) and codes.packed:
+        store = codes
+        rows, cols = store.shape
+        has_new_step = new_step is not None
+        ns = step if new_step is None else new_step
+        if not use_kernel:
+            out = _ref_lpt_update_packed_jit(
+                store.data, step, grad, noise, lr, ns, bits=bits, d=cols,
+                weight_decay=weight_decay, has_new_step=has_new_step,
+            )
+            return store.with_data(out)
+        rb = rows if _default_interpret() else _pick_block(rows, ROW_BLOCK)
+        if rows % SUBLANE or cols % SUBLANE or rb is None:
+            _note_fallback(
+                "lpt_update", (rows, cols), "shape not sublane-aligned"
+            )
+            out = _ref_lpt_update_packed_jit(
+                store.data, step, grad, noise, lr, ns, bits=bits, d=cols,
+                weight_decay=weight_decay, has_new_step=has_new_step,
+            )
+            return store.with_data(out)
+        _note_kernel("lpt_update")
+        out = _lpt_update_packed_jit(
+            store.data, step, grad, noise, lr, ns, bits=bits, d=cols,
+            weight_decay=weight_decay, row_block=rb,
+            interpret=_default_interpret(), has_new_step=has_new_step,
+        )
+        return store.with_data(out)
+    store = codes if isinstance(codes, CodeStore) else None
+    if store is not None:
+        codes = store.data
     rows, cols = codes.shape
     has_new_step = new_step is not None
     ns = step if new_step is None else new_step  # placeholder keeps jit arity
+    if store is not None:
+        out = lpt_update(
+            codes, step, grad, noise, lr, bits, new_step=new_step,
+            weight_decay=weight_decay, use_kernel=use_kernel,
+        )
+        return store.with_data(out)
     if not use_kernel:
         return _ref_lpt_update_jit(
             codes, step, grad, noise, lr, ns, bits,
@@ -339,7 +493,45 @@ def sparse_row_update(codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2,
     sentinel padding to the table's scratch row (``pad_to_tiles`` allocates
     it).  Adam slots must be [N, d] (row-Adam); other row optimizers use the
     jnp path upstream.  Returns ``(codes', mu', nu', w_new_rows)``.
+
+    A :class:`CodeStore` input returns a CodeStore ``codes'`` with the same
+    layout; a packed store keeps the aliased scatter on packed bytes
+    (re-packed in VMEM before the write-back).
     """
+    if isinstance(codes, CodeStore) and codes.packed:
+        store = codes
+        n, d = store.shape
+        if not use_kernel:
+            out, mu2, nu2, w_new = _ref_sparse_row_update_packed_jit(
+                store.data, step, mu, nu, uniq, g_sum, noise, lr, c1, c2,
+                bits=bits, d=d, weight_decay=weight_decay,
+            )
+            return store.with_data(out), mu2, nu2, w_new
+        if d % SUBLANE or d > COL_BLOCK:
+            _note_fallback(
+                "sparse_row_update", (n, d),
+                "dim not sublane-aligned" if d % SUBLANE
+                else "dim exceeds one block",
+            )
+            out, mu2, nu2, w_new = _ref_sparse_row_update_packed_jit(
+                store.data, step, mu, nu, uniq, g_sum, noise, lr, c1, c2,
+                bits=bits, d=d, weight_decay=weight_decay,
+            )
+            return store.with_data(out), mu2, nu2, w_new
+        _note_kernel("sparse_row_update")
+        out, mu2, nu2, w_new = _sparse_row_update_packed_jit(
+            store.data, step, mu, nu, uniq, g_sum, noise, lr, c1, c2,
+            bits=bits, d=d, weight_decay=weight_decay,
+            interpret=_default_interpret(),
+        )
+        return store.with_data(out), mu2, nu2, w_new
+    if isinstance(codes, CodeStore):
+        store = codes
+        out, mu2, nu2, w_new = sparse_row_update(
+            store.data, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits,
+            weight_decay=weight_decay, use_kernel=use_kernel,
+        )
+        return store.with_data(out), mu2, nu2, w_new
     n, d = codes.shape
     if not use_kernel:
         return _ref_sparse_row_update_jit(
@@ -372,7 +564,35 @@ def dequant_matmul(
     HBM.  Off-TPU any geometry runs as one whole-array interpreted block; on
     TPU the (m, n, k) dims must divide the (128, 128, 512) tiles or the call
     falls back (counted) to the jnp reference.
+
+    ``codes`` may be a :class:`CodeStore`; a packed store dispatches to the
+    whole-K packed kernel (bits/8 bytes per weight off HBM).
     """
+    if isinstance(codes, CodeStore) and codes.packed:
+        m, k = x.shape
+        n, d = codes.shape
+        if not use_kernel:
+            return _ref_dequant_matmul_packed(
+                x, codes.data, step, bits=codes.bits, k=d
+            )
+        bm, bn = min(block_m, m), min(block_n, n)
+        if m % bm or n % bn:
+            if _default_interpret():
+                bm, bn = m, n
+            else:
+                _note_fallback(
+                    "dequant_matmul", (m, n, k), "blocks not divisible"
+                )
+                return _ref_dequant_matmul_packed(
+                    x, codes.data, step, bits=codes.bits, k=d
+                )
+        _note_kernel("dequant_matmul")
+        return _dequant_matmul_packed_jit(
+            x, codes.data, step, bits=codes.bits, k=d, block_m=bm,
+            block_n=bn, interpret=_default_interpret(),
+        )
+    if isinstance(codes, CodeStore):
+        codes = codes.data
     m, k = x.shape
     n, _ = codes.shape
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)

@@ -10,10 +10,52 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.codestore import pack_codes, unpack_codes
+
 
 def dequant_gather_ref(codes: jax.Array, step: jax.Array, ids: jax.Array) -> jax.Array:
     rows = jnp.take(codes, ids, axis=0).astype(jnp.float32)
     return rows * jnp.take(step, ids)[:, None]
+
+
+# Packed-container oracles: pack/unpack is exactly invertible on the valid
+# code range and every arithmetic statement runs on the *unpacked* values in
+# the same order as the unpacked oracle, so packed-on == packed-off bitwise.
+
+
+def dequant_gather_packed_ref(packed, step, ids, *, bits: int, d: int):
+    rows = unpack_codes(
+        jnp.take(packed, ids, axis=0), bits, d
+    ).astype(jnp.float32)
+    return rows * jnp.take(step, ids)[:, None]
+
+
+def dequant_matmul_packed_ref(x, packed, step, *, bits: int, k: int,
+                              out_dtype=jnp.float32):
+    return dequant_matmul_ref(
+        x, unpack_codes(packed, bits, k), step, out_dtype
+    )
+
+
+def lpt_fused_update_packed_ref(packed, step, grad, noise, lr, bits: int,
+                                d: int, new_step=None,
+                                weight_decay: float = 0.0):
+    codes_new = lpt_fused_update_ref(
+        unpack_codes(packed, bits, d), step, grad, noise, lr, bits,
+        new_step=new_step, weight_decay=weight_decay,
+    )
+    return pack_codes(codes_new, bits)
+
+
+def sparse_row_update_packed_ref(packed, step, mu, nu, uniq, g_sum, noise,
+                                 lr, c1, c2, bits: int, d: int, *,
+                                 weight_decay: float = 0.0, b1: float = 0.9,
+                                 b2: float = 0.999, eps: float = 1e-8):
+    codes, mu_new, nu_new, w_new = sparse_row_update_ref(
+        unpack_codes(packed, bits, d), step, mu, nu, uniq, g_sum, noise,
+        lr, c1, c2, bits, weight_decay=weight_decay, b1=b1, b2=b2, eps=eps,
+    )
+    return pack_codes(codes, bits), mu_new, nu_new, w_new
 
 
 def sr_round_ref(w: jax.Array, step: jax.Array, noise: jax.Array, bits: int) -> jax.Array:

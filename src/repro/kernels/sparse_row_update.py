@@ -33,15 +33,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.codestore import pack_codes, unpack_codes
+
 
 def _kernel(ids_ref, scal_ref, codes_ref, step_ref, mu_ref, nu_ref, g_ref,
             noise_ref, out_codes, out_mu, out_nu, out_w, *,
             lo: int, hi: int, weight_decay: float, b1: float, b2: float,
-            eps: float):
+            eps: float, bits: int = 8, d: int = 0):
     lr = scal_ref[0]
     c1 = scal_ref[1]
     c2 = scal_ref[2]
-    w = codes_ref[...].astype(jnp.float32) * step_ref[...].astype(jnp.float32)
+    packed = d > 0  # packed container: codes blocks are uint8 [1, w]
+    if packed:
+        codes = unpack_codes(codes_ref[...], bits, d).astype(jnp.float32)
+    else:
+        codes = codes_ref[...].astype(jnp.float32)
+    w = codes * step_ref[...].astype(jnp.float32)
     g = g_ref[...].astype(jnp.float32)
     mu = b1 * mu_ref[...] + (1.0 - b1) * g
     nu = b2 * nu_ref[...] + (1.0 - b2) * jnp.square(g)
@@ -52,7 +59,10 @@ def _kernel(ids_ref, scal_ref, codes_ref, step_ref, mu_ref, nu_ref, g_ref,
     scaled = jnp.clip(w_new / step_ref[...].astype(jnp.float32), lo, hi)
     base = jnp.floor(scaled)
     up = (scaled - base > noise_ref[...]).astype(jnp.float32)
-    out_codes[...] = jnp.clip(base + up, lo, hi).astype(jnp.int8)
+    codes_new = jnp.clip(base + up, lo, hi).astype(jnp.int8)
+    # Re-pack on the aliased scatter: the updated row leaves VMEM as packed
+    # bytes, so the HBM write stays at bits/8 bytes per code.
+    out_codes[...] = pack_codes(codes_new, bits) if packed else codes_new
     out_mu[...] = mu
     out_nu[...] = nu
     out_w[...] = w_new
@@ -122,5 +132,79 @@ def sparse_row_update(
     )
     return fn(
         uniq.astype(jnp.int32), scal, codes, step.reshape(n, 1), mu, nu,
+        g_sum, noise,
+    )
+
+
+def sparse_row_update_packed(
+    packed: jax.Array,  # uint8 [N, w] packed container (w = ceil(d*bits/8))
+    step: jax.Array,  # f32 [N]
+    mu: jax.Array,  # f32 [N, d]
+    nu: jax.Array,  # f32 [N, d]
+    uniq: jax.Array,  # int32 [K]
+    g_sum: jax.Array,  # f32 [K, d]
+    noise: jax.Array,  # f32 [K, d]
+    lr: jax.Array,
+    c1: jax.Array,
+    c2: jax.Array,
+    bits: int,
+    d: int,
+    *,
+    weight_decay: float = 0.0,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    interpret: bool = False,
+):
+    """Packed-container twin of :func:`sparse_row_update`.
+
+    Each grid step DMAs one packed uint8 row (w bytes) in, unpacks in VMEM,
+    runs the identical Adam + SR body on the int8 codes, re-packs, and writes
+    the packed row back through the same ``input_output_aliases`` scatter —
+    bits/8 bytes per code of HBM code traffic in each direction.  Returns
+    ``(packed', mu', nu', w_new_rows)``.
+    """
+    n, w = packed.shape
+    k = uniq.shape[0]
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # (uniq ids, [lr, c1, c2])
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, w), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (ids[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids, s: (i, 0)),
+        ],
+    )
+    fn = pl.pallas_call(
+        functools.partial(
+            _kernel, lo=lo, hi=hi, weight_decay=weight_decay, b1=b1, b2=b2,
+            eps=eps, bits=bits, d=d,
+        ),
+        grid_spec=spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, w), jnp.uint8),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+        ],
+        input_output_aliases={2: 0, 4: 1, 5: 2},
+        interpret=interpret,
+    )
+    scal = jnp.stack(
+        [jnp.asarray(lr, jnp.float32), jnp.asarray(c1, jnp.float32),
+         jnp.asarray(c2, jnp.float32)]
+    )
+    return fn(
+        uniq.astype(jnp.int32), scal, packed, step.reshape(n, 1), mu, nu,
         g_sum, noise,
     )

@@ -40,7 +40,10 @@ CTR_DEMO_DATA = CTRDatasetConfig(
     cardinalities=(97, 41, 13, 211, 89, 53, 17, 149),
     teacher_rank=4, seed=0,
 )
-CTR_DEMO_DIM = 16
+# d=64: wide enough that the per-row fp32 scale doesn't mask the packed
+# sub-byte code savings (bits=4 resident <= 0.55x bits=8, asserted in
+# benchmarks/serve_bench.py).
+CTR_DEMO_DIM = 64
 
 
 def build_ctr_demo_engine(method: str, *, bits: int = 8, batch: int,

@@ -13,7 +13,16 @@ from repro.methods.base import (  # noqa: F401
 )
 
 # Importing an implementation module registers its method(s).
-from repro.methods import alpt, fp, lpt, prune, qat, qr_hash, qr_lpt  # noqa: E402,F401
+from repro.methods import (  # noqa: E402,F401
+    alpt,
+    fp,
+    lpt,
+    mixed,
+    prune,
+    qat,
+    qr_hash,
+    qr_lpt,
+)
 
 __all__ = [
     "EmbeddingMethod",

@@ -29,9 +29,12 @@ class ALPTMethod(LPTMethod):
 
     @staticmethod
     def _acfg(spec, weight_decay) -> alpt_core.ALPTConfig:
+        # spec.bits is the table's storage width (it sized the code container
+        # at init); a stale ALPTConfig.bits default must not write wider
+        # codes into a narrower (possibly packed) container.
         return spec.alpt._replace(
-            weight_decay=weight_decay, optimizer=spec.row_optimizer,
-            use_kernels=spec.use_kernels,
+            bits=spec.bits, weight_decay=weight_decay,
+            optimizer=spec.row_optimizer, use_kernels=spec.use_kernels,
         )
 
     def fused_row_step(self, state, ids, *, spec, loss_from_rows, dense_params,

@@ -86,6 +86,16 @@ class EmbeddingSpec:
     # so padding is invisible to the model — it exists so real geometries hit
     # the kernel path instead of the shape fallback.
     pad_to_tiles: bool = False
+    # Code-container layout (repro.core.codestore): True packs sub-byte code
+    # widths (bits in {2, 4}) into uint8 at 8//bits codes per byte; False
+    # keeps one byte per code.  Pure storage choice — training and serving
+    # are bitwise identical either way (the packed-parity test bar).
+    packed: bool = True
+    # Per-field composition (the 'mixed' method): cardinalities of the CTR
+    # fields this table spans (sum == n), and optionally an explicit bit
+    # width per field.  None leaves the table a single group at `bits`.
+    field_cards: tuple[int, ...] | None = None
+    field_bits: tuple[int, ...] | None = None
 
     @property
     def is_integer_table(self) -> bool:
@@ -147,7 +157,11 @@ class EmbeddingMethod(abc.ABC):
     @abc.abstractmethod
     def memory_bytes(self, state: Any, spec: EmbeddingSpec, *,
                      training: bool) -> int:
-        """Embedding-memory accounting (paper Table 1 compression columns)."""
+        """Embedding-memory accounting (paper Table 1 compression columns).
+
+        Storage-actual: integer-table methods report their container's
+        resident bytes (``codestore.resident_bytes_of`` — packed sub-byte
+        widths count ceil(d*bits/8) per row, not one byte per code)."""
 
     # ------------------------------------------------- float-leaf formulation
 

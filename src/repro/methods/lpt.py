@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import codestore
 from repro.core import lpt as lpt_core
 from repro.methods.base import IntegerTableMethod, register
 
@@ -45,6 +46,7 @@ class LPTMethod(IntegerTableMethod):
             clip_value=self._clip_value_of(spec),
             optimizer=spec.row_optimizer,
             use_kernels=spec.use_kernels,
+            packed=spec.packed,
         )
 
     def lookup(self, state, ids, spec, grad_scale=1.0):
@@ -56,9 +58,10 @@ class LPTMethod(IntegerTableMethod):
         return lpt_core.dense_table(state)[: spec.n, : spec.d]
 
     def memory_bytes(self, state, spec, *, training):
+        # Storage-actual: the container's resident bytes (packed sub-byte
+        # widths really are ceil(d*bits/8) per row) + the per-row fp32 Delta.
         return (
-            int(spec.n_padded * spec.d_padded * spec.bits / 8)
-            + spec.n_padded * 4
+            codestore.resident_bytes_of(state.codes) + spec.n_padded * 4
         )
 
     def sparse_apply(self, state, ids, g_rows, *, spec, lr, weight_decay,

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import alpt as alpt_core
-from repro.core import hashing
+from repro.core import codestore, hashing
 from repro.core import lpt as lpt_core
 from repro.core import quant
 from repro.kernels import ops as kernel_ops
@@ -54,7 +54,7 @@ class QRLPTMethod(IntegerTableMethod):
             remainder=lpt_core.init_table(
                 k1, self._pad_rows(r, spec), spec.d_padded, spec.bits,
                 init_scale=spec.init_scale, optimizer=spec.row_optimizer,
-                use_kernels=spec.use_kernels,
+                use_kernels=spec.use_kernels, packed=spec.packed,
             ),
             # The quotient factor starts near 1 so the product starts ~= the
             # remainder rows (Shi et al. 2020 composition).
@@ -62,6 +62,7 @@ class QRLPTMethod(IntegerTableMethod):
                 k2, self._pad_rows(q_rows, spec), spec.d_padded, spec.bits,
                 init_scale=spec.init_scale, mean=1.0,
                 optimizer=spec.row_optimizer, use_kernels=spec.use_kernels,
+                packed=spec.packed,
             ),
             r=jnp.asarray(r, jnp.int32),
         )
@@ -81,8 +82,14 @@ class QRLPTMethod(IntegerTableMethod):
         return self.lookup(state, jnp.arange(spec.n), spec)
 
     def memory_bytes(self, state, spec, *, training):
+        # Storage-actual: packed sub-byte containers really hold
+        # ceil(d*bits/8) bytes per row; the per-row fp32 Delta rides along.
         rows = state.remainder.n_rows + state.quotient.n_rows
-        return int(rows * spec.d_padded * spec.bits / 8) + rows * 4
+        return (
+            codestore.resident_bytes_of(state.remainder.codes)
+            + codestore.resident_bytes_of(state.quotient.codes)
+            + rows * 4
+        )
 
     def _sub_apply(self, table, ids, g_rows, *, spec, lr, weight_decay, key,
                    id_space):
@@ -219,7 +226,7 @@ class QRALPTMethod(QRLPTMethod):
                 w_new, new_step_b, cfg.bits, cfg.rounding, noise
             )
         return table._replace(
-            codes=table.codes.at[uniq].set(codes_rows, mode="drop"),
+            codes=codestore.set_rows(table.codes, uniq, codes_rows, mode="drop"),
             step=table.step.at[uniq].set(new_step_b, mode="drop"),
         )
 

@@ -27,6 +27,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import codestore
 from repro.kernels import ops
 
 
@@ -39,14 +40,18 @@ class FloatTable:
 
 @dataclasses.dataclass(frozen=True)
 class QuantTable:
-    """int8-resident table: codes [N, D] + per-row scale [N].
+    """Integer-resident table: codes [N, D] + per-row scale [N].
 
-    ``n``/``d`` are the *live* geometry (``pad_to_tiles`` allocates N >= n,
-    D >= d so real tables hit the kernel path); they are static pytree aux
-    data, so jitted consumers slice with concrete bounds.
+    ``codes`` is either a raw int8 array or a
+    :class:`repro.core.codestore.CodeStore` — sub-byte widths arrive packed
+    (2 or 4 codes per resident byte) and stay packed; the fused kernels
+    unpack tiles in VMEM.  ``n``/``d`` are the *live* geometry
+    (``pad_to_tiles`` allocates N >= n, D >= d so real tables hit the kernel
+    path); they are static pytree aux data, so jitted consumers slice with
+    concrete bounds.
     """
 
-    codes: jax.Array  # int8 [N_alloc, D_alloc]
+    codes: codestore.CodeStore | jax.Array  # [N_alloc, D_alloc] logical
     step: jax.Array  # f32 [N_alloc]
     n: int  # live id space (ids must be < n)
     d: int  # live embedding width
@@ -68,6 +73,27 @@ class QRQuantTable:
     d: int
 
 
+@dataclasses.dataclass(frozen=True)
+class MixedQuantTable:
+    """Per-field mixed-precision composition of integer-resident sub-tables.
+
+    Fields are partitioned into groups by bit width; group ``g`` holds one
+    :class:`QuantTable` stacking the rows of every field assigned to it.
+    Global id ``i`` belongs to field ``f`` (via the static ``field_offsets``
+    fence-posts) and resolves to row ``i - field_offsets[f] +
+    field_local[f]`` of sub-table ``field_group[f]``.  The field maps are
+    tiny static tuples (one entry per *field*, not per row), so the id→row
+    arithmetic constant-folds inside jit.
+    """
+
+    subs: tuple[QuantTable, ...]
+    field_offsets: tuple[int, ...]  # [F] global start row per field
+    field_group: tuple[int, ...]  # [F] sub-table index per field
+    field_local: tuple[int, ...]  # [F] local start row inside the sub
+    n: int
+    d: int
+
+
 jax.tree_util.register_pytree_node(
     FloatTable,
     lambda t: ((t.table,), None),
@@ -83,17 +109,27 @@ jax.tree_util.register_pytree_node(
     lambda t: ((t.remainder, t.quotient), (t.r, t.n, t.d)),
     lambda aux, ch: QRQuantTable(ch[0], ch[1], *aux),
 )
+jax.tree_util.register_pytree_node(
+    MixedQuantTable,
+    lambda t: (
+        (t.subs,),
+        (t.field_offsets, t.field_group, t.field_local, t.n, t.d),
+    ),
+    lambda aux, ch: MixedQuantTable(ch[0], *aux),
+)
 
-ServingTable = FloatTable | QuantTable | QRQuantTable
+ServingTable = FloatTable | QuantTable | QRQuantTable | MixedQuantTable
 
 
 def is_serving_table(table) -> bool:
-    return isinstance(table, (FloatTable, QuantTable, QRQuantTable))
+    return isinstance(
+        table, (FloatTable, QuantTable, QRQuantTable, MixedQuantTable)
+    )
 
 
 def is_integer_resident(table) -> bool:
     """True when the resident bytes are integer codes (+ scales), not fp32."""
-    return isinstance(table, (QuantTable, QRQuantTable))
+    return isinstance(table, (QuantTable, QRQuantTable, MixedQuantTable))
 
 
 def resident_bytes(table) -> int:
@@ -106,11 +142,18 @@ def resident_bytes(table) -> int:
 
 
 def code_bytes(table) -> int:
-    """The integer-code footprint alone (excludes the scale vectors)."""
+    """The integer-code footprint alone (excludes the scale vectors).
+
+    Container-actual: a packed :class:`~repro.core.codestore.CodeStore`
+    counts its resident bytes (``ceil(d * bits / 8)`` per row), not one byte
+    per logical code.
+    """
     if isinstance(table, QuantTable):
-        return int(table.codes.size) * table.codes.dtype.itemsize
+        return codestore.resident_bytes_of(table.codes)
     if isinstance(table, QRQuantTable):
         return code_bytes(table.remainder) + code_bytes(table.quotient)
+    if isinstance(table, MixedQuantTable):
+        return sum(code_bytes(sub) for sub in table.subs)
     return 0
 
 
@@ -119,6 +162,8 @@ def scale_bytes(table) -> int:
         return int(table.step.size) * table.step.dtype.itemsize
     if isinstance(table, QRQuantTable):
         return scale_bytes(table.remainder) + scale_bytes(table.quotient)
+    if isinstance(table, MixedQuantTable):
+        return sum(scale_bytes(sub) for sub in table.subs)
     return 0
 
 
@@ -153,6 +198,24 @@ def rows(table, ids: jax.Array) -> jax.Array:
         return rows(table.remainder, ids % table.r) * rows(
             table.quotient, ids // table.r
         )
+    if isinstance(table, MixedQuantTable):
+        offs = jnp.asarray(table.field_offsets, jnp.int32)
+        fid = jnp.searchsorted(offs, ids.astype(jnp.int32), side="right") - 1
+        local = (
+            ids.astype(jnp.int32)
+            - jnp.take(offs, fid)
+            + jnp.take(jnp.asarray(table.field_local, jnp.int32), fid)
+        )
+        gid = jnp.take(jnp.asarray(table.field_group, jnp.int32), fid)
+        # Masked sum over the sub-tables — identical composition (group
+        # order, where/sum placement) to the training-side mixed lookup, so
+        # serving reads stay bitwise-parity with training.
+        out = jnp.zeros(ids.shape + (table.d,), jnp.float32)
+        for g, sub in enumerate(table.subs):
+            mask = gid == g
+            vals = rows(sub, jnp.where(mask, local, 0))
+            out = out + jnp.where(mask[..., None], vals, 0.0)
+        return out
     return jnp.take(table, ids, axis=0)
 
 
@@ -187,6 +250,15 @@ def head_logits(table, h: jax.Array) -> jax.Array:
         # the transient entirely but re-associates the product and breaks
         # bitwise parity with the fp-exported table — the parity contract
         # wins here; the decomposed head is a ROADMAP follow-up.
+        w = rows(table, jnp.arange(table.n))
+        return jnp.einsum("...d,vd->...v", h.astype(jnp.float32), w).astype(
+            jnp.float32
+        )
+    if isinstance(table, MixedQuantTable):
+        # Same trade-off as the QR head: compose the virtual rows through the
+        # per-group fused gathers (transient [n, d]; resident state stays
+        # packed integer) so the contraction is bitwise-parity with the
+        # fp-exported table.
         w = rows(table, jnp.arange(table.n))
         return jnp.einsum("...d,vd->...v", h.astype(jnp.float32), w).astype(
             jnp.float32

@@ -1,0 +1,335 @@
+"""Packed code-container tests: the CodeStore pytree, the end-to-end
+packed-vs-unpacked-vs-kernels-off bitwise parity bar for every integer-table
+method, the sub-byte memory-ratio acceptance (bits=4 <= 0.55x bits=8 for the
+training table, the Engine's resident metric, and the checkpoint artifact),
+the packed serving-checkpoint roundtrip, and the per-field mixed-precision
+method.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import methods
+from repro.core import codestore
+from repro.core import lpt as lpt_core
+
+jax.config.update("jax_platform_name", "cpu")
+
+INT_TABLE_METHODS = [
+    m for m in methods.available() if methods.get(m).is_integer_table
+]
+
+
+# ------------------------------------------------------------- container
+
+
+def test_codestore_packs_sub_byte_widths_only():
+    codes = jnp.zeros((8, 16), jnp.int8)
+    for bits, cpb in ((2, 4), (4, 2)):
+        s = codestore.CodeStore.from_codes(codes, bits)
+        assert s.packed and s.data.dtype == jnp.uint8
+        assert s.data.shape == (8, 16 // cpb)
+        assert s.resident_bytes == 8 * 16 // cpb
+    for bits in (3, 5, 6, 7, 8):
+        s = codestore.CodeStore.from_codes(codes, bits)
+        assert not s.packed
+        assert s.resident_bytes == 8 * 16
+
+
+def test_codestore_facade_is_logical():
+    codes = jax.random.randint(jax.random.PRNGKey(0), (8, 12), -8, 8, jnp.int8)
+    s = codestore.CodeStore.from_codes(codes, 4)
+    assert s.shape == (8, 12) and s.dtype == jnp.int8
+    assert s.size == 96 and s.ndim == 2
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(s.unpack()), np.asarray(codes))
+
+
+def test_codestore_row_ops_roundtrip():
+    codes = jax.random.randint(jax.random.PRNGKey(1), (16, 8), -2, 2, jnp.int8)
+    s = codestore.CodeStore.from_codes(codes, 2)
+    ids = jnp.array([3, 3, 0, 15], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(s.take(ids)), np.asarray(jnp.take(codes, ids, axis=0))
+    )
+    rows = jnp.full((2, 8), -2, jnp.int8)
+    idx = jnp.array([1, 9], jnp.int32)
+    updated = codestore.set_rows(s, idx, rows, mode="drop")
+    expect = codes.at[idx].set(rows, mode="drop")
+    np.testing.assert_array_equal(np.asarray(updated), np.asarray(expect))
+    # Out-of-range scatter drops, bit-identically to the raw .at path.
+    dropped = codestore.set_rows(s, jnp.array([99]), rows[:1], mode="drop")
+    np.testing.assert_array_equal(np.asarray(dropped), np.asarray(codes))
+
+
+def test_codestore_is_a_pytree_with_one_leaf():
+    s = codestore.CodeStore.from_codes(jnp.zeros((4, 8), jnp.int8), 4)
+    leaves, treedef = jax.tree_util.tree_flatten(s)
+    assert len(leaves) == 1 and leaves[0].dtype == jnp.uint8
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.bits == 4 and rebuilt.shape == (4, 8) and rebuilt.packed
+    # flows through jit as state
+    out = jax.jit(lambda t: t.with_data(t.data))(s)
+    assert isinstance(out, codestore.CodeStore) and out.packed
+
+
+def test_wire_bytes_sub_byte_and_odd_widths():
+    from repro.dist import collectives
+
+    grads = {"t": jax.ShapeDtypeStruct((100, 10), jnp.float32)}
+    assert collectives.sync_wire_bytes(grads, 2) == 250 + 4
+    assert collectives.sync_wire_bytes(grads, 4) == 500 + 4
+    # Non-byte-divisor widths ship whole bytes, not an idealized bits/8.
+    assert collectives.sync_wire_bytes(grads, 5) == 1000 + 4
+    assert collectives.sync_wire_bytes(grads, 8) == 1000 + 4
+
+
+# ------------------------------------------- end-to-end packed parity bar
+
+
+def _ctr_fixture(name, *, bits=4, packed=True, use_kernels=True, d=8,
+                 field_bits=None, field_cards=None, cards=(23, 37, 11, 53)):
+    from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
+    from repro.models.ctr import DCNConfig
+    from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+
+    data_cfg = CTRDatasetConfig(
+        name="pack", n_fields=len(cards), cardinalities=cards,
+        teacher_rank=3, seed=11,
+    )
+    data = CTRSynthetic(data_cfg)
+    spec = methods.EmbeddingSpec(
+        method=name, n=data_cfg.n_features, d=d, bits=bits, init_scale=0.05,
+        use_kernels=use_kernels, pad_to_tiles=True, packed=packed,
+        field_cards=field_cards, field_bits=field_bits,
+    )
+    dcn = DCNConfig(n_fields=len(cards), emb_dim=d, cross_depth=1,
+                    mlp_widths=(16,))
+    tr = CTRTrainer(TrainerConfig(spec=spec, model="dcn", dcn=dcn, lr=1e-3))
+    return tr, data, spec
+
+
+def _train(tr, data, steps=2):
+    state = tr.init_state()
+    losses = []
+    for i in range(steps):
+        ids, labels = data.batch("train", i, 16)
+        state, m = tr.train_step(state, ids, labels)
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+@pytest.mark.parametrize("name", INT_TABLE_METHODS)
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_packed_parity_end_to_end(name, bits):
+    """The tentpole bar: packed-on == packed-off == kernels-off, bitwise, on
+    everything the model observes (de-quantized live table + losses), for
+    every integer-table method at every bit width, same seeds."""
+    results = []
+    for packed, kernels in ((True, True), (False, True), (True, False)):
+        tr, data, spec = _ctr_fixture(
+            name, bits=bits, packed=packed, use_kernels=kernels
+        )
+        state, losses = _train(tr, data)
+        table = methods.get(name).eval_table(state.emb_state, spec)
+        results.append((np.asarray(table), losses))
+    base_table, base_losses = results[0]
+    for table, losses in results[1:]:
+        np.testing.assert_array_equal(base_table, table)
+        assert losses == base_losses
+
+
+@pytest.mark.parametrize("name", INT_TABLE_METHODS)
+def test_packed_state_is_actually_packed(name):
+    tr, data, spec = _ctr_fixture(name, bits=4)
+    state, _ = _train(tr, data, steps=1)
+    stores = [
+        leaf for leaf in jax.tree.leaves(
+            state.emb_state,
+            is_leaf=lambda x: isinstance(x, codestore.CodeStore),
+        )
+        if isinstance(leaf, codestore.CodeStore)
+    ]
+    assert stores, f"{name}: no CodeStore leaves in trained state"
+    for s in stores:
+        assert s.packed and s.data.dtype == jnp.uint8
+        assert s.resident_bytes * 2 == s.size
+
+
+# --------------------------------------------------- memory-ratio acceptance
+
+
+def _table_and_engine_bytes(bits, tmp_path):
+    from repro.checkpoint import manager
+    from repro.serving.ctr import CTREngine
+
+    tr, data, spec = _ctr_fixture("lpt", bits=bits, d=64)
+    state, _ = _train(tr, data, steps=1)
+    m = methods.get("lpt")
+    train_bytes = m.memory_bytes(state.emb_state, spec, training=True)
+    eng = CTREngine.from_state(state, tr.cfg, batch=4)
+    eng_bytes = eng.resident_embedding_bytes
+    ckpt_dir = tmp_path / f"bits{bits}"
+    manager.save_serving_checkpoint(
+        ckpt_dir, step=1, params={}, table=state.emb_state, spec=spec
+    )
+    step_dir = ckpt_dir / "step_000000001"
+    ckpt_bytes = sum(
+        f.stat().st_size for f in step_dir.glob("leaf_*.npy")
+    )
+    return train_bytes, eng_bytes, ckpt_bytes, eng
+
+
+def test_bits4_resident_bytes_at_most_055x_bits8(tmp_path):
+    """Acceptance bar: at d=64 the 4-bit table is <= 0.55x the 8-bit table's
+    bytes for (a) the training state, (b) the serving Engine's resident
+    metric, and (c) the serving checkpoint artifact."""
+    t4, e4, c4, eng4 = _table_and_engine_bytes(4, tmp_path)
+    t8, e8, c8, _ = _table_and_engine_bytes(8, tmp_path)
+    assert t4 <= 0.55 * t8, (t4, t8)
+    assert e4 <= 0.55 * e8, (e4, e8)
+    assert c4 <= 0.55 * c8, (c4, c8)
+    # The Engine metric reports the true packed code footprint.
+    metrics = eng4.metrics()
+    n_alloc, d_alloc = eng4.table.codes.shape
+    assert metrics["embedding_code_bytes"] == n_alloc * d_alloc // 2
+    assert metrics["int8_resident"]
+
+
+# ------------------------------------------- packed serving checkpoint trip
+
+
+@pytest.mark.parametrize("name", INT_TABLE_METHODS)
+def test_packed_serving_checkpoint_roundtrip(name, tmp_path):
+    """Train -> serving checkpoint -> Engine.from_checkpoint: the codes stay
+    packed across the trip and the restored engine scores requests bitwise
+    identically to the pre-save engine."""
+    from repro.checkpoint import manager
+    from repro.serving.ctr import CTREngine, CTRRequest
+
+    tr, data, spec = _ctr_fixture(name, bits=4)
+    state, _ = _train(tr, data, steps=1)
+    live = CTREngine.from_state(state, tr.cfg, batch=4)
+    manager.save_serving_checkpoint(
+        tmp_path, step=1, params=state.dense_params, table=state.emb_state,
+        spec=spec,
+    )
+    restored = CTREngine.from_checkpoint(
+        tmp_path, tr.cfg, state.dense_params, batch=4
+    )
+    stores = [
+        leaf for leaf in jax.tree.leaves(
+            restored.table,
+            is_leaf=lambda x: isinstance(x, codestore.CodeStore),
+        )
+        if isinstance(leaf, codestore.CodeStore)
+    ]
+    assert stores, f"{name}: restored serving table has no CodeStore"
+    for s in stores:
+        assert s.packed and s.data.dtype == jnp.uint8
+
+    ids = np.asarray(data.batch("train", 3, 4)[0][0], np.int32)
+    for eng in (live, restored):
+        eng.submit(CTRRequest(ids=ids, rid=0))
+        eng.step()
+    a, b = live.poll(0), restored.poll(0)
+    assert a["logit"] == b["logit"]
+
+
+# ----------------------------------------------------- mixed-precision method
+
+
+def test_mixed_plan_degenerates_without_field_cards():
+    spec = methods.EmbeddingSpec(method="mixed", n=64, d=8, bits=4)
+    from repro.methods.mixed import plan_of
+
+    plan = plan_of(spec)
+    assert plan.group_bits == (4,)
+    assert plan.group_rows == (64,)
+    assert plan.field_group == (0,)
+
+
+def test_mixed_bit_assignment_from_stream_stats():
+    from repro.methods.mixed import assign_field_bits
+
+    # Hot small fields keep 8 bits, mid fields 4, huge vocabularies 2.
+    assert assign_field_bits((17, 300, 11, 5000)) == (8, 4, 8, 2)
+
+
+def test_mixed_plan_validates():
+    from repro.methods.mixed import plan_of
+
+    with pytest.raises(ValueError, match="field_cards sum"):
+        plan_of(methods.EmbeddingSpec(
+            method="mixed", n=10, d=8, field_cards=(4, 4)
+        ))
+    with pytest.raises(ValueError, match="field_bits"):
+        plan_of(methods.EmbeddingSpec(
+            method="mixed", n=8, d=8, field_cards=(4, 4), field_bits=(4,)
+        ))
+
+
+def test_mixed_multi_group_trains_and_serves_bitwise():
+    """A real per-field assignment (three bit-width groups) trains through
+    the unmodified CTRTrainer, packs its sub-byte groups, beats the uniform
+    8-bit footprint, and serves bitwise-identically to training lookups."""
+    from repro.serving.ctr import CTREngine, CTRRequest
+
+    cards = (17, 300, 11, 600)
+    fbits = (8, 4, 8, 2)
+    tr, data, spec = _ctr_fixture(
+        "mixed", bits=8, cards=cards, field_cards=cards, field_bits=fbits
+    )
+    state, losses = _train(tr, data)
+    assert all(np.isfinite(losses))
+    m = methods.get("mixed")
+
+    # Three groups: 8-bit (one byte/code), 4-bit (2/byte), 2-bit (4/byte).
+    subs = state.emb_state.subs
+    assert len(subs) == 3
+    assert [s.codes.bits for s in subs] == [8, 4, 2]
+    assert subs[1].codes.packed and subs[2].codes.packed
+
+    mixed_bytes = m.memory_bytes(state.emb_state, spec, training=True)
+    tr8, data8, spec8 = _ctr_fixture("lpt", bits=8, cards=cards)
+    st8, _ = _train(tr8, data8, steps=1)
+    lpt8_bytes = methods.get("lpt").memory_bytes(
+        st8.emb_state, spec8, training=True
+    )
+    assert mixed_bytes < lpt8_bytes
+
+    # Serving reads compose the groups exactly like training lookups.
+    eng = CTREngine.from_state(state, tr.cfg, batch=4)
+    ids, _ = data.batch("train", 5, 4)
+    ids = np.asarray(ids, np.int32)
+    from repro.serving import table as serving_tbl
+
+    got = serving_tbl.rows(eng.table, jnp.asarray(ids))
+    expect = m.lookup(state.emb_state, jnp.asarray(ids), spec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+    eng.submit(CTRRequest(ids=ids[0], rid=7))
+    eng.step()
+    assert np.isfinite(eng.poll(7)["logit"])
+
+
+def test_mixed_kernel_and_packed_parity():
+    """Multi-group mixed holds the same parity bar as the single-group
+    methods: packed-on == packed-off == kernels-off, bitwise."""
+    cards = (17, 64, 11, 120)
+    fbits = (8, 4, 8, 2)
+    results = []
+    for packed, kernels in ((True, True), (False, True), (True, False)):
+        tr, data, spec = _ctr_fixture(
+            "mixed", bits=8, cards=cards, field_cards=cards, field_bits=fbits,
+            packed=packed, use_kernels=kernels,
+        )
+        state, losses = _train(tr, data)
+        results.append(
+            (np.asarray(methods.get("mixed").eval_table(state.emb_state, spec)),
+             losses)
+        )
+    for table, losses in results[1:]:
+        np.testing.assert_array_equal(results[0][0], table)
+        assert losses == results[0][1]

@@ -1,11 +1,11 @@
-"""Extra coverage: 4-bit packed storage roundtrip, DeepFM end-to-end."""
+"""Extra coverage: sub-byte packed storage roundtrip, DeepFM end-to-end."""
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
 
-from repro.core import quant
+from repro.core import codestore, quant
 from repro.core.alpt import ALPTConfig
 from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
 from repro.models import embedding as emb_mod
@@ -16,21 +16,54 @@ jax.config.update("jax_platform_name", "cpu")
 
 
 @settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 10_000))
-def test_pack4_roundtrip_bit_exact(seed):
+@given(
+    seed=st.integers(0, 10_000),
+    bits=st.sampled_from([2, 4]),
+    d=st.integers(1, 33),  # odd widths exercise the zero-padded last byte
+)
+def test_pack_unpack_identity_full_code_range(seed, bits, d):
+    """pack∘unpack is the identity over the *entire* signed code range
+    (negative codes included) for both packable widths, any last-dim
+    length — the invariant every packed-vs-unpacked parity bar rests on."""
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1)
     key = jax.random.PRNGKey(seed)
-    codes = jax.random.randint(key, (8, 16), -8, 8, jnp.int8)
-    packed = quant.pack4(codes)
+    codes = jax.random.randint(key, (8, d), lo, hi, jnp.int8)
+    packed = codestore.pack_codes(codes, bits)
     assert packed.dtype == jnp.uint8
-    assert packed.shape == (8, 8)  # exactly half the bytes
+    assert packed.shape == (8, codestore.packed_width(d, bits))
     np.testing.assert_array_equal(
-        np.asarray(quant.unpack4(packed)), np.asarray(codes)
+        np.asarray(codestore.unpack_codes(packed, bits, d)), np.asarray(codes)
     )
 
 
-def test_pack4_storage_is_half():
+def test_pack_exhaustive_code_values():
+    """Every representable code value survives a roundtrip, both widths."""
+    for bits in (2, 4):
+        lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+        codes = jnp.arange(lo, hi + 1, dtype=jnp.int8).reshape(1, -1)
+        got = codestore.unpack_codes(
+            codestore.pack_codes(codes, bits), bits, codes.shape[-1]
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(codes))
+
+
+def test_pack4_compat_is_pack_codes():
+    """The legacy 4-bit helpers are thin aliases of the generalized pair —
+    byte-identical layout (low nibble first)."""
+    codes = jax.random.randint(jax.random.PRNGKey(3), (16, 32), -8, 8, jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(quant.pack4(codes)),
+        np.asarray(codestore.pack_codes(codes, 4)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(quant.unpack4(quant.pack4(codes))), np.asarray(codes)
+    )
+
+
+def test_pack_storage_ratio():
     codes = jnp.zeros((100, 32), jnp.int8)
-    assert quant.pack4(codes).size * 2 == codes.size
+    assert codestore.pack_codes(codes, 4).size * 2 == codes.size
+    assert codestore.pack_codes(codes, 2).size * 4 == codes.size
 
 
 def test_deepfm_end_to_end_with_alpt():

@@ -260,7 +260,7 @@ def test_lpt_fused_update_matches_ref(bits, shape, rb, cb):
 # ------------------------------------------------------- sparse_row_update
 
 
-@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("bits", [2, 4, 8])
 @pytest.mark.parametrize("weight_decay", [0.0, 5e-8])
 def test_sparse_row_update_matches_ref_bitwise(bits, weight_decay):
     """Fused gather+Adam+SR+scatter == the jnp oracle, bit for bit."""
@@ -374,3 +374,113 @@ def test_lpt_fused_update_with_new_step_matches_core():
     w = quant.dequantize(codes, step) - 0.01 * grad
     expect = quant.quantize_codes(w, new_step, 8, "sr", noise)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+# ------------------------------------------------------- packed containers
+#
+# The packed-storage contract: a CodeStore at bits in {2, 4} keeps its codes
+# packed through every fused op — packed bytes move HBM->VMEM, the unpack
+# (and the scatter's re-pack) happen in VMEM — and the results are BITWISE
+# equal to the raw int8 path, kernels on or off.
+
+
+def _packed_fixture(bits, n=32, d=16, seed=40):
+    from repro.core import codestore
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    raw = jax.random.randint(
+        ks[0], (n, d), -(2 ** (bits - 1)), 2 ** (bits - 1), jnp.int8
+    )
+    step = jax.random.uniform(ks[1], (n,), minval=1e-3, maxval=0.05)
+    store = codestore.CodeStore.from_codes(raw, bits)
+    assert store.packed and store.data.dtype == jnp.uint8
+    return raw, store, step
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_packed_dequant_gather_bitwise(bits, use_kernel):
+    raw, store, step = _packed_fixture(bits)
+    ids = jnp.array([0, 5, 5, 31, 2, 17, 8, 30], jnp.int32)
+    got = ops.dequant_gather(store, step, ids, use_kernel=use_kernel)
+    expect = ops.dequant_gather(raw, step, ids, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_packed_lpt_update_bitwise(bits, use_kernel):
+    raw, store, step = _packed_fixture(bits)
+    ks = jax.random.split(jax.random.PRNGKey(41), 2)
+    grad = jax.random.normal(ks[0], raw.shape) * 0.05
+    noise = jax.random.uniform(ks[1], raw.shape)
+    got = ops.lpt_update(
+        store, step, grad, noise, 0.01, bits, use_kernel=use_kernel
+    )
+    expect = ops.lpt_update(
+        raw, step, grad, noise, 0.01, bits, use_kernel=False
+    )
+    assert got.bits == bits and got.packed  # layout preserved on write-back
+    np.testing.assert_array_equal(
+        np.asarray(got.unpack()), np.asarray(expect)
+    )
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_packed_sparse_row_update_bitwise(bits, use_kernel):
+    raw, store, step = _packed_fixture(bits)
+    n, d = raw.shape
+    k = 8
+    ks = jax.random.split(jax.random.PRNGKey(42), 4)
+    mu = jax.random.normal(ks[0], (n, d)) * 0.01
+    nu = jax.random.uniform(ks[1], (n, d)) * 1e-3
+    uniq = jnp.asarray(
+        np.random.RandomState(6).choice(n, k, replace=False), jnp.int32
+    )
+    g = jax.random.normal(ks[2], (k, d)) * 0.1
+    noise = jax.random.uniform(ks[3], (k, d))
+    t = 3.0
+    c1, c2 = 1.0 - 0.9**t, 1.0 - 0.999**t
+    got = ops.sparse_row_update(
+        store, step, mu, nu, uniq, g, noise, 0.01, c1, c2, bits,
+        use_kernel=use_kernel,
+    )
+    expect = ops.sparse_row_update(
+        raw, step, mu, nu, uniq, g, noise, 0.01, c1, c2, bits,
+        use_kernel=False,
+    )
+    assert got[0].bits == bits and got[0].packed
+    np.testing.assert_array_equal(
+        np.asarray(got[0].unpack()), np.asarray(expect[0])
+    )
+    for a, b in zip(got[1:3], expect[1:3]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_packed_dequant_matmul_bitwise(bits, use_kernel):
+    raw, store, step = _packed_fixture(bits)
+    x = jax.random.normal(jax.random.PRNGKey(43), (8, raw.shape[1]))
+    got = ops.dequant_matmul(x, store, step, use_kernel=use_kernel)
+    expect = ops.dequant_matmul(x, raw, step, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_packed_dispatch_counts_no_fallbacks(bits):
+    """Packed dispatches land on the kernel path (counted under the same op
+    names as unpacked — the 'never silent' contract) with zero fallbacks on
+    aligned geometry."""
+    raw, store, step = _packed_fixture(bits)
+    ids = jnp.arange(16, dtype=jnp.int32)
+    ops.reset_fallback_stats()
+    ops.dequant_gather(store, step, ids)
+    grad = jnp.zeros(raw.shape, jnp.float32)
+    noise = jnp.full(raw.shape, 0.5)
+    ops.lpt_update(store, step, grad, noise, 0.01, bits)
+    stats = ops.fallback_stats()
+    assert stats["total_fallbacks"] == 0, stats
+    assert stats["kernel_calls"].get("dequant_gather", 0) >= 1
+    assert stats["kernel_calls"].get("lpt_update", 0) >= 1

@@ -1,0 +1,44 @@
+"""CI guard: no raw int8 code casts outside the code-container layers.
+
+The packed-storage refactor made :mod:`repro.core.codestore` the single
+owner of the code-container layout — every consumer reads/writes codes
+through ``CodeStore`` / the either-type helpers (``logical_codes``,
+``take_rows``, ``set_rows``, ``where_rows``) or through the kernel wrappers,
+which unpack sub-byte tiles in VMEM.  A direct ``.astype(jnp.int8)`` on a
+code array anywhere else is how the old implicit one-byte-per-code layout
+creeps back in: it silently materializes an unpacked copy (4x the resident
+bytes at 2-bit) and skips the sign-extension rules the container owns.
+
+Allowed layers: ``core/codestore.py`` (the container itself),
+``core/quant.py`` (the quantizer mints fresh codes), and ``kernels/``
+(in-VMEM unpack/repack inside the fused ops and their oracles).
+"""
+import pathlib
+import re
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+# The container layers that legitimately cast to the logical code dtype.
+EXEMPT = re.compile(r"^(core/codestore\.py|core/quant\.py|kernels/)")
+
+CAST = re.compile(r"\.astype\(\s*jnp\.int8\s*\)")
+
+
+def test_no_raw_int8_code_casts_outside_codestore():
+    offenders = []
+    for path in sorted(SRC.rglob("*.py")):
+        rel = path.relative_to(SRC).as_posix()
+        if EXEMPT.match(rel):
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if CAST.search(line):
+                offenders.append(
+                    f"{path.relative_to(SRC.parent.parent)}:{lineno}: "
+                    f"{line.strip()}"
+                )
+    assert not offenders, (
+        "raw .astype(jnp.int8) code cast found — go through "
+        "repro.core.codestore (CodeStore / pack_codes / unpack_codes / the "
+        "either-type helpers) so sub-byte tables stay packed:\n"
+        + "\n".join(offenders)
+    )
