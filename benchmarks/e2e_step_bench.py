@@ -41,7 +41,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro import configs, methods
 from repro.configs.common import concrete_batch
-from repro.core import codestore
+from repro.storage import base as rowstore
 from repro.core.alpt import ALPTConfig
 from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
 from repro.kernels import ops
@@ -134,7 +134,7 @@ def run_ctr(bits: int, use_kernels: bool, steps: int) -> dict:
             CTR_BATCH * CTR_DATA.n_fields, spec.d_padded, bits, use_kernels
         ),
         # Measured resident bytes of the live code container (not a model).
-        "packed_bytes": codestore.resident_bytes_of(state.emb_state.codes),
+        "packed_bytes": rowstore.resident_bytes_of(state.emb_state.codes),
         "shape_fallbacks": stats["total_fallbacks"],
         "kernel_calls": stats["kernel_calls"],
         "table_rows": spec.n_padded,
@@ -167,7 +167,7 @@ def run_lm(bits: int, use_kernels: bool, steps: int) -> dict:
         "embed_bytes_per_step": lm_embed_bytes(
             spec.n_padded, spec.d_padded, bits, use_kernels
         ),
-        "packed_bytes": codestore.resident_bytes_of(state.table.codes),
+        "packed_bytes": rowstore.resident_bytes_of(state.table.codes),
         "shape_fallbacks": stats["total_fallbacks"],
         "kernel_calls": stats["kernel_calls"],
         "vocab_rows": spec.n_padded,

@@ -24,7 +24,12 @@ import numpy as np
 from benchmarks.common import emit
 from repro import configs, methods
 from repro.core import codestore
-from repro.launch.serve import CTR_DEMO_DATA, CTR_DEMO_DIM, build_ctr_demo_engine
+from repro.launch.serve import (
+    CTR_DEMO_DATA,
+    CTR_DEMO_DIM,
+    CTR_ZIPF_DATA,
+    build_ctr_demo_engine,
+)
 from repro.serving import table as serving_tbl
 from repro.serving.ctr import CTRRequest
 from repro.serving.lm import LMEngine, LMRequest
@@ -119,6 +124,108 @@ def bench_ctr(method: str, *, requests: int, bits: int = 8) -> dict:
     return {**m, "bits": bits, "fp32_bytes": fp32_bytes}
 
 
+def bench_tiered(method: str, *, requests: int, cache_rows: int,
+                 cold_tier: bool = False,
+                 device_budget_bytes: int | None = None) -> dict:
+    """One Zipf(1.1) cell of the tiered-storage grid (PR 7 artifact).
+
+    Returns the metrics dict plus the scored probabilities, so the caller
+    can assert every cell is bitwise-equal to the cache-off baseline."""
+    engine, data = build_ctr_demo_engine(
+        method, batch=32, train_steps=3, train_batch=128,
+        data_cfg=CTR_ZIPF_DATA, cache_rows=cache_rows, cold_tier=cold_tier,
+        device_budget_bytes=device_budget_bytes,
+    )
+    # Warm the jit traces AND let the frequency-admission policy converge on
+    # the Zipf head before measuring (8 waves of held-out traffic).
+    for i in range(8):
+        warm, _ = data.batch("valid", i, 64)
+        for row in warm:
+            engine.submit(CTRRequest(ids=row))
+        engine.run()
+    engine.reset_metrics()
+    probs = {}
+    for i in range(requests // 32):
+        ids, _ = data.batch("test", i, 32)
+        rids = [engine.submit(CTRRequest(ids=row)) for row in ids]
+        done = engine.run()
+        probs.update({32 * i + j: done[r]["prob"] for j, r in enumerate(rids)})
+    m = engine.metrics()
+    frac = cache_rows / CTR_ZIPF_DATA.n_features
+    tier = "cold" if cold_tier else ("hot" if cache_rows else "off")
+    hit = m.get("cache_hit_rate")
+    emit(
+        f"serve/tiered/{method}/{tier}-{frac:.2f}",
+        m["us_per_request"],
+        f"hit={hit if hit is None else round(hit, 3)} "
+        f"resident_B={m['resident_embedding_bytes']}",
+    )
+    return {**m, "cache_rows": cache_rows, "cold_tier": cold_tier,
+            "cache_fraction": frac, "probs": probs}
+
+
+def run_tiered(smoke: bool = False, out: str | None = None) -> dict:
+    """The Zipf(1.1) tiered-storage grid: cache {0, 1%, 10%} of the vocab,
+    plus a cold-tier cell served under a device budget the full table
+    exceeds.  Asserts the PR-7 acceptance bars:
+
+    * every cached cell scores bitwise-equal to the cache-off baseline;
+    * the 10% hot tier catches >= 0.9 of Zipf(1.1) lookups;
+    * hot-tier device bytes stay inside the declared budget;
+    * the cold tier stays under a budget smaller than the full code bytes.
+    """
+    requests = 64 if smoke else 256
+    vocab = CTR_ZIPF_DATA.n_features
+    method = "alpt"
+
+    base = bench_tiered(method, requests=requests, cache_rows=0)
+    full_code_bytes = base["embedding_code_bytes"]
+    cells = [base]
+    for frac in (0.01, 0.10):
+        rows = max(1, int(vocab * frac))
+        # Budget: the declared hot rows + scales + id maps, with headroom
+        # for the per-slot bookkeeping — NOT enough for the whole table.
+        budget = int(full_code_bytes * frac * 4) + 64 * 1024
+        cell = bench_tiered(
+            method, requests=requests, cache_rows=rows,
+            device_budget_bytes=budget,
+        )
+        assert cell["probs"] == base["probs"], (
+            f"cache_rows={rows} broke bitwise serving parity"
+        )
+        hot = cell["caches"][0]
+        assert hot["hot_bytes"] + hot["metadata_bytes"] <= budget, (
+            hot, budget,
+        )
+        cells.append(cell)
+    ten = cells[-1]
+    assert ten["cache_hit_rate"] >= 0.9, (
+        f"Zipf(1.1) hit rate {ten['cache_hit_rate']:.3f} < 0.9 with a "
+        f"10%-of-vocab hot tier"
+    )
+
+    cold_budget = full_code_bytes - 1  # the full table must NOT fit
+    cold = bench_tiered(
+        method, requests=requests, cache_rows=max(1, vocab // 10),
+        cold_tier=True, device_budget_bytes=cold_budget,
+    )
+    assert cold["probs"] == base["probs"], "cold tier broke serving parity"
+    assert cold["resident_embedding_bytes"] <= cold_budget
+    cells.append(cold)
+
+    results = {
+        "data": {"name": CTR_ZIPF_DATA.name, "vocab": vocab,
+                 "zipf_a": CTR_ZIPF_DATA.zipf_a},
+        "cells": [{k: v for k, v in c.items() if k != "probs"}
+                  for c in cells],
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"[serve_bench] wrote {out}")
+    return results
+
+
 def run(smoke: bool = False, out: str | None = None) -> dict:
     requests = 8 if smoke else 32
     gen = 8 if smoke else 16
@@ -152,8 +259,15 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--tiered", action="store_true",
+                    help="run the Zipf(1.1) tiered-storage grid instead "
+                         "(cache {0, 1%%, 10%%} of vocab + cold tier); "
+                         "--out typically BENCH_PR7.json")
     args = ap.parse_args(argv)
-    run(args.smoke, args.out)
+    if args.tiered:
+        run_tiered(args.smoke, args.out)
+    else:
+        run(args.smoke, args.out)
     return 0
 
 

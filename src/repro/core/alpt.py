@@ -23,8 +23,9 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import codestore, lpt, quant
+from repro.core import fence, lpt, quant
 from repro.kernels import ops
+from repro.storage import base as rowstore
 
 
 class ALPTConfig(NamedTuple):
@@ -90,7 +91,13 @@ def alpt_step(
     rows = lpt.lookup(
         table, ids, use_kernels=cfg.use_kernels, out_dim=out_dim
     )  # w_hat_b^t
-    loss, g_rows = jax.value_and_grad(loss_fn)(rows)
+    # Fenced (see repro.core.fence): the model backward compiles as its own
+    # unit whatever storage backs the codes, keeping cache-on bitwise-equal
+    # to cache-off.  Ids are non-negative, so one doubles as the tick.
+    tick = ids.reshape(-1)[0]
+    loss, g_rows = fence.fence_call(
+        jax.value_and_grad(loss_fn), (rows,), tick=tick
+    )
     table1, (uniq, w_new) = lpt.sparse_apply(
         table,
         ids,
@@ -123,7 +130,7 @@ def alpt_step(
             occ = occ[..., :d_live]
         return loss_fn_step2(occ)
 
-    g_step = jax.grad(loss_wrt_step)(step_b)
+    g_step = fence.fence_call(jax.grad(loss_wrt_step), (step_b,), tick=tick)
     new_step_b = step_b - cfg.step_lr * (
         g_step + cfg.step_weight_decay * step_b
     )
@@ -140,7 +147,7 @@ def alpt_step(
         codes_rows = quant.quantize_codes(
             w_new, new_step_b, cfg.bits, cfg.rounding, noise
         )
-    codes = codestore.set_rows(table1.codes, uniq, codes_rows, mode="drop")
+    codes = rowstore.set_rows(table1.codes, uniq, codes_rows, mode="drop")
     step = table1.step.at[uniq].set(new_step_b, mode="drop")
     new_table = table1._replace(codes=codes, step=step)
     aux = {
@@ -229,7 +236,7 @@ def dense_finish(
             upd.w_new, new_step, cfg.bits, cfg.rounding, noise
         )
     mask = upd.touched[:, None]
-    codes = codestore.where_rows(table.codes, upd.touched, codes_new)
+    codes = rowstore.where_rows(table.codes, upd.touched, codes_new)
     if table.mu.ndim == 2:
         mu = jnp.where(mask, upd.mu_new, table.mu)
         nu = jnp.where(mask, upd.nu_new, table.nu)

@@ -49,11 +49,6 @@ __all__ = [
     "packed_width",
     "pack_codes",
     "unpack_codes",
-    "logical_codes",
-    "take_rows",
-    "set_rows",
-    "where_rows",
-    "resident_bytes_of",
 ]
 
 
@@ -250,44 +245,10 @@ class CodeStore:
         return self.with_data(jnp.where(mask, new_data, self.data))
 
 
-# ---------------------------------------------------------------------------
-# Either-type helpers: the core update paths accept a CodeStore *or* a raw
-# int8 array (hand-built tables in tests, float exports), so the call sites
-# route through these instead of touching `.at` / `jnp.take` directly.
-# ---------------------------------------------------------------------------
-
-
-def logical_codes(codes: "CodeStore | jax.Array") -> jax.Array:
-    """The unpacked int8 [n, d] view of either container type."""
-    return codes.unpack() if isinstance(codes, CodeStore) else codes
-
-
-def take_rows(codes: "CodeStore | jax.Array", ids: jax.Array) -> jax.Array:
-    if isinstance(codes, CodeStore):
-        return codes.take(ids)
-    return jnp.take(codes, ids, axis=0)
-
-
-def set_rows(codes: "CodeStore | jax.Array", rows_idx: jax.Array,
-             codes_rows: jax.Array, *, mode: str = "drop"):
-    if isinstance(codes, CodeStore):
-        return codes.set_rows(rows_idx, codes_rows, mode=mode)
-    return codes.at[rows_idx].set(codes_rows, mode=mode)
-
-
-def where_rows(codes: "CodeStore | jax.Array", row_mask: jax.Array,
-               codes_new: "CodeStore | jax.Array"):
-    if isinstance(codes, CodeStore):
-        return codes.where_rows(row_mask, codes_new)
-    mask = row_mask if row_mask.ndim == 2 else row_mask[:, None]
-    return jnp.where(mask, logical_codes(codes_new), codes)
-
-
-def resident_bytes_of(codes: "CodeStore | jax.Array") -> int:
-    """Container bytes of either representation (packed-aware)."""
-    if isinstance(codes, CodeStore):
-        return codes.resident_bytes
-    return int(math.prod(codes.shape) * np.dtype(codes.dtype).itemsize)
+# The either-type row-access helpers that used to live here (logical_codes /
+# take_rows / set_rows / where_rows / resident_bytes_of) are now the
+# :mod:`repro.storage.base` RowStore protocol surface — one dispatch boundary
+# shared by every container (CodeStore, TieredCodes, raw arrays).
 
 
 def _flatten_with_keys(s: CodeStore):

@@ -1,0 +1,59 @@
+"""Compilation fence: run a sub-computation in its own XLA loop body.
+
+The tiered-storage bitwise contract (``repro.storage``: cache-on training is
+bitwise-equal to cache-off) needs the model forward/backward to compile
+identically whatever embedding-storage graph surrounds it — plain codes, a
+packed container, or a hot-row-cache overlay.  XLA does not honor that by
+default: its fusion pass freely duplicates producers into consumers across
+``optimization_barrier`` (the barrier is expanded before late CPU fusion),
+and re-fusing an elementwise neighborhood into a dot's loop nest shifts the
+reduction's rounding by a ULP.  Two differently-shaped modules around one
+identical backward can therefore disagree in the last bit.
+
+The one boundary XLA never fuses across is a ``while`` body.  ``fence_call``
+runs ``f`` inside a trip-count-1 loop built so the compiler cannot dissolve
+it:
+
+* the trip count derives from a runtime scalar (``tick``), so the
+  trip-count-1 unroller cannot prove it is 1;
+* the arguments ride in the loop carry and are re-tied to ``tick`` with a
+  select inside the body, so neither the while-tuple simplifier nor
+  loop-invariant code motion can hoist the computation out.
+
+The body becomes a standalone HLO computation; identical bodies optimize
+identically, so equal inputs give bitwise-equal outputs across modules.
+Cost: one zero-initialized output buffer plus an elementwise select over the
+arguments per call — noise next to a training step's matmuls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fence_call"]
+
+
+def fence_call(f, args: tuple, tick):
+    """``f(*args)``, compiled as its own while-loop body.
+
+    ``tick`` must be a *traced* scalar that is non-negative at runtime (a
+    step counter, a feature id, ...).  A Python/concrete constant defeats
+    the fence — XLA folds the trip count and inlines the body — so pass
+    something that reaches the jitted computation as an input.  ``f`` must
+    be shape-stable and is evaluated exactly once.
+    """
+    out0 = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), jax.eval_shape(f, *args)
+    )
+    tick = jnp.asarray(tick).astype(jnp.int32).reshape(())
+    trip = jnp.where(tick >= 0, jnp.int32(1), jnp.int32(2))
+
+    def body(i, carry):
+        a, _ = carry
+        a = jax.tree_util.tree_map(
+            lambda x: jnp.where(tick >= 0, x, jnp.zeros_like(x)), a
+        )
+        return (a, f(*a))
+
+    _, out = jax.lax.fori_loop(0, trip, body, (args, out0))
+    return out

@@ -26,7 +26,9 @@ def qr_rows(n: int, compression: float = 2.0) -> tuple[int, int]:
     # r + n/r = target  ->  r^2 - target*r + n = 0
     disc = target * target - 4.0 * n
     if disc <= 0:
-        r = max(int(jnp.sqrt(n)), 2)
+        # Static (trace-time) computation — stay in Python math so callers
+        # inside jit don't see a tracer.
+        r = max(int(n ** 0.5), 2)
     else:
         r = int((target - disc**0.5) / 2.0)
         r = max(r, 2)

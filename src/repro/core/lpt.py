@@ -30,6 +30,8 @@ import jax.numpy as jnp
 
 from repro.core import codestore, quant
 from repro.kernels import ops
+from repro.storage import base as rowstore
+from repro.storage.tiered import TieredCodes
 
 
 class LPTTable(NamedTuple):
@@ -129,7 +131,7 @@ def lookup(
         rows = ops.dequant_gather(table.codes, table.step, flat)
         rows = rows.reshape(ids.shape + (table.dim,))
     else:
-        codes = codestore.take_rows(table.codes, ids)
+        codes = rowstore.take_rows(table.codes, ids)
         step = jnp.take(table.step, ids, axis=0)
         rows = quant.dequantize(codes, step)
     if out_dim is not None and out_dim != rows.shape[-1]:
@@ -139,7 +141,7 @@ def lookup(
 
 def dense_table(table: LPTTable) -> jax.Array:
     """Materialize the full de-quantized table (dense/pjit path)."""
-    return quant.dequantize(codestore.logical_codes(table.codes), table.step)
+    return quant.dequantize(rowstore.logical_codes(table.codes), table.step)
 
 
 # ---------------------------------------------------------------------------
@@ -250,7 +252,6 @@ def sparse_apply(
         flat_g = jnp.pad(flat_g, ((0, 0), (0, d - flat_g.shape[-1])))
     uniq, inv = dedup_ids(flat_ids, sentinel)
     k = uniq.shape[0]
-    # Sum gradients per unique row.
     g_sum = jnp.zeros((k, d), jnp.float32).at[inv].add(flat_g)
     count = table.count + 1
     t = count.astype(jnp.float32)
@@ -259,7 +260,13 @@ def sparse_apply(
     if use_kernels:
         # Eligibility gate for the fused kernel; an ineligible kernels-on
         # dispatch is a counted fallback, never a silent one.
-        if rounding != "sr":
+        if isinstance(table.codes, TieredCodes):
+            # The fused kernel's aliased scatter writes the backing container
+            # directly; cached rows must route through the hot tier instead.
+            ops.note_fallback(
+                "sparse_row_update", (n, d), "tiered hot-row cache"
+            )
+        elif rounding != "sr":
             ops.note_fallback("sparse_row_update", (n, d), "dr rounding")
         elif optimizer != "adam":
             ops.note_fallback(
@@ -297,7 +304,7 @@ def sparse_apply(
     # its scatter is dropped).
     safe = jnp.minimum(uniq, n - 1)
     w = quant.dequantize(
-        codestore.take_rows(table.codes, safe), jnp.take(table.step, safe)
+        rowstore.take_rows(table.codes, safe), jnp.take(table.step, safe)
     )
     # Slot layout is optimizer-dependent ([k, d] adam / [k] otherwise) but the
     # gather is row-indexed either way.
@@ -314,7 +321,7 @@ def sparse_apply(
     else:
         noise = None
     new_codes_rows = quant.quantize_codes(w_new, step_rows, bits, rounding, noise)
-    codes = codestore.set_rows(table.codes, uniq, new_codes_rows, mode="drop")
+    codes = rowstore.set_rows(table.codes, uniq, new_codes_rows, mode="drop")
     step = table.step.at[uniq].set(step_rows, mode="drop")
     mu_t = table.mu.at[uniq].set(mu_new, mode="drop")
     nu_t = table.nu.at[uniq].set(nu_new, mode="drop")
@@ -354,9 +361,17 @@ def dense_apply(
     count = table.count + 1
     t = count.astype(jnp.float32)
     step = table.step if new_step is None else new_step
+    kernel_ok = use_kernels and rounding == "sr"
     if use_kernels and rounding != "sr":
         ops.note_fallback("lpt_update", table.codes.shape, "dr rounding")
-    if use_kernels and rounding == "sr":
+    if kernel_ok and isinstance(table.codes, TieredCodes):
+        # The fused write-back targets the backing container; cached rows
+        # must take their new codes through the hot tier's where-merge.
+        ops.note_fallback(
+            "lpt_update", table.codes.shape, "tiered hot-row cache"
+        )
+        kernel_ok = False
+    if kernel_ok:
         if noise_key is None:
             raise ValueError("SR requires noise_key")
         upd, mu_new, nu_new = _opt_direction(
@@ -381,7 +396,7 @@ def dense_apply(
             noise = None
         codes_new = quant.quantize_codes(w_new, step, bits, rounding, noise)
     mask = touched[:, None]
-    codes = codestore.where_rows(table.codes, touched, codes_new)
+    codes = rowstore.where_rows(table.codes, touched, codes_new)
     if table.mu.ndim == 2:
         mu = jnp.where(mask, mu_new, table.mu)
         nu = jnp.where(mask, nu_new, table.nu)
@@ -401,7 +416,7 @@ def memory_bytes(table: LPTTable, bits: int, count_optimizer: bool = False) -> i
     bits/8 that an int8-per-code layout never achieved.
     """
     n, _ = table.codes.shape
-    code_bytes = codestore.resident_bytes_of(table.codes)
+    code_bytes = rowstore.resident_bytes_of(table.codes)
     step_bytes = n * 4
     total = code_bytes + step_bytes
     if count_optimizer:

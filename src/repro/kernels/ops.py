@@ -33,9 +33,12 @@ import functools
 import logging
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.codestore import CodeStore
 from repro.kernels import ref
+from repro.storage import base as rowstore
+from repro.storage.tiered import TieredCodes
 from repro.kernels.dequant_gather import dequant_gather as _dequant_gather
 from repro.kernels.dequant_gather import (
     dequant_gather_packed as _dequant_gather_packed,
@@ -359,8 +362,32 @@ def dequant_gather(codes, step, ids, *, use_kernel: bool = True):
 
     ``codes`` may be a raw int8 array or a :class:`CodeStore`; a packed store
     dispatches to the packed-container kernel (packed bytes move HBM->VMEM,
-    the unpack happens in VMEM) — bitwise equal to the unpacked path.
+    the unpack happens in VMEM) — bitwise equal to the unpacked path.  A
+    :class:`~repro.storage.tiered.TieredCodes` routes: the backing gather
+    keeps its kernel path, and cached rows overlay through the identical
+    de-quantize formula (``codes[id] * step[id]``), so the where-merge is
+    bitwise-equal to an uncached gather of the same logical table.
+
+    The gather itself is bitwise-stable across storages; consumers that need
+    the *surrounding* model computation to compile identically (the cache-on
+    == cache-off training contract) fence it with
+    :func:`repro.core.fence.fence_call` — an ``optimization_barrier`` here is
+    not enough, XLA:CPU fuses across barriers late in its pipeline.
     """
+    return _dequant_gather_impl(codes, step, ids, use_kernel=use_kernel)
+
+
+def _dequant_gather_impl(codes, step, ids, *, use_kernel: bool = True):
+    if isinstance(codes, TieredCodes):
+        base = _dequant_gather_impl(
+            codes.backing, step, ids, use_kernel=use_kernel
+        )
+        slot = codes.slots_for(ids)
+        hot_codes = rowstore.take_rows(
+            codes.hot, jnp.clip(slot, 0, codes.capacity - 1)
+        )
+        hot = hot_codes.astype(jnp.float32) * jnp.take(step, ids)[:, None]
+        return jnp.where((slot >= 0)[:, None], hot, base)
     if isinstance(codes, CodeStore) and codes.packed:
         n, d = codes.shape
         if not use_kernel:

@@ -45,25 +45,41 @@ CTR_DEMO_DATA = CTRDatasetConfig(
 # benchmarks/serve_bench.py).
 CTR_DEMO_DIM = 64
 
+# Skewed-traffic fixture for the tiered-storage cells: Zipf(1.1) request ids
+# over a 4092-row vocabulary, so a hot tier holding ~10% of the rows catches
+# >=90% of lookups (asserted in benchmarks/serve_bench.py).
+CTR_ZIPF_DATA = CTRDatasetConfig(
+    name="serve-zipf", n_fields=8,
+    cardinalities=(4, 8, 12, 24, 48, 96, 1400, 2500),
+    teacher_rank=4, zipf_a=1.1, seed=0,
+)
+
 
 def build_ctr_demo_engine(method: str, *, bits: int = 8, batch: int,
-                          train_steps: int, train_batch: int = 256):
+                          train_steps: int, train_batch: int = 256,
+                          data_cfg: CTRDatasetConfig = CTR_DEMO_DATA,
+                          cache_rows: int = 0, cold_tier: bool = False,
+                          device_budget_bytes: int | None = None):
     """Train a few steps on the demo fixture, return ``(engine, data)``."""
-    data = CTRSynthetic(CTR_DEMO_DATA)
+    data = CTRSynthetic(data_cfg)
     spec = methods.EmbeddingSpec(
-        method=method, n=CTR_DEMO_DATA.n_features, d=CTR_DEMO_DIM, bits=bits,
+        method=method, n=data_cfg.n_features, d=CTR_DEMO_DIM, bits=bits,
         init_scale=0.05,
     )
     trainer = CTRTrainer(TrainerConfig(
         spec=spec, model="dcn",
-        dcn=DCNConfig(n_fields=CTR_DEMO_DATA.n_fields, emb_dim=CTR_DEMO_DIM,
+        dcn=DCNConfig(n_fields=data_cfg.n_fields, emb_dim=CTR_DEMO_DIM,
                       cross_depth=2, mlp_widths=(64, 32)),
     ))
     state = trainer.init_state()
     for i in range(train_steps):
         ids, labels = data.batch("train", i, train_batch)
         state, _ = trainer.train_step(state, ids, labels)
-    return CTREngine.from_state(state, trainer.cfg, batch=batch), data
+    engine = CTREngine.from_state(
+        state, trainer.cfg, batch=batch, cache_rows=cache_rows,
+        cold_tier=cold_tier, device_budget_bytes=device_budget_bytes,
+    )
+    return engine, data
 
 
 def _print_report(engine) -> None:
@@ -79,6 +95,15 @@ def _print_report(engine) -> None:
         f"(codes {m['embedding_code_bytes']} + scales "
         f"{m['embedding_scale_bytes']}; int8_resident={m['int8_resident']})"
     )
+    for c in m.caches:
+        print(
+            f"[serve] {c.tier} tier '{c.name}': {c.rows_cached}/{c.capacity} "
+            f"rows, hit rate {c.hit_rate:.3f} ({c.hits} hits / {c.misses} "
+            f"misses), {c.hot_bytes + c.metadata_bytes} device bytes "
+            f"(rows {c.hot_bytes} + metadata {c.metadata_bytes})"
+        )
+    if m.caches:
+        print(f"[serve] aggregate cache hit rate {m.cache_hit_rate:.3f}")
     report = engine.fallback_report()
     for fb in report["fallbacks"]:
         print(f"[serve] kernel fallback: {fb['op']} {fb['shape']} "
@@ -116,6 +141,9 @@ def _run_ctr(args) -> int:
     engine, data = build_ctr_demo_engine(
         args.method, bits=args.bits, batch=args.batch,
         train_steps=args.train_steps,
+        data_cfg=CTR_ZIPF_DATA if args.zipf else CTR_DEMO_DATA,
+        cache_rows=args.cache_rows, cold_tier=args.cold_tier,
+        device_budget_bytes=args.device_budget_bytes,
     )
     ids, _ = data.batch("test", 0, args.requests)
     rids = [engine.submit(CTRRequest(ids=row)) for row in ids]
@@ -144,6 +172,16 @@ def main(argv=None) -> int:
     ctr.add_argument("--batch", type=int, default=32)
     ctr.add_argument("--requests", type=int, default=64)
     ctr.add_argument("--train-steps", type=int, default=5)
+    ctr.add_argument("--zipf", action="store_true",
+                     help="use the Zipf(1.1) skewed-traffic fixture")
+    ctr.add_argument("--cache-rows", type=int, default=0,
+                     help="device hot-row cache capacity per storage slot "
+                          "(0 = off); bitwise-equal to uncached serving")
+    ctr.add_argument("--cold-tier", action="store_true",
+                     help="host-resident codes; device holds scales + hot "
+                          "rows only (requires --cache-rows > 0)")
+    ctr.add_argument("--device-budget-bytes", type=int, default=None,
+                     help="assert hot-tier device bytes stay under this")
 
     args = ap.parse_args(argv)
     return _run_lm(args) if args.scenario == "lm" else _run_ctr(args)

@@ -78,9 +78,58 @@ class StragglerWatchdog:
         return slow
 
 
+def _run_ctr(args) -> int:
+    """CTR training loop (sparse integer-table path) with optional tiered
+    storage: ``--cache-rows`` wraps every cacheable storage slot in a device
+    hot-row cache with dirty-row write-back — training metrics are
+    bitwise-identical to the uncached run (tests/test_storage.py).
+
+    The LM path below stays cache-free on purpose: its dense update touches
+    every table row each step, so a hot-row cache would be permanently dirty.
+    """
+    from repro.launch.serve import CTR_DEMO_DATA, CTR_ZIPF_DATA
+    from repro.data.ctr_synth import CTRSynthetic
+    from repro.models.ctr import DCNConfig
+    from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+
+    data_cfg = CTR_ZIPF_DATA if args.zipf else CTR_DEMO_DATA
+    data = CTRSynthetic(data_cfg)
+    spec = methods.EmbeddingSpec(
+        method=args.embedding_method or "alpt", n=data_cfg.n_features, d=32,
+        bits=8, init_scale=0.05, use_kernels=not args.no_kernels,
+    )
+    trainer = CTRTrainer(TrainerConfig(
+        spec=spec, model="dcn", lr=args.lr,
+        dcn=DCNConfig(n_fields=data_cfg.n_fields, emb_dim=32,
+                      cross_depth=2, mlp_widths=(64, 32)),
+        cache_rows=args.cache_rows,
+    ))
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    losses = []
+    for step in range(args.steps):
+        ids, labels = data.batch("train", step, args.batch)
+        state, metrics = trainer.train_step(state, ids, labels)
+        losses.append(float(metrics["loss"]))
+        if (step + 1) % args.log_every == 0:
+            print(f"[train] ctr step {step+1} loss {losses[-1]:.4f}")
+    summary = {
+        "first_loss": losses[0] if losses else None,
+        "final_loss": losses[-1] if losses else None,
+        "steps": len(losses),
+    }
+    for stats in trainer.cache_stats():
+        print(f"[train] hot tier '{stats['name']}': hit rate "
+              f"{stats['hit_rate']:.3f}, {stats['evictions']} evictions, "
+              f"{stats['writebacks']} write-backs")
+    print("[train] done:", json.dumps(summary))
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(configs.ARCHS), required=True)
+    ap.add_argument("--arch", choices=sorted(configs.ARCHS) + ["ctr"],
+                    required=True,
+                    help="an LM arch, or 'ctr' for the sparse CTR trainer")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-runnable)")
     ap.add_argument("--steps", type=int, default=100)
@@ -112,7 +161,23 @@ def main(argv=None) -> int:
         help="pad the vocab table to kernel-tile geometry so the fused paths "
         "run without shape fallbacks (EmbeddingSpec.pad_to_tiles)",
     )
+    ap.add_argument(
+        "--cache-rows", type=int, default=0,
+        help="--arch ctr only: device hot-row cache capacity per storage "
+        "slot (repro.storage); bitwise-equal to uncached training",
+    )
+    ap.add_argument(
+        "--zipf", action="store_true",
+        help="--arch ctr only: use the Zipf(1.1) skewed-traffic fixture",
+    )
     args = ap.parse_args(argv)
+
+    if args.arch == "ctr":
+        return _run_ctr(args)
+    if args.cache_rows:
+        ap.error("--cache-rows is the sparse CTR trainer's tiered-storage "
+                 "knob (--arch ctr); the LM dense update rewrites every row "
+                 "each step, so a hot-row cache cannot stay coherent there")
 
     cfg = configs.smoke_config(args.arch) if args.smoke else configs.full_config(args.arch)
     if args.embedding_method:

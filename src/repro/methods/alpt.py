@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import alpt as alpt_core
+from repro.core import fence
 from repro.methods.base import register
 from repro.methods.lpt import LPTMethod, _pad_grads
 
@@ -42,9 +43,14 @@ class ALPTMethod(LPTMethod):
         rows0 = self.lookup(state, ids, spec)
 
         # Dense update (Algorithm 1 line 3) shares step 1's backward.
-        loss, g_dense = jax.value_and_grad(
-            lambda dp: loss_from_rows(rows0, dp)
-        )(dense_params)
+        # Fenced (see repro.core.fence): g_dense feeds the persistent dense
+        # params, so this backward too must compile independently of the
+        # storage graph around it.
+        loss, g_dense = fence.fence_call(
+            jax.value_and_grad(lambda dp: loss_from_rows(rows0, dp)),
+            (dense_params,),
+            tick=ids.reshape(-1)[0],
+        )
         new_dense, new_opt = update_dense(g_dense, dense_opt, dense_params)
         new_state, loss2, aux = alpt_core.alpt_step(
             state,

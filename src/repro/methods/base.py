@@ -39,14 +39,17 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import alpt as alpt_core
+from repro.core import fence
 from repro.core import pruning as pruning_core
 from repro.dist.context import hint
 from repro.kernels import ops as kernel_ops
 from repro.optim import adam_update
 from repro.serving import table as serving_tbl
+from repro.storage import base as rowstore
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -160,8 +163,9 @@ class EmbeddingMethod(abc.ABC):
         """Embedding-memory accounting (paper Table 1 compression columns).
 
         Storage-actual: integer-table methods report their container's
-        resident bytes (``codestore.resident_bytes_of`` — packed sub-byte
-        widths count ceil(d*bits/8) per row, not one byte per code)."""
+        resident bytes (``repro.storage.base.resident_bytes_of`` — packed
+        sub-byte widths count ceil(d*bits/8) per row, not one byte per
+        code)."""
 
     # ------------------------------------------------- float-leaf formulation
 
@@ -275,6 +279,18 @@ class EmbeddingMethod(abc.ABC):
         serving residency is inference state only.
         """
         return serving_tbl.FloatTable(self.serving_table(state, spec))
+
+    def storage_spec(self, spec: EmbeddingSpec) -> tuple:
+        """Cacheable sub-tables of the training state (the tiered hot-row
+        cache hook, :mod:`repro.storage`).
+
+        Returns a tuple of :class:`repro.storage.base.CacheSlot`, one per
+        int-code table inside the state: ``get``/``put`` project the slot's
+        ``LPTTable`` out of / back into the state, ``local_ids`` maps global
+        feature ids to the slot's local row space (non-members -> -1).
+        Float-leaf methods have nothing to cache -> ``()``.
+        """
+        return ()
 
     # -------------------------------------------------- sharding / metadata
 
@@ -392,11 +408,27 @@ class IntegerTableMethod(EmbeddingMethod):
             use_kernels=spec.use_kernels,
         )
 
+    def storage_spec(self, spec):
+        """Single-table identity slot — works for any state that *is* one
+        ``LPTTable`` (lpt, alpt).  Composed methods override."""
+        return (rowstore.CacheSlot(
+            name="table", rows=spec.n,
+            get=lambda s: s,
+            put=lambda s, t: t,
+            local_ids=lambda ids: np.asarray(ids),
+        ),)
+
     def fused_row_step(self, state, ids, *, spec, loss_from_rows, dense_params,
                        dense_opt, update_dense, lr, weight_decay, noise_key):
         rows0 = self.lookup(state, ids, spec)
-        loss, (g_rows, g_dense) = jax.value_and_grad(loss_from_rows, (0, 1))(
-            rows0, dense_params
+        # Fence the model forward/backward so it compiles identically whatever
+        # storage backs the codes (plain, packed, tiered) — the cache-on ==
+        # cache-off bitwise contract.  Feature ids are non-negative, so any
+        # id doubles as the fence's runtime tick.
+        loss, (g_rows, g_dense) = fence.fence_call(
+            jax.value_and_grad(loss_from_rows, (0, 1)),
+            (rows0, dense_params),
+            tick=ids.reshape(-1)[0],
         )
         new_dense, new_opt = update_dense(g_dense, dense_opt, dense_params)
         new_state = self.sparse_apply(

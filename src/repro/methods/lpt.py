@@ -17,9 +17,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import codestore
 from repro.core import lpt as lpt_core
 from repro.methods.base import IntegerTableMethod, register
+from repro.storage import base as rowstore
 
 
 def _pad_grads(grads, state, spec):
@@ -61,7 +61,7 @@ class LPTMethod(IntegerTableMethod):
         # Storage-actual: the container's resident bytes (packed sub-byte
         # widths really are ceil(d*bits/8) per row) + the per-row fp32 Delta.
         return (
-            codestore.resident_bytes_of(state.codes) + spec.n_padded * 4
+            rowstore.resident_bytes_of(state.codes) + spec.n_padded * 4
         )
 
     def sparse_apply(self, state, ids, g_rows, *, spec, lr, weight_decay,

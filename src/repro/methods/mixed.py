@@ -30,13 +30,14 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import codestore
 from repro.core import lpt as lpt_core
 from repro.kernels import ops as kernel_ops
 from repro.methods.base import IntegerTableMethod, register
 from repro.serving import table as serving_tbl
+from repro.storage import base as rowstore
 
 
 class MixedTable(NamedTuple):
@@ -192,7 +193,7 @@ class MixedMethod(IntegerTableMethod):
         # Storage-actual per group: the packed containers of the sub-byte
         # groups really hold ceil(d*bits/8) bytes per row.
         return sum(
-            codestore.resident_bytes_of(sub.codes) + sub.n_rows * 4
+            rowstore.resident_bytes_of(sub.codes) + sub.n_rows * 4
             for sub in state.subs
         )
 
@@ -272,6 +273,40 @@ class MixedMethod(IntegerTableMethod):
             field_group=plan.field_group,
             field_local=plan.field_local,
             n=spec.n, d=spec.d,
+        )
+
+    def storage_spec(self, spec):
+        """One slot per bit-width group; global ids resolve to a group's
+        local row space through the same static field maps the lookups use
+        (non-member ids -> -1, ignored by the cache policy)."""
+        plan = plan_of(spec)
+        starts = np.asarray(plan.field_offsets, np.int64)
+        group = np.asarray(plan.field_group, np.int64)
+        local = np.asarray(plan.field_local, np.int64)
+
+        def make_local(g):
+            def f(ids):
+                ids = np.asarray(ids, np.int64)
+                fid = np.searchsorted(starts, ids, side="right") - 1
+                loc = ids - starts[fid] + local[fid]
+                return np.where(group[fid] == g, loc, -1)
+
+            return f
+
+        def make_put(g):
+            def put(s, t):
+                return MixedTable(subs=s.subs[:g] + (t,) + s.subs[g + 1:])
+
+            return put
+
+        return tuple(
+            rowstore.CacheSlot(
+                name=f"group{g}", rows=plan.group_rows[g],
+                get=(lambda g: lambda s: s.subs[g])(g),
+                put=make_put(g),
+                local_ids=make_local(g),
+            )
+            for g in range(len(plan.group_bits))
         )
 
     def table_pspec(self, row, col, *, row_optimizer="adam"):

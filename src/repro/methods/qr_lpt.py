@@ -21,15 +21,18 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import alpt as alpt_core
-from repro.core import codestore, hashing
+from repro.core import fence
+from repro.core import hashing
 from repro.core import lpt as lpt_core
 from repro.core import quant
 from repro.kernels import ops as kernel_ops
 from repro.methods.base import IntegerTableMethod, _round_up, register
 from repro.serving import table as serving_tbl
+from repro.storage import base as rowstore
 
 
 class QRLPTTable(NamedTuple):
@@ -86,8 +89,8 @@ class QRLPTMethod(IntegerTableMethod):
         # ceil(d*bits/8) bytes per row; the per-row fp32 Delta rides along.
         rows = state.remainder.n_rows + state.quotient.n_rows
         return (
-            codestore.resident_bytes_of(state.remainder.codes)
-            + codestore.resident_bytes_of(state.quotient.codes)
+            rowstore.resident_bytes_of(state.remainder.codes)
+            + rowstore.resident_bytes_of(state.quotient.codes)
             + rows * 4
         )
 
@@ -159,6 +162,26 @@ class QRLPTMethod(IntegerTableMethod):
         )
         return QRLPTTable(remainder=new_rem, quotient=new_quo, r=state.r), None, {}
 
+    def storage_spec(self, spec):
+        """Two slots — each QR sub-table caches independently; global ids
+        map into a sub-table via the same ``% r`` / ``// r`` arithmetic the
+        lookups use."""
+        r, q_rows = hashing.qr_rows(spec.n, spec.hash_compression)
+        return (
+            rowstore.CacheSlot(
+                name="remainder", rows=r,
+                get=lambda s: s.remainder,
+                put=lambda s, t: s._replace(remainder=t),
+                local_ids=lambda ids: np.asarray(ids) % r,
+            ),
+            rowstore.CacheSlot(
+                name="quotient", rows=q_rows,
+                get=lambda s: s.quotient,
+                put=lambda s, t: s._replace(quotient=t),
+                local_ids=lambda ids: np.asarray(ids) // r,
+            ),
+        )
+
     def table_pspec(self, row, col, *, row_optimizer="adam"):
         # Sub-table row counts rarely divide the mesh axes; stay replicated.
         sub = lpt_core.LPTTable(codes=P(), step=P(), mu=P(), nu=P(), count=P())
@@ -226,7 +249,7 @@ class QRALPTMethod(QRLPTMethod):
                 w_new, new_step_b, cfg.bits, cfg.rounding, noise
             )
         return table._replace(
-            codes=codestore.set_rows(table.codes, uniq, codes_rows, mode="drop"),
+            codes=rowstore.set_rows(table.codes, uniq, codes_rows, mode="drop"),
             step=table.step.at[uniq].set(new_step_b, mode="drop"),
         )
 
@@ -245,8 +268,13 @@ class QRALPTMethod(QRLPTMethod):
         # Step 1 (weights): one joint backward, product-rule row cotangents,
         # each sub-table's sparse update keeps its updated float rows around
         # for the Delta sub-step.
-        loss, (g_rows, g_dense) = jax.value_and_grad(loss_from_rows, (0, 1))(
-            rem * quo, dense_params
+        # Fenced (see repro.core.fence): the joint backward must compile the
+        # same whatever storage backs the two sub-tables.
+        tick = ids.reshape(-1)[0]
+        loss, (g_rows, g_dense) = fence.fence_call(
+            jax.value_and_grad(loss_from_rows, (0, 1)),
+            (rem * quo, dense_params),
+            tick=tick,
         )
         new_dense, new_opt = update_dense(g_dense, dense_opt, dense_params)
         k_rem = jax.random.fold_in(noise_key, 0)
@@ -294,7 +322,9 @@ class QRALPTMethod(QRLPTMethod):
                 occ = occ[..., : spec.d]
             return loss_from_rows(occ, new_dense)
 
-        g_sr, g_sq = jax.grad(loss_wrt_steps)((step_r, step_q))
+        g_sr, g_sq = fence.fence_call(
+            jax.grad(loss_wrt_steps), ((step_r, step_q),), tick=tick
+        )
         new_rem = self._delta_writeback(
             rem1, uniq_r, w_new_r, step_r, g_sr, cfg=cfg, noise_key=k_rem
         )

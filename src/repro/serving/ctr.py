@@ -13,10 +13,24 @@ embedding bytes are the code bytes + scale vectors, nothing else.  Scores are
 per-row independent, so a request's (logit, prob) is bitwise identical
 whatever batch it lands in (the CTR determinism contract, tested in
 tests/test_serve.py).
+
+Tiered storage (``repro.storage``):
+
+* ``cache_rows > 0`` composes a device hot-row cache over every cacheable
+  sub-table (``serving_tbl.cache_slots``); per wave the policy observes the
+  *real* requests' ids and applies admissions before scoring.  Cache-on is
+  bitwise-equal to cache-off (serving is read-only, so the hot tier always
+  mirrors the backing).
+* ``cold_tier=True`` moves the code container to host memory entirely
+  (:class:`repro.storage.cold.ColdStore`): the device holds the scale
+  vector plus ``cache_rows`` hot rows, per-wave misses ride one
+  ``device_put``, and the next wave's host gather is staged ahead (one-deep
+  prefetch).  Serves tables larger than ``device_budget_bytes``.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +39,9 @@ import numpy as np
 from repro import methods
 from repro.models import ctr as ctr_models
 from repro.serving import table as serving_tbl
-from repro.serving.engine import Engine
+from repro.serving.engine import CacheMetrics, Engine
+from repro.storage.cold import ColdStore
+from repro.storage.tiered import HotRowCache
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,13 +55,78 @@ class CTREngine(Engine):
 
     def __init__(self, dense_params, serving_table,
                  model_cfg, spec: methods.EmbeddingSpec, *, batch: int,
-                 model: str = "dcn"):
+                 model: str = "dcn", cache_rows: int = 0,
+                 cold_tier: bool = False,
+                 device_budget_bytes: int | None = None):
         super().__init__(serving_table=serving_table, spec=spec)
         self.dense_params = dense_params
         self.model_cfg = model_cfg
         self.model = model
         self.batch = batch
         self.n_fields = model_cfg.n_fields
+        self.cache_budget_bytes = device_budget_bytes
+        self._caches: list = []  # [(CacheSlot, HotRowCache)]
+        self._cold: ColdStore | None = None
+
+        if cold_tier:
+            if not isinstance(serving_table, serving_tbl.QuantTable):
+                raise ValueError(
+                    "cold_tier serves a plain QuantTable (single code "
+                    f"container); got {type(serving_table).__name__}"
+                )
+            self._cold = ColdStore(
+                serving_table.codes, serving_table.step,
+                cache_rows=max(1, cache_rows),
+            )
+            self.prefetch_depth = 1
+            d_live = serving_table.d
+            n_fields = self.n_fields
+
+            def score_cold(dense, rows_flat):
+                rows = rows_flat[:, :d_live].reshape(batch, n_fields, d_live)
+                rows = jax.lax.optimization_barrier(rows)
+                logits = ctr_models.logits_from_rows(
+                    dense, rows, model_cfg, model=model
+                )
+                return logits, jax.nn.sigmoid(logits)
+
+            self._score_cold = jax.jit(score_cold)
+            # The device never holds the code container in cold mode — the
+            # ColdStore copied it to host memory above.
+            self.table = None
+            if device_budget_bytes is not None:
+                if self._cold.device_bytes > device_budget_bytes:
+                    raise ValueError(
+                        f"cold-tier device bytes {self._cold.device_bytes} "
+                        f"exceed budget {device_budget_bytes}"
+                    )
+            return
+
+        if cache_rows > 0:
+            table = self.table
+            for slot in serving_tbl.cache_slots(table):
+                sub = slot.get(table)
+                cap = max(1, min(int(cache_rows), slot.rows))
+                cache = HotRowCache(
+                    cap, int(sub.codes.shape[0]), name=slot.name
+                )
+                tiered = cache.wrap(sub.codes)
+                table = slot.put(
+                    table, dataclasses.replace(sub, codes=tiered)
+                )
+                self._caches.append((slot, cache))
+            self.table = table
+            if device_budget_bytes is not None:
+                hot = sum(
+                    slot.get(self.table).codes.hot_bytes
+                    + slot.get(self.table).codes.metadata_bytes
+                    for slot, _ in self._caches
+                )
+                if hot > device_budget_bytes:
+                    raise ValueError(
+                        f"hot-tier bytes {hot} exceed cache budget "
+                        f"{device_budget_bytes}"
+                    )
 
         def score(table, dense, ids):
             rows = serving_tbl.rows(table, ids)
@@ -64,16 +145,22 @@ class CTREngine(Engine):
     # ------------------------------------------------------------ build
 
     @classmethod
-    def from_state(cls, state, cfg, *, batch: int) -> "CTREngine":
+    def from_state(cls, state, cfg, *, batch: int, cache_rows: int = 0,
+                   cold_tier: bool = False,
+                   device_budget_bytes: int | None = None) -> "CTREngine":
         """Build from a ``ctr_trainer.TrainState`` + its ``TrainerConfig``."""
         model_cfg = cfg.dcn if cfg.model == "dcn" else cfg.deepfm
         table = cls.build_serving_state(state.emb_state, cfg.spec)
         return cls(state.dense_params, table, model_cfg, cfg.spec,
-                   batch=batch, model=cfg.model)
+                   batch=batch, model=cfg.model, cache_rows=cache_rows,
+                   cold_tier=cold_tier,
+                   device_budget_bytes=device_budget_bytes)
 
     @classmethod
     def from_checkpoint(cls, directory, cfg, dense_template, *,
-                        batch: int, step: int | None = None) -> "CTREngine":
+                        batch: int, step: int | None = None,
+                        cache_rows: int = 0, cold_tier: bool = False,
+                        device_budget_bytes: int | None = None) -> "CTREngine":
         """Restore dense params + the serving-resident table from a serving
         checkpoint (int8 codes restore as int8, straight into residency)."""
         from repro.checkpoint import manager
@@ -83,7 +170,107 @@ class CTREngine(Engine):
         )
         model_cfg = cfg.dcn if cfg.model == "dcn" else cfg.deepfm
         return cls(dense, table, model_cfg, cfg.spec, batch=batch,
-                   model=cfg.model)
+                   model=cfg.model, cache_rows=cache_rows,
+                   cold_tier=cold_tier,
+                   device_budget_bytes=device_budget_bytes)
+
+    # ------------------------------------------------------------ cache
+
+    def warm_start(self, freqs) -> None:
+        """Pre-admit the hottest rows from global id frequency counts (e.g.
+        training-time statistics shipped alongside a serving checkpoint)."""
+        freqs = np.asarray(freqs, np.int64).reshape(-1)
+        if self._cold is not None:
+            self._cold.warm_start(freqs)
+            return
+        ids = np.arange(freqs.size)
+        for slot, cache in self._caches:
+            local = np.asarray(slot.local_ids(ids), np.int64)
+            ok = (local >= 0) & (local < cache.n_alloc)
+            lf = np.zeros(cache.n_alloc, np.int64)
+            np.add.at(lf, local[ok], freqs[ok])
+            sub = slot.get(self.table)
+            tiered = cache.warm_start(sub.codes, lf)
+            self.table = slot.put(
+                self.table, dataclasses.replace(sub, codes=tiered)
+            )
+
+    def _maintain_caches(self, real_ids: np.ndarray) -> None:
+        """Run each slot's policy over the wave's *real* ids (padding repeats
+        request 0 and would inflate hit counts) and apply admissions."""
+        flat = real_ids.reshape(-1)
+        for slot, cache in self._caches:
+            moves = cache.observe(slot.local_ids(flat))
+            if moves is None:
+                continue
+            sub = slot.get(self.table)
+            tiered = cache.apply(sub.codes, moves)
+            self.table = slot.put(
+                self.table, dataclasses.replace(sub, codes=tiered)
+            )
+
+    def cache_metrics(self) -> tuple[CacheMetrics, ...]:
+        if self._cold is not None:
+            c = self._cold.cache
+            return (CacheMetrics(
+                tier="cold", name=c.name, capacity=c.capacity,
+                rows_cached=c.rows_cached, hits=c.hits, misses=c.misses,
+                evictions=c.evictions, writebacks=c.writebacks,
+                hit_rate=c.hit_rate,
+                hot_bytes=self._cold.hot_device_bytes,
+                metadata_bytes=c.host_metadata_bytes,
+            ),)
+        out = []
+        for slot, cache in self._caches:
+            tiered = slot.get(self.table).codes
+            out.append(CacheMetrics(
+                tier="hot", name=cache.name, capacity=cache.capacity,
+                rows_cached=cache.rows_cached, hits=cache.hits,
+                misses=cache.misses, evictions=cache.evictions,
+                writebacks=cache.writebacks, hit_rate=cache.hit_rate,
+                hot_bytes=tiered.hot_bytes,
+                metadata_bytes=tiered.metadata_bytes
+                + cache.host_metadata_bytes,
+            ))
+        return tuple(out)
+
+    def _reset_cache_counters(self) -> None:
+        if self._cold is not None:
+            self._cold.reset_counters()
+        for _, cache in self._caches:
+            cache.reset_counters()
+
+    # ------------------------------------------------------------ metrics
+
+    @property
+    def resident_embedding_bytes(self) -> int:
+        if self._cold is not None:
+            return self._cold.device_bytes
+        return super().resident_embedding_bytes
+
+    @property
+    def embedding_code_bytes(self) -> int:
+        if self._cold is not None:
+            return self._cold.hot_device_bytes
+        return super().embedding_code_bytes
+
+    @property
+    def embedding_scale_bytes(self) -> int:
+        if self._cold is not None:
+            step = self._cold.step
+            return int(step.size) * step.dtype.itemsize
+        return super().embedding_scale_bytes
+
+    @property
+    def int8_resident(self) -> bool:
+        if self._cold is not None:
+            return True
+        return super().int8_resident
+
+    @property
+    def cold_host_bytes(self) -> int:
+        """Host bytes of the cold tier's code container (0 when warm)."""
+        return self._cold.host_bytes if self._cold is not None else 0
 
     # ------------------------------------------------------------ scheduler
 
@@ -95,19 +282,33 @@ class CTREngine(Engine):
             )
         return super().submit(request)
 
+    def _padded_wave_ids(self, reqs) -> np.ndarray:
+        ids = np.zeros((self.batch, self.n_fields), np.int32)
+        for i, req in enumerate(reqs):
+            ids[i] = req.ids
+        # Pad rows repeat request 0 (always in range); outputs discarded.
+        ids[len(reqs):] = ids[0]
+        return ids
+
     def _advance(self) -> None:
         wave = [
             self._queue.popleft()
             for _ in range(min(self.batch, len(self._queue)))
         ]
-        ids = np.zeros((self.batch, self.n_fields), np.int32)
-        for i, req in enumerate(wave):
-            ids[i] = req.ids
-        # Pad rows repeat request 0 (always in range); outputs discarded.
-        ids[len(wave):] = ids[0]
-        logits, probs = self._score(
-            self.table, self.dense_params, jnp.asarray(ids)
-        )
+        ids = self._padded_wave_ids(wave)
+        if self._cold is not None:
+            self._cold.admit(ids[: len(wave)].reshape(-1))
+            rows_flat = self._cold.rows(ids.reshape(-1))
+            logits, probs = self._score_cold(self.dense_params, rows_flat)
+            # Stage the next wave's host gather while this wave finishes.
+            nxt = list(itertools.islice(self._queue, self.batch))
+            if nxt:
+                self._cold.stage(self._padded_wave_ids(nxt).reshape(-1))
+        else:
+            self._maintain_caches(ids[: len(wave)])
+            logits, probs = self._score(
+                self.table, self.dense_params, jnp.asarray(ids)
+            )
         logits = np.asarray(logits)
         probs = np.asarray(probs)
         for i, req in enumerate(wave):

@@ -10,12 +10,13 @@ An Engine owns
 * the **request lifecycle** — ``submit`` enqueues, ``step`` advances the
   scenario's scheduler by one unit of work, ``poll`` returns a finished
   request's result, ``run`` drains everything;
-* the **metrics surface** — request/step/token counters, wall-clock split by
-  phase, the resident-bytes accounting, and an accurate per-engine kernel
-  fallback report (``ops.fallback_scope`` wraps every jitted call site, so
-  dispatch decisions are observed even when the process traced the same
-  shapes before the engine existed — the bug the old serve CLI's
-  reset-then-read dance admitted to).
+* the **metrics surface** — a typed :class:`EngineMetrics` snapshot
+  (request/step/token counters, wall-clock, resident-bytes accounting,
+  per-tier :class:`CacheMetrics`, and an accurate per-engine kernel fallback
+  report).  ``metrics()`` returns the dataclass; its ``to_json()`` is the
+  stable wire schema the serve CLI and benchmarks consume, and the dataclass
+  doubles as a read-only mapping so ``m["key"]`` / ``m.get`` / ``{**m}``
+  call sites keep working unchanged.
 
 Scenario frontends subclass this: :class:`repro.serving.lm.LMEngine`
 (slot-based continuous-batch prefill/decode) and
@@ -34,14 +35,104 @@ from repro.serving import table as serving_tbl
 
 
 @dataclasses.dataclass
-class EngineMetrics:
-    """Mutable per-engine counters; ``Engine.metrics()`` renders the dict."""
+class _Counters:
+    """Mutable per-engine counters (``EngineMetrics`` is the frozen view)."""
 
     requests_submitted: int = 0
     requests_completed: int = 0
     steps: int = 0
     tokens_generated: int = 0  # LM only
     wall_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheMetrics:
+    """One cache tier's snapshot (a hot-row cache slot or the cold tier)."""
+
+    tier: str  # 'hot' (device hot-row cache) | 'cold' (host-backed)
+    name: str  # slot name ('table', 'remainder', 'group0', ...)
+    capacity: int  # rows the tier can hold
+    rows_cached: int
+    hits: int
+    misses: int
+    evictions: int
+    writebacks: int
+    hit_rate: float
+    hot_bytes: int  # device bytes of the cached rows
+    metadata_bytes: int  # id-map / recency / frequency bookkeeping bytes
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineMetrics:
+    """Typed, immutable snapshot of one engine's serving metrics.
+
+    ``to_json()`` is the stable schema: keys present in the pre-redesign
+    ad-hoc dict keep their names and conditional presence (``us_per_request``
+    only once requests completed; ``tokens_generated``/``us_per_token`` only
+    for token-generating scenarios; cache keys only when caching is on).
+    """
+
+    scenario: str
+    embedding_method: str
+    requests_submitted: int
+    requests_completed: int
+    steps: int
+    wall_s: float
+    resident_embedding_bytes: int
+    embedding_code_bytes: int
+    embedding_scale_bytes: int
+    int8_resident: bool
+    kernel_fallbacks: int
+    tokens_generated: int = 0
+    caches: tuple[CacheMetrics, ...] = ()
+    cache_hit_rate: float | None = None
+    cache_budget_bytes: int | None = None
+    prefetch_depth: int = 0
+
+    def to_json(self) -> dict:
+        out = {
+            "scenario": self.scenario,
+            "embedding_method": self.embedding_method,
+            "requests_submitted": self.requests_submitted,
+            "requests_completed": self.requests_completed,
+            "steps": self.steps,
+            "wall_s": self.wall_s,
+            "resident_embedding_bytes": self.resident_embedding_bytes,
+            "embedding_code_bytes": self.embedding_code_bytes,
+            "embedding_scale_bytes": self.embedding_scale_bytes,
+            "int8_resident": self.int8_resident,
+            "kernel_fallbacks": self.kernel_fallbacks,
+        }
+        if self.requests_completed:
+            out["us_per_request"] = (
+                self.wall_s / self.requests_completed * 1e6
+            )
+        if self.tokens_generated:
+            out["tokens_generated"] = self.tokens_generated
+            out["us_per_token"] = self.wall_s / self.tokens_generated * 1e6
+        if self.caches:
+            out["caches"] = [c.to_json() for c in self.caches]
+            out["cache_hit_rate"] = self.cache_hit_rate
+            out["cache_budget_bytes"] = self.cache_budget_bytes
+            out["prefetch_depth"] = self.prefetch_depth
+        return out
+
+    # --- read-only mapping shim (legacy consumers index / spread / .get) ---
+
+    def keys(self):
+        return self.to_json().keys()
+
+    def __getitem__(self, key):
+        return self.to_json()[key]
+
+    def __iter__(self):
+        return iter(self.to_json())
+
+    def get(self, key, default=None):
+        return self.to_json().get(key, default)
 
 
 class Engine:
@@ -56,7 +147,12 @@ class Engine:
         self._queue: collections.deque = collections.deque()
         self._done: dict[int, Any] = {}
         self._next_rid = 0
-        self._metrics = EngineMetrics()
+        self._metrics = _Counters()
+        #: Optional resident-bytes ceiling for the cache tiers (reported in
+        #: metrics; frontends that enforce it raise at construction time).
+        self.cache_budget_bytes: int | None = None
+        #: How many waves ahead the cold tier stages host->device copies.
+        self.prefetch_depth: int = 0
         # One scope for the engine's lifetime: every jitted call site below
         # runs under it, so the report covers exactly this engine's dispatch.
         self._fallbacks = kernel_ops.FallbackScope()
@@ -130,40 +226,63 @@ class Engine:
     @property
     def resident_embedding_bytes(self) -> int:
         """Bytes of embedding state this engine keeps resident — for
-        integer-table methods: int8 code bytes + scale bytes, nothing else."""
+        integer-table methods: int8 code bytes + scale bytes (+ cache rows
+        and id maps when a hot tier is composed in)."""
         return serving_tbl.resident_bytes(self.table)
+
+    @property
+    def embedding_code_bytes(self) -> int:
+        return serving_tbl.code_bytes(self.table)
+
+    @property
+    def embedding_scale_bytes(self) -> int:
+        return serving_tbl.scale_bytes(self.table)
 
     @property
     def int8_resident(self) -> bool:
         return serving_tbl.is_integer_resident(self.table)
 
+    def cache_metrics(self) -> tuple[CacheMetrics, ...]:
+        """Per-tier cache snapshots; () when no cache is composed in."""
+        return ()
+
     def fallback_report(self) -> dict:
         """Kernel-vs-fallback dispatch seen by THIS engine's call sites."""
         return self._fallbacks.stats()
 
+    def _reset_cache_counters(self) -> None:
+        """Frontends with cache tiers zero their traffic counters here."""
+
     def reset_metrics(self) -> None:
         """Zero the counters (benchmarks warm the jit traces, then measure).
-        Finished results and the fallback report are kept."""
-        self._metrics = EngineMetrics()
+        Finished results, cache *membership*, and the fallback report are
+        kept; cache traffic counters restart with the measurement window."""
+        self._metrics = _Counters()
+        self._reset_cache_counters()
 
-    def metrics(self) -> dict:
+    def metrics(self) -> EngineMetrics:
         m = self._metrics
-        out = {
-            "scenario": self.scenario,
-            "embedding_method": self.spec.method,
-            "requests_submitted": m.requests_submitted,
-            "requests_completed": m.requests_completed,
-            "steps": m.steps,
-            "wall_s": m.wall_s,
-            "resident_embedding_bytes": self.resident_embedding_bytes,
-            "embedding_code_bytes": serving_tbl.code_bytes(self.table),
-            "embedding_scale_bytes": serving_tbl.scale_bytes(self.table),
-            "int8_resident": self.int8_resident,
-            "kernel_fallbacks": self.fallback_report()["total_fallbacks"],
-        }
-        if m.requests_completed:
-            out["us_per_request"] = m.wall_s / m.requests_completed * 1e6
-        if m.tokens_generated:
-            out["tokens_generated"] = m.tokens_generated
-            out["us_per_token"] = m.wall_s / m.tokens_generated * 1e6
-        return out
+        caches = self.cache_metrics()
+        hit_rate = None
+        if caches:
+            hits = sum(c.hits for c in caches)
+            total = hits + sum(c.misses for c in caches)
+            hit_rate = hits / total if total else 0.0
+        return EngineMetrics(
+            scenario=self.scenario,
+            embedding_method=self.spec.method,
+            requests_submitted=m.requests_submitted,
+            requests_completed=m.requests_completed,
+            steps=m.steps,
+            wall_s=m.wall_s,
+            resident_embedding_bytes=self.resident_embedding_bytes,
+            embedding_code_bytes=self.embedding_code_bytes,
+            embedding_scale_bytes=self.embedding_scale_bytes,
+            int8_resident=self.int8_resident,
+            kernel_fallbacks=self.fallback_report()["total_fallbacks"],
+            tokens_generated=m.tokens_generated,
+            caches=caches,
+            cache_hit_rate=hit_rate,
+            cache_budget_bytes=self.cache_budget_bytes,
+            prefetch_depth=self.prefetch_depth,
+        )

@@ -15,10 +15,15 @@ prefill/decode/score steps:
 * :class:`FloatTable` — the fp32 export for float-leaf methods (fp, hash,
   prune); also the reference the int8-resident parity tests compare against.
 
-``rows`` / ``head_logits`` also accept a raw ``jax.Array`` table and then
-reproduce the historical fp paths bitwise, so the model code
-(:mod:`repro.models.transformer`, :mod:`repro.models.ctr`) calls one function
-for training, eval, and serving.
+Redesigned surface: each table class implements the protocol methods
+``rows`` / ``head_logits`` / ``code_bytes`` / ``scale_bytes`` /
+``live_rows`` / ``cache_slots`` itself; the module-level functions of the
+same names are now *only* the raw-``jax.Array`` boundary (they reproduce the
+historical fp paths bitwise and otherwise delegate to the table).  Adding a
+resident form no longer grows an isinstance chain per call site.
+``cache_slots`` is the hot-row-cache hook: it names each cacheable
+:class:`QuantTable` inside a composed table as a
+:class:`repro.storage.base.CacheSlot`.
 """
 from __future__ import annotations
 
@@ -26,9 +31,16 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import codestore
 from repro.kernels import ops
+from repro.storage import base as rowstore
+
+
+def _einsum_head(w: jax.Array, h: jax.Array) -> jax.Array:
+    """The reference tied-head contraction over a dense fp table."""
+    return jnp.einsum("...d,vd->...v", h.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(jnp.float32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,25 +49,86 @@ class FloatTable:
 
     table: jax.Array
 
+    def rows(self, ids: jax.Array) -> jax.Array:
+        return jnp.take(self.table, ids, axis=0)
+
+    def head_logits(self, h: jax.Array) -> jax.Array:
+        return _einsum_head(self.table, h)
+
+    def code_bytes(self) -> int:
+        return 0
+
+    def scale_bytes(self) -> int:
+        return 0
+
+    def live_rows(self) -> int:
+        return int(self.table.shape[0])
+
+    def cache_slots(self) -> tuple[rowstore.CacheSlot, ...]:
+        return ()
+
 
 @dataclasses.dataclass(frozen=True)
 class QuantTable:
     """Integer-resident table: codes [N, D] + per-row scale [N].
 
-    ``codes`` is either a raw int8 array or a
+    ``codes`` is a raw int8 array, a
     :class:`repro.core.codestore.CodeStore` — sub-byte widths arrive packed
     (2 or 4 codes per resident byte) and stay packed; the fused kernels
-    unpack tiles in VMEM.  ``n``/``d`` are the *live* geometry
-    (``pad_to_tiles`` allocates N >= n, D >= d so real tables hit the kernel
-    path); they are static pytree aux data, so jitted consumers slice with
-    concrete bounds.
+    unpack tiles in VMEM — or a :class:`repro.storage.tiered.TieredCodes`
+    overlaying a device-resident hot-row cache on either.  ``n``/``d`` are
+    the *live* geometry (``pad_to_tiles`` allocates N >= n, D >= d so real
+    tables hit the kernel path); they are static pytree aux data, so jitted
+    consumers slice with concrete bounds.
     """
 
-    codes: codestore.CodeStore | jax.Array  # [N_alloc, D_alloc] logical
+    codes: object  # CodeStore | TieredCodes | jax.Array, [N_alloc, D_alloc]
     step: jax.Array  # f32 [N_alloc]
     n: int  # live id space (ids must be < n)
     d: int  # live embedding width
     use_kernels: bool = True
+
+    def rows(self, ids: jax.Array) -> jax.Array:
+        flat = ids.reshape(-1)
+        out = ops.dequant_gather(
+            self.codes, self.step, flat, use_kernel=self.use_kernels
+        )
+        out = out.reshape(ids.shape + (self.codes.shape[1],))
+        if self.d != out.shape[-1]:
+            out = out[..., : self.d]
+        return out
+
+    def head_logits(self, h: jax.Array) -> jax.Array:
+        lead = h.shape[:-1]
+        h2 = h.reshape(-1, h.shape[-1]).astype(jnp.float32)
+        d_alloc = self.codes.shape[1]
+        if h2.shape[-1] != d_alloc:
+            # Padded columns hold codes for dims the model never writes;
+            # zero activations there keep the contraction exact.
+            h2 = jnp.pad(h2, ((0, 0), (0, d_alloc - h2.shape[-1])))
+        logits = ops.dequant_matmul(
+            h2, self.codes, self.step, use_kernel=self.use_kernels
+        )
+        if self.n != logits.shape[-1]:
+            logits = logits[:, : self.n]
+        return logits.reshape(lead + (self.n,)).astype(jnp.float32)
+
+    def code_bytes(self) -> int:
+        return rowstore.resident_bytes_of(self.codes)
+
+    def scale_bytes(self) -> int:
+        return int(self.step.size) * self.step.dtype.itemsize
+
+    def live_rows(self) -> int:
+        return self.n
+
+    def cache_slots(self) -> tuple[rowstore.CacheSlot, ...]:
+        return (rowstore.CacheSlot(
+            name="table", rows=self.n,
+            get=lambda t: t,
+            put=lambda t, sub: sub,
+            local_ids=lambda ids: np.asarray(ids),
+        ),)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +144,47 @@ class QRQuantTable:
     r: int  # static remainder modulus
     n: int
     d: int
+
+    def rows(self, ids: jax.Array) -> jax.Array:
+        return self.remainder.rows(ids % self.r) * self.quotient.rows(
+            ids // self.r
+        )
+
+    def head_logits(self, h: jax.Array) -> jax.Array:
+        # The QR product head is not a single matmul over codes; the virtual
+        # rows are composed from the two fused gathers per step (transient
+        # [n, d] — resident state stays int8).  A decomposed contraction
+        # (einsum('bd,qd,rd->bqr') over the two small sub-tables) would avoid
+        # the transient entirely but re-associates the product and breaks
+        # bitwise parity with the fp-exported table — the parity contract
+        # wins here; the decomposed head is a ROADMAP follow-up.
+        return _einsum_head(self.rows(jnp.arange(self.n)), h)
+
+    def code_bytes(self) -> int:
+        return self.remainder.code_bytes() + self.quotient.code_bytes()
+
+    def scale_bytes(self) -> int:
+        return self.remainder.scale_bytes() + self.quotient.scale_bytes()
+
+    def live_rows(self) -> int:
+        return self.n
+
+    def cache_slots(self) -> tuple[rowstore.CacheSlot, ...]:
+        r = self.r
+        return (
+            rowstore.CacheSlot(
+                name="remainder", rows=self.remainder.n,
+                get=lambda t: t.remainder,
+                put=lambda t, sub: dataclasses.replace(t, remainder=sub),
+                local_ids=lambda ids: np.asarray(ids) % r,
+            ),
+            rowstore.CacheSlot(
+                name="quotient", rows=self.quotient.n,
+                get=lambda t: t.quotient,
+                put=lambda t, sub: dataclasses.replace(t, quotient=sub),
+                local_ids=lambda ids: np.asarray(ids) // r,
+            ),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +206,72 @@ class MixedQuantTable:
     field_local: tuple[int, ...]  # [F] local start row inside the sub
     n: int
     d: int
+
+    def rows(self, ids: jax.Array) -> jax.Array:
+        offs = jnp.asarray(self.field_offsets, jnp.int32)
+        fid = jnp.searchsorted(offs, ids.astype(jnp.int32), side="right") - 1
+        local = (
+            ids.astype(jnp.int32)
+            - jnp.take(offs, fid)
+            + jnp.take(jnp.asarray(self.field_local, jnp.int32), fid)
+        )
+        gid = jnp.take(jnp.asarray(self.field_group, jnp.int32), fid)
+        # Masked sum over the sub-tables — identical composition (group
+        # order, where/sum placement) to the training-side mixed lookup, so
+        # serving reads stay bitwise-parity with training.
+        out = jnp.zeros(ids.shape + (self.d,), jnp.float32)
+        for g, sub in enumerate(self.subs):
+            mask = gid == g
+            vals = sub.rows(jnp.where(mask, local, 0))
+            out = out + jnp.where(mask[..., None], vals, 0.0)
+        return out
+
+    def head_logits(self, h: jax.Array) -> jax.Array:
+        # Same trade-off as the QR head: compose the virtual rows through the
+        # per-group fused gathers (transient [n, d]; resident state stays
+        # packed integer) so the contraction is bitwise-parity with the
+        # fp-exported table.
+        return _einsum_head(self.rows(jnp.arange(self.n)), h)
+
+    def code_bytes(self) -> int:
+        return sum(sub.code_bytes() for sub in self.subs)
+
+    def scale_bytes(self) -> int:
+        return sum(sub.scale_bytes() for sub in self.subs)
+
+    def live_rows(self) -> int:
+        return self.n
+
+    def cache_slots(self) -> tuple[rowstore.CacheSlot, ...]:
+        starts = np.asarray(self.field_offsets, np.int64)
+        group = np.asarray(self.field_group, np.int64)
+        local = np.asarray(self.field_local, np.int64)
+
+        def make_local(g):
+            def f(ids):
+                ids = np.asarray(ids, np.int64)
+                fid = np.searchsorted(starts, ids, side="right") - 1
+                loc = ids - starts[fid] + local[fid]
+                return np.where(group[fid] == g, loc, -1)
+
+            return f
+
+        def make_put(g):
+            def put(t, sub):
+                subs = t.subs[:g] + (sub,) + t.subs[g + 1:]
+                return dataclasses.replace(t, subs=subs)
+
+            return put
+
+        return tuple(
+            rowstore.CacheSlot(
+                name=f"group{g}", rows=sub.n,
+                get=(lambda g: lambda t: t.subs[g])(g),
+                put=make_put(g),
+                local_ids=make_local(g),
+            )
+            for g, sub in enumerate(self.subs)
+        )
 
 
 jax.tree_util.register_pytree_node(
@@ -133,7 +313,12 @@ def is_integer_resident(table) -> bool:
 
 
 def resident_bytes(table) -> int:
-    """Bytes the table keeps resident (the serve_bench int8 assertion)."""
+    """Bytes the table keeps resident (the serve_bench int8 assertion).
+
+    Counted over the pytree leaves, so a tiered table's hot rows and id-map
+    arrays are included automatically — the cache is resident state, not
+    free metadata.
+    """
     if isinstance(table, jax.Array):
         return int(table.size) * table.dtype.itemsize
     return int(sum(
@@ -148,32 +333,23 @@ def code_bytes(table) -> int:
     counts its resident bytes (``ceil(d * bits / 8)`` per row), not one byte
     per logical code.
     """
-    if isinstance(table, QuantTable):
-        return codestore.resident_bytes_of(table.codes)
-    if isinstance(table, QRQuantTable):
-        return code_bytes(table.remainder) + code_bytes(table.quotient)
-    if isinstance(table, MixedQuantTable):
-        return sum(code_bytes(sub) for sub in table.subs)
-    return 0
+    return table.code_bytes() if is_serving_table(table) else 0
 
 
 def scale_bytes(table) -> int:
-    if isinstance(table, QuantTable):
-        return int(table.step.size) * table.step.dtype.itemsize
-    if isinstance(table, QRQuantTable):
-        return scale_bytes(table.remainder) + scale_bytes(table.quotient)
-    if isinstance(table, MixedQuantTable):
-        return sum(scale_bytes(sub) for sub in table.subs)
-    return 0
+    return table.scale_bytes() if is_serving_table(table) else 0
 
 
 def n_rows(table) -> int:
     """Live id space of the table."""
-    if isinstance(table, jax.Array):
-        return int(table.shape[0])
-    if isinstance(table, FloatTable):
-        return int(table.table.shape[0])
-    return table.n
+    if is_serving_table(table):
+        return table.live_rows()
+    return int(table.shape[0])
+
+
+def cache_slots(table) -> tuple[rowstore.CacheSlot, ...]:
+    """The cacheable :class:`QuantTable` slots inside a serving table."""
+    return table.cache_slots() if is_serving_table(table) else ()
 
 
 def rows(table, ids: jax.Array) -> jax.Array:
@@ -183,39 +359,8 @@ def rows(table, ids: jax.Array) -> jax.Array:
     (1 byte/element off HBM); raw arrays / FloatTable reproduce the
     historical ``jnp.take`` bitwise.
     """
-    if isinstance(table, FloatTable):
-        return jnp.take(table.table, ids, axis=0)
-    if isinstance(table, QuantTable):
-        flat = ids.reshape(-1)
-        out = ops.dequant_gather(
-            table.codes, table.step, flat, use_kernel=table.use_kernels
-        )
-        out = out.reshape(ids.shape + (table.codes.shape[1],))
-        if table.d != out.shape[-1]:
-            out = out[..., : table.d]
-        return out
-    if isinstance(table, QRQuantTable):
-        return rows(table.remainder, ids % table.r) * rows(
-            table.quotient, ids // table.r
-        )
-    if isinstance(table, MixedQuantTable):
-        offs = jnp.asarray(table.field_offsets, jnp.int32)
-        fid = jnp.searchsorted(offs, ids.astype(jnp.int32), side="right") - 1
-        local = (
-            ids.astype(jnp.int32)
-            - jnp.take(offs, fid)
-            + jnp.take(jnp.asarray(table.field_local, jnp.int32), fid)
-        )
-        gid = jnp.take(jnp.asarray(table.field_group, jnp.int32), fid)
-        # Masked sum over the sub-tables — identical composition (group
-        # order, where/sum placement) to the training-side mixed lookup, so
-        # serving reads stay bitwise-parity with training.
-        out = jnp.zeros(ids.shape + (table.d,), jnp.float32)
-        for g, sub in enumerate(table.subs):
-            mask = gid == g
-            vals = rows(sub, jnp.where(mask, local, 0))
-            out = out + jnp.where(mask[..., None], vals, 0.0)
-        return out
+    if is_serving_table(table):
+        return table.rows(ids)
     return jnp.take(table, ids, axis=0)
 
 
@@ -228,41 +373,6 @@ def head_logits(table, h: jax.Array) -> jax.Array:
     Bitwise-equal to the einsum over the de-quantized table (the pre-redesign
     fp-exported path).
     """
-    if isinstance(table, QuantTable):
-        lead = h.shape[:-1]
-        h2 = h.reshape(-1, h.shape[-1]).astype(jnp.float32)
-        d_alloc = table.codes.shape[1]
-        if h2.shape[-1] != d_alloc:
-            # Padded columns hold codes for dims the model never writes;
-            # zero activations there keep the contraction exact.
-            h2 = jnp.pad(h2, ((0, 0), (0, d_alloc - h2.shape[-1])))
-        logits = ops.dequant_matmul(
-            h2, table.codes, table.step, use_kernel=table.use_kernels
-        )
-        if table.n != logits.shape[-1]:
-            logits = logits[:, : table.n]
-        return logits.reshape(lead + (table.n,)).astype(jnp.float32)
-    if isinstance(table, QRQuantTable):
-        # The QR product head is not a single matmul over codes; the virtual
-        # rows are composed from the two fused gathers per step (transient
-        # [n, d] — resident state stays int8).  A decomposed contraction
-        # (einsum('bd,qd,rd->bqr') over the two small sub-tables) would avoid
-        # the transient entirely but re-associates the product and breaks
-        # bitwise parity with the fp-exported table — the parity contract
-        # wins here; the decomposed head is a ROADMAP follow-up.
-        w = rows(table, jnp.arange(table.n))
-        return jnp.einsum("...d,vd->...v", h.astype(jnp.float32), w).astype(
-            jnp.float32
-        )
-    if isinstance(table, MixedQuantTable):
-        # Same trade-off as the QR head: compose the virtual rows through the
-        # per-group fused gathers (transient [n, d]; resident state stays
-        # packed integer) so the contraction is bitwise-parity with the
-        # fp-exported table.
-        w = rows(table, jnp.arange(table.n))
-        return jnp.einsum("...d,vd->...v", h.astype(jnp.float32), w).astype(
-            jnp.float32
-        )
-    w = table.table if isinstance(table, FloatTable) else table
-    return jnp.einsum("...d,vd->...v", h.astype(jnp.float32),
-                      w.astype(jnp.float32)).astype(jnp.float32)
+    if is_serving_table(table):
+        return table.head_logits(h)
+    return _einsum_head(table, h)

@@ -1,0 +1,44 @@
+"""Tiered row storage for quantized embedding tables.
+
+Three tiers behind one :class:`~repro.storage.base.RowStore` protocol:
+
+* **hot** — :mod:`repro.storage.tiered`: a device-resident cache of the
+  top-K hottest rows (LRU + frequency admission, dirty write-back), shared
+  by training and serving;
+* **warm** — :class:`repro.core.codestore.CodeStore` / raw int8 arrays: the
+  HBM-resident (possibly packed sub-byte) container;
+* **cold** — :mod:`repro.storage.cold`: host numpy memory with per-wave
+  ``device_put`` and one-deep prefetch, for tables larger than the device
+  budget.
+"""
+from repro.storage import base, cold, tiered
+from repro.storage.base import (
+    CacheSlot,
+    RowStore,
+    is_row_store,
+    logical_codes,
+    resident_bytes_of,
+    set_rows,
+    take_rows,
+    where_rows,
+)
+from repro.storage.cold import ColdStore
+from repro.storage.tiered import HotRowCache, TieredCodes, wrap_codes
+
+__all__ = [
+    "base",
+    "cold",
+    "tiered",
+    "CacheSlot",
+    "RowStore",
+    "is_row_store",
+    "logical_codes",
+    "take_rows",
+    "set_rows",
+    "where_rows",
+    "resident_bytes_of",
+    "ColdStore",
+    "HotRowCache",
+    "TieredCodes",
+    "wrap_codes",
+]

@@ -1,0 +1,177 @@
+"""Host-memory cold tier for serving: tables larger than the device budget.
+
+A :class:`ColdStore` keeps the *container bytes* of a quantized table in
+host numpy memory; the device holds only the per-row scale vector, a
+fixed-capacity hot tier of the hottest rows, and nothing else.  Per scoring
+wave:
+
+1. the wave's rows are gathered on host at fixed ``[batch * fields, width]``
+   geometry and ``jax.device_put`` (misses travel; hits are overridden),
+2. one jitted merge overlays the device hot tier where the host-side id map
+   says a row is cached, unpacks the container bytes, and de-quantizes with
+   exactly the warm path's formula — so cold serving is bitwise-equal to
+   HBM-resident serving,
+3. the *next* wave's host gather is staged ahead of time (one-deep async
+   prefetch keyed on the pending queue), hiding the host->device copy
+   behind the current wave's compute.
+
+Routing happens host-side (the policy's id map), so the device carries no
+map arrays in cold mode; admissions copy rows host->device into the hot
+tier.  The store is read-only — dirty write-back never arises (training
+uses :mod:`repro.storage.tiered` instead).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codestore
+from repro.storage.tiered import HotRowCache
+
+__all__ = ["ColdStore"]
+
+
+@jax.jit
+def _scatter_rows(hot, slots, rows):
+    return hot.at[slots].set(rows, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "d", "packed"))
+def _cold_dequant(hot, step, host_rows, slot, ids, *, bits, d, packed):
+    """Merge + unpack + de-quantize, mirroring the warm reference path
+    (``codes.astype(f32) * step[ids][:, None]``) for bitwise parity."""
+    cap = hot.shape[0]
+    hot_rows = jnp.take(hot, jnp.clip(slot, 0, cap - 1), axis=0)
+    container = jnp.where((slot >= 0)[:, None], hot_rows, host_rows)
+    codes = (
+        codestore.unpack_codes(container, bits, d) if packed else container
+    )
+    return codes.astype(jnp.float32) * jnp.take(step, ids)[:, None]
+
+
+class ColdStore:
+    """Host-resident quantized table + device hot tier + prefetch staging."""
+
+    def __init__(self, codes, step, *, cache_rows: int, name: str = "cold"):
+        if isinstance(codes, codestore.CodeStore):
+            self.host = np.asarray(jax.device_get(codes.data))
+            self.bits = codes.bits
+            self.packed = codes.packed
+            self.d_alloc = codes.d
+        else:
+            self.host = np.asarray(jax.device_get(codes))
+            self.bits = 8
+            self.packed = False
+            self.d_alloc = int(codes.shape[1])
+        self.n_alloc = int(self.host.shape[0])
+        self.step = jnp.asarray(step)
+        self.cache = HotRowCache(max(1, cache_rows), self.n_alloc, name=name)
+        self.hot = jnp.zeros(
+            (self.cache.capacity, self.host.shape[1]), self.host.dtype
+        )
+        self._staged: tuple[bytes, jax.Array] | None = None
+        self.prefetch_hits = 0
+        self.demand_puts = 0
+
+    # ------------------------------------------------------------ bytes
+
+    @property
+    def host_bytes(self) -> int:
+        """The cold tier's host footprint (what exceeds the device budget)."""
+        return int(self.host.nbytes)
+
+    @property
+    def device_bytes(self) -> int:
+        """Everything this store keeps device-resident: hot rows + scales."""
+        hot = int(self.hot.size) * self.hot.dtype.itemsize
+        return hot + int(self.step.size) * self.step.dtype.itemsize
+
+    @property
+    def hot_device_bytes(self) -> int:
+        return int(self.hot.size) * self.hot.dtype.itemsize
+
+    # ------------------------------------------------------------ prefetch
+
+    def _host_gather(self, flat_ids: np.ndarray) -> np.ndarray:
+        return self.host[np.clip(flat_ids, 0, self.n_alloc - 1)]
+
+    def stage(self, flat_ids: np.ndarray) -> None:
+        """Start the host->device copy for a future wave's ids."""
+        flat_ids = np.asarray(flat_ids, np.int64).reshape(-1)
+        key = flat_ids.tobytes()
+        if self._staged is not None and self._staged[0] == key:
+            return
+        self._staged = (key, jax.device_put(self._host_gather(flat_ids)))
+
+    # ------------------------------------------------------------ serving
+
+    def admit(self, flat_ids: np.ndarray) -> None:
+        """Run the cache policy over a wave's ids; copy admissions to the
+        device hot tier (rows come from host memory, not a backing tier)."""
+        moves = self.cache.observe(np.asarray(flat_ids, np.int64))
+        if moves is None:
+            return
+        _, _, _, adm_slots, adm_ids = moves
+        rows = jax.device_put(self._host_gather(adm_ids))
+        slots = jnp.asarray(
+            np.where(adm_ids >= 0, adm_slots, self.cache.capacity)
+        )
+        self.hot = _scatter_rows(self.hot, slots, rows)
+
+    def rows(self, flat_ids: np.ndarray) -> jax.Array:
+        """De-quantized f32 rows ``[k, d_alloc]`` for one wave of ids.
+
+        Consumes the staged prefetch when it matches; otherwise demand-loads
+        the host gather.  Bitwise-equal to a warm ``QuantTable`` read.
+        """
+        flat_ids = np.asarray(flat_ids, np.int64).reshape(-1)
+        key = flat_ids.tobytes()
+        if self._staged is not None and self._staged[0] == key:
+            host_rows = self._staged[1]
+            self.prefetch_hits += 1
+        else:
+            host_rows = jax.device_put(self._host_gather(flat_ids))
+            self.demand_puts += 1
+        self._staged = None
+        slot = jnp.asarray(self.cache.slot_of_arr[np.clip(flat_ids, 0, self.n_alloc - 1)])
+        ids_dev = jnp.asarray(flat_ids.astype(np.int32))
+        return _cold_dequant(
+            self.hot, self.step, host_rows, slot, ids_dev,
+            bits=self.bits, d=self.d_alloc, packed=self.packed,
+        )
+
+    def warm_start(self, freqs) -> None:
+        """Admit the top rows by frequency (checkpoint-restart warm cache)."""
+        f = np.asarray(freqs, np.int64).reshape(-1)
+        full = np.zeros(self.n_alloc, np.int64)
+        full[: min(f.size, self.n_alloc)] = f[: self.n_alloc]
+        order = np.argsort(-full, kind="stable")
+        order = order[full[order] > 0][: self.cache.capacity]
+        if order.size == 0:
+            return
+        self.cache.freq += full
+        self.cache.clock += 1
+        adm_slots, adm_ids = [], []
+        for i in order:
+            i = int(i)
+            slot = self.cache._free.pop()
+            self.cache.slot_of_arr[i] = slot
+            self.cache.slot_ids[slot] = i
+            self.cache.last_used[slot] = self.cache.clock
+            adm_slots.append(slot)
+            adm_ids.append(i)
+        moves = self.cache._pad_moves([], [], [], adm_slots, adm_ids)
+        _, _, _, adm_slots_p, adm_ids_p = moves
+        rows = jax.device_put(self._host_gather(adm_ids_p))
+        slots = jnp.asarray(
+            np.where(adm_ids_p >= 0, adm_slots_p, self.cache.capacity)
+        )
+        self.hot = _scatter_rows(self.hot, slots, rows)
+
+    def reset_counters(self) -> None:
+        self.cache.reset_counters()
+        self.prefetch_hits = 0
+        self.demand_puts = 0

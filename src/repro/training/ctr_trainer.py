@@ -24,6 +24,7 @@ from repro import methods, metrics
 from repro.models import ctr as ctr_models
 from repro.models import embedding as emb_mod
 from repro.optim import adam_init, adam_update
+from repro.storage.tiered import HotRowCache
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +40,12 @@ class TrainerConfig:
     # Gradient-sync bit width for data-parallel training
     # (repro.training.data_parallel): 32 = exact fp32, 2..8 = SR-compressed.
     dp_sync_bits: int = 32
+    # Tiered storage (repro.storage): > 0 composes a device hot-row cache of
+    # this many rows over every cacheable sub-table of the embedding state.
+    # Training reads/writes route through the cache (dirty rows write back
+    # before eviction); cache-on is bitwise-equal to cache-off.  Integer-
+    # table methods only.
+    cache_rows: int = 0
 
 
 class TrainState(NamedTuple):
@@ -63,6 +70,14 @@ class CTRTrainer:
             assert cfg.deepfm is not None
             self.model_cfg = cfg.deepfm
             self._init_model = ctr_models.init_deepfm
+        self._caches: list = []  # [(CacheSlot, HotRowCache)]
+        if cfg.cache_rows:
+            self._storage_slots = self.method.storage_spec(self.spec)
+            if not self._storage_slots:
+                raise ValueError(
+                    f"cache_rows > 0 but method {self.spec.method!r} exposes "
+                    "no cacheable storage slots (integer-table methods only)"
+                )
         self._train_step = self._build_train_step()
         self._eval_logits = jax.jit(self._logits_fn)
 
@@ -71,7 +86,7 @@ class CTRTrainer:
     def init_state(self, key: jax.Array | None = None) -> TrainState:
         key = jax.random.PRNGKey(self.cfg.seed) if key is None else key
         k_emb, k_dense, k_rng = jax.random.split(key, 3)
-        emb_state = self.method.init(k_emb, self.spec)
+        emb_state = self._install_caches(self.method.init(k_emb, self.spec))
         dense_params = self._init_model(k_dense, self.model_cfg)
         dense_opt = adam_init(dense_params)
         emb_params = self.method.trainable_params(emb_state, self.spec)
@@ -84,6 +99,60 @@ class CTRTrainer:
             step=jnp.zeros((), jnp.int32),
             rng=k_rng,
         )
+
+    # ------------------------------------------------------------ cache
+
+    def _install_caches(self, emb_state):
+        """Compose a hot-row cache over each cacheable slot of the state."""
+        if not self.cfg.cache_rows:
+            return emb_state
+        self._caches = []
+        for slot in self._storage_slots:
+            sub = slot.get(emb_state)
+            cap = max(1, min(int(self.cfg.cache_rows), slot.rows))
+            cache = HotRowCache(cap, int(sub.codes.shape[0]), name=slot.name)
+            emb_state = slot.put(
+                emb_state, sub._replace(codes=cache.wrap(sub.codes))
+            )
+            self._caches.append((slot, cache))
+        return emb_state
+
+    def _maintain_caches(self, state: "TrainState", ids) -> "TrainState":
+        """Post-step cache maintenance: the policy observes the batch's ids
+        (write=True — the routed sparse update put cached rows' new codes in
+        the hot tier only) and applies admissions/evictions in one jitted
+        transaction per slot."""
+        if not self._caches:
+            return state
+        flat = np.asarray(ids).reshape(-1)
+        emb_state = state.emb_state
+        for slot, cache in self._caches:
+            moves = cache.observe(slot.local_ids(flat), write=True)
+            if moves is None:
+                continue
+            sub = slot.get(emb_state)
+            emb_state = slot.put(
+                emb_state, sub._replace(codes=cache.apply(sub.codes, moves))
+            )
+        return state._replace(emb_state=emb_state)
+
+    def export_state(self, state: "TrainState") -> "TrainState":
+        """The cache-off-equivalent state: every dirty hot row folded back
+        into its backing container (bitwise-equal to an uncached run) —
+        what checkpoints, serving exports, and parity tests consume.  The
+        live ``state`` stays valid for continued training."""
+        if not self._caches:
+            return state
+        emb_state = state.emb_state
+        for slot, cache in self._caches:
+            sub = slot.get(emb_state)
+            emb_state = slot.put(
+                emb_state, sub._replace(codes=cache.unwrap(sub.codes))
+            )
+        return state._replace(emb_state=emb_state)
+
+    def cache_stats(self) -> list[dict]:
+        return [cache.stats() for _, cache in self._caches]
 
     # ------------------------------------------------------------ lr
 
@@ -297,7 +366,9 @@ class CTRTrainer:
     # ------------------------------------------------------------ api
 
     def train_step(self, state: TrainState, ids: np.ndarray, labels: np.ndarray):
-        return self._train_step(state, jnp.asarray(ids), jnp.asarray(labels))
+        state, m = self._train_step(state, jnp.asarray(ids), jnp.asarray(labels))
+        state = self._maintain_caches(state, ids)
+        return state, m
 
     def evaluate(self, state: TrainState, batches) -> dict[str, float]:
         all_labels, all_probs = [], []

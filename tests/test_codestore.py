@@ -13,6 +13,7 @@ import pytest
 from repro import methods
 from repro.core import codestore
 from repro.core import lpt as lpt_core
+from repro.storage import base as rowstore
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -55,11 +56,11 @@ def test_codestore_row_ops_roundtrip():
     )
     rows = jnp.full((2, 8), -2, jnp.int8)
     idx = jnp.array([1, 9], jnp.int32)
-    updated = codestore.set_rows(s, idx, rows, mode="drop")
+    updated = rowstore.set_rows(s, idx, rows, mode="drop")
     expect = codes.at[idx].set(rows, mode="drop")
     np.testing.assert_array_equal(np.asarray(updated), np.asarray(expect))
     # Out-of-range scatter drops, bit-identically to the raw .at path.
-    dropped = codestore.set_rows(s, jnp.array([99]), rows[:1], mode="drop")
+    dropped = rowstore.set_rows(s, jnp.array([99]), rows[:1], mode="drop")
     np.testing.assert_array_equal(np.asarray(dropped), np.asarray(codes))
 
 

@@ -1,0 +1,315 @@
+"""Tiered row storage (`repro.storage`): the PR-7 acceptance contract.
+
+* **Bitwise training parity** — for every integer-table method, training with
+  a device hot-row cache composed over the code storage produces the exact
+  same state (codes, scales, optimizer moments, dense params) as training
+  without one, under Zipf(1.1) traffic that forces real evictions and
+  dirty-row write-backs.
+* **Bitwise serving parity** — the Engine scores identically with the cache
+  on, warm-started from id frequencies, restored from a serving checkpoint,
+  or running cold-tier (host-resident codes) with a device budget smaller
+  than the full table.
+* **Accounting** — resident-bytes includes the cache rows *and* the cache
+  metadata (id maps); `EngineMetrics.to_json()` is the stable schema and the
+  dataclass still quacks like the legacy dict.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import methods
+from repro.checkpoint import manager as ckpt
+from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
+from repro.models.ctr import DCNConfig
+from repro.serving.ctr import CTREngine, CTRRequest
+from repro.serving.engine import CacheMetrics, EngineMetrics
+from repro.storage import base as rowstore
+from repro.storage.tiered import HotRowCache, TieredCodes
+from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.storage
+
+INT_METHODS = ["lpt", "alpt", "qr_lpt", "qr_alpt", "mixed"]
+
+ZIPF_DATA = CTRDatasetConfig(
+    name="storage-zipf", n_fields=4, cardinalities=(13, 17, 11, 23),
+    teacher_rank=3, zipf_a=1.1, seed=5,
+)
+
+
+def _spec_for(method, *, n, d=8, bits=8):
+    kw = dict(method=method, n=n, d=d, bits=bits, init_scale=0.05)
+    if method.startswith("qr"):
+        kw["hash_compression"] = 4.0
+    if method == "mixed":
+        # Four equal field groups at mixed widths covering the n-row table.
+        q, r = divmod(n, 4)
+        cards = (q, q, q, q + r)
+        kw["field_cards"] = cards
+        kw["field_bits"] = (8, 4, 8, 2)
+    return methods.EmbeddingSpec(**kw)
+
+
+def _trainer(method, *, cache_rows, data_cfg=ZIPF_DATA, d=8):
+    spec = _spec_for(method, n=data_cfg.n_features, d=d)
+    dcn = DCNConfig(n_fields=data_cfg.n_fields, emb_dim=d, cross_depth=1,
+                    mlp_widths=(16,))
+    return CTRTrainer(TrainerConfig(spec=spec, model="dcn", dcn=dcn,
+                                    lr=1e-3, cache_rows=cache_rows))
+
+
+def _train(trainer, data, steps, batch=16):
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    for i in range(steps):
+        ids, labels = data.batch("train", i, batch)
+        state, _ = trainer.train_step(state, ids, labels)
+    return state
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# ------------------------------------------------------- RowStore protocol
+
+
+def test_rowstore_conformance_tiered():
+    """TieredCodes satisfies the RowStore protocol, and the module-level
+    dispatchers agree with plain-ndarray semantics."""
+    rng = np.random.RandomState(0)
+    base = jnp.asarray(rng.randint(-128, 128, (32, 8)), jnp.int8)
+    cache = HotRowCache(4, 32, name="t")
+    tiered = cache.wrap(base)
+    assert rowstore.is_row_store(tiered)
+    assert tiered.shape == (32, 8)
+
+    # Admit rows {3, 7} so hot-overlay routing is actually exercised.
+    moves = cache.observe(np.array([3, 7, 3, 7, 3, 7]))
+    tiered = cache.apply(tiered, moves)
+    moves = cache.observe(np.array([3, 7]))
+    if moves is not None:
+        tiered = cache.apply(tiered, moves)
+
+    ids = jnp.asarray([0, 3, 7, 31, 3])
+    assert np.array_equal(rowstore.take_rows(tiered, ids),
+                          np.asarray(base)[np.asarray(ids)])
+    assert np.array_equal(rowstore.logical_codes(tiered), base)
+
+    # Writes route through the overlay but stay logically identical.
+    new_rows = jnp.asarray(rng.randint(-128, 128, (3, 8)), jnp.int8)
+    w_ids = jnp.asarray([3, 5, 7])
+    t2 = rowstore.set_rows(tiered, w_ids, new_rows, mode="drop")
+    want = np.asarray(base).copy()
+    want[np.asarray(w_ids)] = np.asarray(new_rows)
+    assert np.array_equal(rowstore.logical_codes(t2), want)
+    assert np.array_equal(rowstore.take_rows(t2, ids), want[np.asarray(ids)])
+
+    mask = jnp.zeros((32,), bool).at[jnp.asarray([3, 9])].set(True)
+    repl = jnp.asarray(rng.randint(-128, 128, (32, 8)), jnp.int8)
+    t3 = rowstore.where_rows(t2, mask, repl)
+    want3 = np.where(np.asarray(mask)[:, None], np.asarray(repl), want)
+    assert np.array_equal(rowstore.logical_codes(t3), want3)
+
+    # Plain ndarrays pass through the same dispatchers unchanged.
+    assert np.array_equal(rowstore.take_rows(base, ids),
+                          np.asarray(base)[np.asarray(ids)])
+    assert rowstore.resident_bytes_of(base) == 32 * 8
+    assert rowstore.resident_bytes_of(tiered) > 32 * 8  # + hot + metadata
+
+
+# ------------------------------------------------------- training parity
+
+
+@pytest.mark.parametrize("method", INT_METHODS)
+def test_train_parity_cache_on_equals_off(method):
+    """Cache-on training is bitwise-equal to cache-off: every leaf of the
+    exported state (codes, scales, moments, dense params) matches."""
+    data = CTRSynthetic(ZIPF_DATA)
+    off = _train(_trainer(method, cache_rows=0), data, steps=6)
+    tr = _trainer(method, cache_rows=8)
+    on = tr.export_state(_train(tr, data, steps=6))
+    assert _tree_equal(off.emb_state, on.emb_state)
+    assert _tree_equal(off.dense_params, on.dense_params)
+    assert any(s["hits"] > 0 for s in tr.cache_stats())
+
+
+def test_dirty_writeback_cycle():
+    """A written row must survive evict -> re-admit.  Phased traffic against
+    a 2-row cache: phase A writes rows {0, 1} dirty; phase B hammers rows
+    {2, 3} until their lifetime frequency overtakes A's (dirty eviction +
+    write-back); phase C returns to {0, 1} (re-admission).  The exported
+    state still matches cache-off exactly."""
+    rng = np.random.RandomState(7)
+    phases = [(0, 1)] * 3 + [(2, 3)] * 6 + [(0, 1)] * 5
+    batches = []
+    for a, b in phases:
+        ids = np.where(np.arange(32).reshape(8, 4) % 2 == 0, a, b)
+        labels = rng.randint(0, 2, 8).astype(np.float32)
+        batches.append((ids.astype(np.int32), labels))
+
+    def run(cache_rows):
+        tr = _trainer("alpt", cache_rows=cache_rows)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        for ids, labels in batches:
+            state, _ = tr.train_step(state, ids, labels)
+        return tr, state
+
+    _, off = run(0)
+    tr, on_state = run(2)
+    on = tr.export_state(on_state)
+    assert _tree_equal(off.emb_state, on.emb_state)
+    stats = tr.cache_stats()[0]
+    assert stats["evictions"] > 0
+    assert stats["writebacks"] > 0
+
+
+# -------------------------------------------------------- serving parity
+
+
+def _score_all(engine, ids):
+    rids = [engine.submit(CTRRequest(rid=i, ids=row))
+            for i, row in enumerate(ids)]
+    done = engine.run()
+    return [done[r]["prob"] for r in rids]
+
+
+@pytest.mark.parametrize("method", INT_METHODS)
+def test_engine_cache_parity(method):
+    """Warm hot-tier scoring == uncached scoring, bit for bit, while the
+    cache actually serves hits."""
+    data = CTRSynthetic(ZIPF_DATA)
+    tr = _trainer(method, cache_rows=0)
+    state = _train(tr, data, steps=2)
+    ids, _ = data.batch("test", 0, 24)
+
+    plain = CTREngine.from_state(state, tr.cfg, batch=4)
+    cached = CTREngine.from_state(state, tr.cfg, batch=4, cache_rows=8)
+    assert _score_all(plain, ids) == _score_all(cached, ids)
+    m = cached.metrics()
+    assert m.caches and m.cache_hit_rate > 0.0
+
+
+def test_engine_restart_warm_start(tmp_path):
+    """Engine restart story: serving checkpoint -> from_checkpoint with a
+    hot tier warm-started from training id frequencies.  Scores stay
+    bitwise; the pre-admitted rows serve hits from the first wave."""
+    data = CTRSynthetic(ZIPF_DATA)
+    tr = _trainer("alpt", cache_rows=0)
+    state = _train(tr, data, steps=2)
+    n = tr.spec.n
+    freqs = np.zeros(n, np.int64)
+    for i in range(2):
+        ids, _ = data.batch("train", i, 16)
+        np.add.at(freqs, ids.reshape(-1), 1)
+
+    ckpt.save_serving_checkpoint(
+        tmp_path, step=2, params=state.dense_params,
+        table=state.emb_state, spec=tr.spec,
+    )
+    live = CTREngine.from_state(state, tr.cfg, batch=4)
+    restored = CTREngine.from_checkpoint(
+        tmp_path, tr.cfg, state.dense_params, batch=4, cache_rows=8,
+    )
+    restored.warm_start(freqs)
+    ids, _ = data.batch("test", 1, 12)
+    assert _score_all(live, ids) == _score_all(restored, ids)
+    m = restored.metrics()
+    assert m.cache_hit_rate > 0.0
+    assert all(c.rows_cached > 0 for c in m.caches)
+
+
+def test_engine_cold_tier_parity_over_budget(tmp_path):
+    """Cold tier serves a table whose codes exceed the device budget:
+    host-resident codes, device holds scales + hot rows, scores bitwise."""
+    data = CTRSynthetic(ZIPF_DATA)
+    tr = _trainer("lpt", cache_rows=0)
+    state = _train(tr, data, steps=2)
+
+    plain = CTREngine.from_state(state, tr.cfg, batch=4)
+    full_code_bytes = plain.embedding_code_bytes
+    budget = full_code_bytes - 1  # the full table must NOT fit
+    cold = CTREngine.from_state(
+        state, tr.cfg, batch=4, cold_tier=True, cache_rows=8,
+        device_budget_bytes=budget,
+    )
+    ids, _ = data.batch("test", 0, 24)
+    assert _score_all(plain, ids) == _score_all(cold, ids)
+    m = cold.metrics()
+    assert m.resident_embedding_bytes <= budget
+    assert m.caches[0].tier == "cold"
+    assert m.cache_budget_bytes == budget
+
+    # An over-budget *hot* configuration must refuse loudly instead.
+    with pytest.raises(ValueError, match="budget"):
+        CTREngine.from_state(
+            state, tr.cfg, batch=4, cold_tier=True, cache_rows=8,
+            device_budget_bytes=16,
+        )
+
+
+# ------------------------------------------------------------- accounting
+
+
+def test_resident_bytes_include_cache_metadata():
+    """Composing a hot tier grows resident-bytes by the cached rows AND the
+    id-map metadata — the cache is never free in the accounting."""
+    data = CTRSynthetic(ZIPF_DATA)
+    tr = _trainer("alpt", cache_rows=0)
+    state = _train(tr, data, steps=1)
+    plain = CTREngine.from_state(state, tr.cfg, batch=4)
+    cached = CTREngine.from_state(state, tr.cfg, batch=4, cache_rows=8)
+    pm, cm = plain.metrics(), cached.metrics()
+    hot = cm.caches[0]
+    assert hot.metadata_bytes > 0
+    assert cm.resident_embedding_bytes >= (
+        pm.resident_embedding_bytes + hot.hot_bytes
+    )
+    # The TieredCodes store itself reports the same breakdown.
+    slot = methods.get(tr.spec.method).storage_spec(tr.spec)[0]
+    codes = slot.get(cached.table).codes
+    assert isinstance(codes, TieredCodes)
+    assert codes.resident_bytes == (
+        rowstore.resident_bytes_of(codes.backing)
+        + codes.hot_bytes + codes.metadata_bytes
+    )
+
+
+def test_engine_metrics_schema_and_dict_compat():
+    """EngineMetrics.to_json() is the stable wire schema; the dataclass
+    doubles as a read-only mapping for legacy consumers."""
+    data = CTRSynthetic(ZIPF_DATA)
+    tr = _trainer("lpt", cache_rows=0)
+    state = _train(tr, data, steps=1)
+    engine = CTREngine.from_state(state, tr.cfg, batch=4, cache_rows=8)
+    ids, _ = data.batch("test", 0, 8)
+    _score_all(engine, ids)
+
+    m = engine.metrics()
+    assert isinstance(m, EngineMetrics)
+    j = m.to_json()
+    for key in ["scenario", "embedding_method", "requests_submitted",
+                "requests_completed", "steps", "wall_s",
+                "resident_embedding_bytes", "embedding_code_bytes",
+                "embedding_scale_bytes", "int8_resident",
+                "kernel_fallbacks", "us_per_request", "caches",
+                "cache_hit_rate", "prefetch_depth"]:
+        assert key in j, key
+    assert all(isinstance(c, dict) for c in j["caches"])
+    assert set(j["caches"][0]) == {
+        f.name for f in dataclasses.fields(CacheMetrics)
+    }
+    # Legacy mapping shim: index / .get / spread all keep working.
+    assert m["scenario"] == "ctr"
+    assert m.get("tokens_generated", 0) == 0
+    assert {**m} == j
+    # And the uncached engine omits the cache keys (conditional schema).
+    plain = CTREngine.from_state(state, tr.cfg, batch=4)
+    assert "caches" not in plain.metrics().to_json()
