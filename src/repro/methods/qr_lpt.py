@@ -234,12 +234,14 @@ class QRALPTMethod(QRLPTMethod):
                          noise_key):
         """Algorithm 1 line 5 for one sub-table: Delta update + SR
         re-quantize of the already-float-updated unique rows (mirrors
-        ``alpt_core.alpt_step``'s tail, including its noise keying)."""
+        ``alpt_core.alpt_step``'s tail).  ``noise_key`` must be a key
+        derived for this draw alone — the caller folds, so the key flow is
+        auditable at the call site (rng-key-discipline)."""
         new_step_b = step_b - cfg.step_lr * (
             g_step + cfg.step_weight_decay * step_b
         )
         new_step_b = jnp.maximum(new_step_b, 1e-8)
-        noise = quant.sr_noise(jax.random.fold_in(noise_key, 1), w_new.shape)
+        noise = quant.sr_noise(noise_key, w_new.shape)
         if cfg.use_kernels and cfg.rounding == "sr":
             codes_rows = kernel_ops.sr_round(w_new, new_step_b, noise, cfg.bits)
         else:
@@ -325,11 +327,17 @@ class QRALPTMethod(QRLPTMethod):
         g_sr, g_sq = fence.fence_call(
             jax.grad(loss_wrt_steps), ((step_r, step_q),), tick=tick
         )
+        # Same keys as before the rng-key-discipline refactor: the fold that
+        # used to live inside _delta_writeback now happens here, so each
+        # k_rem/k_quo visibly feeds one draw (sparse_apply) and one derived
+        # subkey (the Delta writeback) — bitwise-identical key material.
         new_rem = self._delta_writeback(
-            rem1, uniq_r, w_new_r, step_r, g_sr, cfg=cfg, noise_key=k_rem
+            rem1, uniq_r, w_new_r, step_r, g_sr, cfg=cfg,
+            noise_key=jax.random.fold_in(k_rem, 1),
         )
         new_quo = self._delta_writeback(
-            quo1, uniq_q, w_new_q, step_q, g_sq, cfg=cfg, noise_key=k_quo
+            quo1, uniq_q, w_new_q, step_q, g_sq, cfg=cfg,
+            noise_key=jax.random.fold_in(k_quo, 1),
         )
         aux = {
             "step_grad_norm": jnp.sqrt(
