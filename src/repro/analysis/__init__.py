@@ -1,0 +1,19 @@
+"""Static analysis for the repo's quantization contracts.
+
+Two layers, one CLI (``python -m repro.analysis``):
+
+* :mod:`repro.analysis.lint` — AST lint rules over ``src/`` and
+  ``benchmarks/`` (no-string-dispatch, no-raw-code-casts,
+  no-direct-storage-access, rng-key-discipline, no-silent-fallback,
+  no-unfenced-model-grad).
+* :mod:`repro.analysis.jaxpr` — jaxpr-level invariant checkers over the
+  real jitted train/Engine steps (int8-resident serving, dequant-only
+  code widening, packed sub-byte containment, packed collective wire).
+
+Both layers emit :class:`~repro.analysis.findings.Finding` records with
+``rule``, ``path:line`` and a fix hint; the CLI exits nonzero on any
+unsuppressed finding.
+"""
+from repro.analysis.findings import Finding, Suppressions, load_suppressions
+
+__all__ = ["Finding", "Suppressions", "load_suppressions"]

@@ -1,0 +1,117 @@
+"""``python -m repro.analysis`` — the static contract gate.
+
+Runs the AST lint rules over ``src/repro`` + ``benchmarks`` and the jaxpr
+invariant checkers over the trace-target registry; exits nonzero on any
+unsuppressed finding.
+
+    python -m repro.analysis                   # both layers, human output
+    python -m repro.analysis --json            # machine findings (CI artifact)
+    python -m repro.analysis --no-jaxpr        # lint only (fast)
+    python -m repro.analysis --suppressions analysis-suppressions.txt
+    python -m repro.analysis --list-rules      # the catalog
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST lint + jaxpr invariant checks for the "
+        "quantization contracts",
+    )
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON on stdout")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the AST lint layer")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the jaxpr trace checkers")
+    ap.add_argument("--rule", action="append", default=None,
+                    help="run only this lint rule (repeatable)")
+    ap.add_argument("--target", action="append", default=None,
+                    help="run only this jaxpr trace target (repeatable)")
+    ap.add_argument("--suppressions", type=pathlib.Path, default=None,
+                    help="explicit suppression file (rule path[:line] per "
+                    "line); defaults to <repo>/analysis-suppressions.txt "
+                    "when present")
+    ap.add_argument("--no-suppressions", action="store_true",
+                    help="ignore the suppression file entirely")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule/checker catalog and exit")
+    ap.add_argument("--paths", nargs="*", default=None,
+                    help="lint these files instead of src/ + benchmarks/")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.findings import findings_to_json, load_suppressions
+    from repro.analysis.lint import RULES, all_rules, run_lint
+
+    if args.list_rules:
+        from repro.analysis.jaxpr import CHECKS
+        from repro.analysis.jaxpr.targets import all_targets
+        print("lint rules:")
+        for rule in all_rules():
+            doc = (rule.__doc__ or "").strip().splitlines()[0]
+            print(f"  {rule.name:28s} {doc}")
+        print("jaxpr checkers:")
+        for name in CHECKS:
+            print(f"  jaxpr-{name}")
+        print("trace targets:")
+        for t in all_targets():
+            print(f"  {t.name:28s} checks={','.join(t.checks)}")
+        return 0
+
+    findings = []
+    if not args.no_lint:
+        rules = None
+        if args.rule:
+            all_rules()  # populate the registry
+            unknown = [r for r in args.rule if r not in RULES]
+            if unknown:
+                ap.error(f"unknown rule(s): {', '.join(unknown)}")
+            rules = [RULES[r] for r in args.rule]
+        paths = ([pathlib.Path(p) for p in args.paths]
+                 if args.paths else None)
+        findings.extend(run_lint(paths=paths, rules=rules))
+
+    if not args.no_jaxpr:
+        from repro.analysis.jaxpr.targets import all_targets, run_jaxpr_checks
+        if args.target:
+            known = {t.name for t in all_targets()}
+            unknown = [t for t in args.target if t not in known]
+            if unknown:
+                ap.error(f"unknown target(s): {', '.join(unknown)}")
+        findings.extend(run_jaxpr_checks(names=args.target))
+
+    supp_path = args.suppressions
+    if supp_path is None and not args.no_suppressions:
+        from repro.analysis.lint import REPO_ROOT
+        default = REPO_ROOT / "analysis-suppressions.txt"
+        supp_path = default if default.exists() else None
+    if args.no_suppressions:
+        supp_path = None
+    supp = load_suppressions(supp_path)
+    findings = supp.apply(findings)
+
+    if args.json:
+        print(findings_to_json(findings))
+    else:
+        for f in findings:
+            print(f.format())
+        layers = [lyr for lyr, off in
+                  (("lint", args.no_lint), ("jaxpr", args.no_jaxpr))
+                  if not off]
+        print(f"repro.analysis [{'+'.join(layers)}]: "
+              f"{len(findings)} finding(s)")
+    for entry in supp.unused():
+        print(f"warning: unused suppression: {entry.rule} "
+              f"{entry.path_glob}"
+              + (f":{entry.line}" if entry.line else ""),
+              file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,116 @@
+"""Structured findings + the suppression file shared by both layers.
+
+A finding pins a contract violation to ``rule`` + ``path:line`` and carries
+a one-line fix hint.  Jaxpr-layer findings use the trace-target name as the
+path (``<target:engine-ctr/lpt>``) and line 0 — suppressions address them
+the same way source findings are addressed.
+
+Suppression file format (one entry per line, ``#`` comments)::
+
+    rule-name path/glob            # whole file
+    rule-name path/glob:123        # one line only
+
+Paths are repo-relative posix and matched with :func:`fnmatch.fnmatch`, so
+``no-raw-code-casts benchmarks/*`` silences a rule for a directory.  The
+file is an *explicit* escape hatch: every entry is a reviewed decision, and
+the CLI prints which entries actually matched so dead suppressions rot
+visibly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+import pathlib
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-relative posix path, or "<target:...>" for jaxpr
+    line: int          # 1-based source line; 0 for whole-target findings
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        out = f"{loc}: [{self.rule}] {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class SuppressionEntry:
+    rule: str
+    path_glob: str
+    line: int | None   # None -> whole file
+
+    def matches(self, f: Finding) -> bool:
+        if self.rule != f.rule and self.rule != "*":
+            return False
+        if not fnmatch.fnmatch(f.path, self.path_glob):
+            return False
+        return self.line is None or self.line == f.line
+
+
+class Suppressions:
+    """Parsed suppression file; tracks which entries matched anything."""
+
+    def __init__(self, entries: list[SuppressionEntry] = ()):  # type: ignore[assignment]
+        self.entries = list(entries)
+        self.used: set[SuppressionEntry] = set()
+
+    def suppressed(self, f: Finding) -> bool:
+        hit = False
+        for e in self.entries:
+            if e.matches(f):
+                self.used.add(e)
+                hit = True
+        return hit
+
+    def apply(self, findings: list[Finding]) -> list[Finding]:
+        return [f for f in findings if not self.suppressed(f)]
+
+    def unused(self) -> list[SuppressionEntry]:
+        return [e for e in self.entries if e not in self.used]
+
+
+def load_suppressions(path: str | pathlib.Path | None) -> Suppressions:
+    if path is None:
+        return Suppressions()
+    entries = []
+    for ln, raw in enumerate(
+        pathlib.Path(path).read_text().splitlines(), start=1
+    ):
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        parts = line.split()
+        if len(parts) != 2:
+            raise ValueError(
+                f"{path}:{ln}: expected '<rule> <path-glob>[:line]', "
+                f"got {raw!r}"
+            )
+        rule, target = parts
+        lineno: int | None = None
+        if ":" in target:
+            target, _, tail = target.rpartition(":")
+            if not tail.isdigit():
+                raise ValueError(
+                    f"{path}:{ln}: line suffix must be an integer: {raw!r}"
+                )
+            lineno = int(tail)
+        entries.append(SuppressionEntry(rule, target, lineno))
+    return Suppressions(entries)
+
+
+def findings_to_json(findings: list[Finding]) -> str:
+    return json.dumps(
+        {"findings": [f.to_json() for f in findings],
+         "count": len(findings)},
+        indent=2,
+    )

@@ -1,0 +1,287 @@
+"""The trace-target registry: the real jitted steps the checkers walk.
+
+Each target lazily builds a tiny-geometry instance of a production step —
+the CTR Engine scorer for every registered integer-table method, the LM
+Engine decode for the flat-table methods, both trainers' fused/dense
+steps, and the compressed collective at each packable width — then runs
+the checks named in its ``checks`` tuple.
+
+Geometries are chosen collision-proof: batch=3 so no activation shares a
+leading dim with any (sub-)table allocation, and the forbidden-shape sets
+are *introspected* from the built state (every ``CodeStore``/raw-code
+allocation plus the logical ``(n, d)``), not hand-maintained.
+
+The qr/mixed LM head is deliberately absent: ``QRQuantTable.head_logits``
+materializes a transient ``[n, d]`` product by design (see
+serving/table.py; the decomposed einsum head is a carried ROADMAP item),
+so only the flat-table methods carry the LM no-f32-table contract today.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.analysis.findings import Finding
+
+CTR_CARDS = (23, 37, 11, 53)
+ENGINE_METHODS = ("lpt", "alpt", "qr_lpt", "qr_alpt", "mixed")
+LM_ENGINE_METHODS = ("lpt", "alpt")
+TRAINER_METHODS = ("lpt", "alpt", "qr_lpt", "mixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceTarget:
+    name: str
+    build: Callable[[], "Traced"]
+    checks: tuple[str, ...]
+
+
+@dataclasses.dataclass
+class Traced:
+    closed: object                     # jax ClosedJaxpr
+    forbidden: frozenset = frozenset()        # full-table float geometries
+    packed_forbidden: frozenset = frozenset()  # packed alloc geometries
+
+
+# ---------------------------------------------------------------- fixtures
+
+
+def _spec_kwargs(method: str) -> dict:
+    kw: dict = {}
+    if method.startswith("qr"):
+        kw["hash_compression"] = 4.0
+    if method == "mixed":
+        kw["field_cards"] = CTR_CARDS
+        kw["field_bits"] = (8, 4, 8, 2)
+    return kw
+
+
+def _ctr_trainer(method: str, *, bits=8, packed=False, use_kernels=False):
+    from repro import methods
+    from repro.models.ctr import DCNConfig
+    from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+
+    spec = methods.EmbeddingSpec(
+        method=method, n=sum(CTR_CARDS), d=8, bits=bits, init_scale=0.05,
+        packed=packed, use_kernels=use_kernels, **_spec_kwargs(method),
+    )
+    dcn = DCNConfig(n_fields=len(CTR_CARDS), emb_dim=8, cross_depth=1,
+                    mlp_widths=(16,))
+    trainer = CTRTrainer(TrainerConfig(spec=spec, model="dcn", dcn=dcn))
+    return trainer, trainer.init_state(), spec
+
+
+def _table_shapes(state_or_table) -> tuple[frozenset, frozenset]:
+    """(float-forbidden, packed-forbidden) geometries, introspected.
+
+    Walks the pytree for every code container: each contributes its
+    *logical* allocation shape to the float-forbidden set; packed
+    (sub-byte) containers additionally contribute it to the
+    packed-forbidden set (a full-table logical-int8 image of a packed
+    store is the containment leak).
+    """
+    import jax
+    import numpy as np
+    from repro.core import codestore
+
+    forbidden: set = set()
+    packed: set = set()
+
+    def visit(x):
+        if isinstance(x, codestore.CodeStore):
+            forbidden.add(tuple(x.shape))
+            if x.packed:
+                packed.add(tuple(x.shape))
+        elif hasattr(x, "dtype") and hasattr(x, "shape"):
+            if getattr(x, "dtype", None) == np.int8 and len(x.shape) == 2:
+                forbidden.add(tuple(x.shape))
+        return x
+
+    jax.tree_util.tree_map(
+        visit, state_or_table,
+        is_leaf=lambda x: isinstance(x, codestore.CodeStore),
+    )
+    return frozenset(forbidden), frozenset(packed)
+
+
+def _with_logical(shapes: frozenset, n: int, d: int) -> frozenset:
+    return shapes | {(n, d)}
+
+
+# ---------------------------------------------------------------- builders
+
+
+def _build_engine_ctr(method: str) -> Traced:
+    import jax
+    import jax.numpy as jnp
+    from repro.serving.ctr import CTREngine
+
+    # mixed serves genuinely packed sub-byte groups (4/2-bit fields), so its
+    # Engine trace also carries the packed-containment contract.
+    trainer, state, spec = _ctr_trainer(method, packed=(method == "mixed"))
+    engine = CTREngine.from_state(state, trainer.cfg, batch=3)
+    ids = jnp.zeros((3, len(CTR_CARDS)), jnp.int32)
+    closed = jax.make_jaxpr(engine._score)(
+        engine.table, engine.dense_params, ids
+    )
+    forbidden, packed = _table_shapes(engine.table)
+    return Traced(closed, _with_logical(forbidden, spec.n, spec.d), packed)
+
+
+def _build_engine_lm(method: str) -> Traced:
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.serving.lm import LMEngine
+    from repro.training import lm_trainer
+
+    cfg = dc.replace(configs.smoke_config("smollm-135m"),
+                     embedding_method=method)
+    tcfg = lm_trainer.LMTrainerConfig()
+    state = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    engine = LMEngine.from_state(state, cfg, tcfg, batch=2, max_len=8)
+    tok = jnp.zeros((2,), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    closed = jax.make_jaxpr(
+        lambda p, t, tk, c, ps: engine._decode(p, t, tk, c, ps)
+    )(engine.params, engine.table, tok, engine._cache, pos)
+    spec = lm_trainer.embedding_spec_of(cfg, tcfg)
+    forbidden, packed = _table_shapes(engine.table)
+    return Traced(closed, _with_logical(forbidden, spec.n, spec.d), packed)
+
+
+def _build_train_ctr(method: str) -> Traced:
+    import jax
+    import jax.numpy as jnp
+
+    sub_byte = method in ("lpt", "alpt")
+    trainer, state, spec = _ctr_trainer(
+        method, bits=4 if sub_byte else 8,
+        packed=sub_byte or method == "mixed",
+    )
+    ids = jnp.zeros((16, len(CTR_CARDS)), jnp.int32)
+    labels = jnp.zeros((16,), jnp.float32)
+    closed = jax.make_jaxpr(lambda s, i, y: trainer._train_step(s, i, y))(
+        state, ids, labels
+    )
+    _, packed_shapes = _table_shapes(state)
+    return Traced(closed, frozenset(), packed_shapes)
+
+
+def _build_train_lm_dense() -> Traced:
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.training import lm_trainer
+
+    cfg = configs.smoke_config("smollm-135m")
+    tcfg = lm_trainer.LMTrainerConfig()
+    state = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step = lm_trainer.make_train_step(cfg, tcfg)
+    tokens = jnp.zeros((2, 8), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    closed = jax.make_jaxpr(lambda s, b: step(s, b))(state, batch)
+    _, packed_shapes = _table_shapes(state)
+    return Traced(closed, frozenset(), packed_shapes)
+
+
+def _build_collective(bits: int) -> Traced:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    import repro.dist  # noqa: F401  (installs the shard_map compat adapter)
+    from repro.dist import collectives
+
+    mesh = jax.make_mesh((1,), ("data",))
+
+    def sync(g, key):
+        return collectives.compressed_psum_local(g, "data", key, bits=bits)
+
+    fn = jax.shard_map(sync, mesh=mesh, in_specs=(P(), P()),
+                       out_specs=P(), check_vma=False)
+    closed = jax.make_jaxpr(fn)(
+        jnp.zeros((64,), jnp.float32), jax.random.PRNGKey(0)
+    )
+    return Traced(closed)
+
+
+# ---------------------------------------------------------------- registry
+
+
+def all_targets() -> list[TraceTarget]:
+    targets: list[TraceTarget] = []
+    for m in ENGINE_METHODS:
+        targets.append(TraceTarget(
+            name=f"engine-ctr/{m}",
+            build=lambda m=m: _build_engine_ctr(m),
+            checks=("no-f32-table", "codes-dequant-only",
+                    "packed-containment"),
+        ))
+    for m in LM_ENGINE_METHODS:
+        targets.append(TraceTarget(
+            name=f"engine-lm/{m}",
+            build=lambda m=m: _build_engine_lm(m),
+            checks=("no-f32-table", "codes-dequant-only",
+                    "packed-containment"),
+        ))
+    for m in TRAINER_METHODS:
+        targets.append(TraceTarget(
+            name=f"train-ctr-fused/{m}",
+            build=lambda m=m: _build_train_ctr(m),
+            checks=("codes-dequant-only", "packed-containment"),
+        ))
+    targets.append(TraceTarget(
+        name="train-lm-dense/lpt",
+        build=_build_train_lm_dense,
+        checks=("codes-dequant-only", "packed-containment"),
+    ))
+    for bits in (4, 2):
+        targets.append(TraceTarget(
+            name=f"collective-sync/bits{bits}",
+            build=lambda bits=bits: _build_collective(bits),
+            checks=("packed-wire",),
+        ))
+    return targets
+
+
+def run_jaxpr_checks(names: list[str] | None = None) -> list[Finding]:
+    """Build every (selected) target and run its checks.
+
+    A target that fails to *build* is itself a finding — the analysis gate
+    must not silently skip a contract because a fixture broke.
+    """
+    from repro.analysis import jaxpr as jx
+
+    out: list[Finding] = []
+    for target in all_targets():
+        if names is not None and target.name not in names:
+            continue
+        try:
+            traced = target.build()
+        except Exception as e:  # noqa: BLE001 — converted to a finding
+            out.append(Finding(
+                rule="jaxpr-trace-error", path=f"<target:{target.name}>",
+                line=0,
+                message=f"trace target failed to build: {type(e).__name__}: "
+                f"{e}",
+                hint="the analysis gate cannot skip a broken fixture — fix "
+                "the target in analysis/jaxpr/targets.py",
+            ))
+            continue
+        for check in target.checks:
+            if check == "no-f32-table":
+                out.extend(jx.check_no_f32_table(
+                    traced.closed, traced.forbidden, target.name))
+            elif check == "codes-dequant-only":
+                out.extend(jx.check_codes_reach_float_via_dequant(
+                    traced.closed, target.name))
+            elif check == "packed-containment":
+                out.extend(jx.check_packed_stays_packed(
+                    traced.closed, traced.packed_forbidden, target.name))
+            elif check == "packed-wire":
+                out.extend(jx.check_wire_stays_packed(
+                    traced.closed, target.name))
+    return out

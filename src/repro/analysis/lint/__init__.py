@@ -1,0 +1,224 @@
+"""Visitor-based AST lint framework.
+
+A :class:`Rule` owns a name, a fix hint, and path ``include``/``exclude``
+globs (matched against the repo-relative posix path — the per-rule
+allowlist).  :func:`run_lint` parses each file once into a shared
+:class:`Source` (AST + resolved import aliases + parent links) and hands it
+to every applicable rule.
+
+The framework resolves import aliases up front so rules match *semantics*,
+not spellings: ``import jax.numpy as jnp`` and ``from jax import numpy as
+xnp`` both make ``xnp.int8`` resolve to ``jax.numpy.int8``.  That kills the
+aliased-import false-negative class the old regex guards had, and parsing
+(rather than line-scanning) kills the false positives from strings,
+comments and docstrings.
+
+Adding a rule: subclass :class:`Rule`, implement ``check(source)``
+returning :class:`~repro.analysis.findings.Finding` records, decorate with
+:func:`register`.  See :mod:`repro.analysis.lint.rules` for the catalog.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import pathlib
+
+from repro.analysis.findings import Finding
+
+# repo root = parents[4] of .../src/repro/analysis/lint/__init__.py
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[4]
+DEFAULT_LINT_ROOTS = ("src/repro", "benchmarks")
+
+
+@dataclasses.dataclass
+class Source:
+    """One parsed file + the cross-rule derived indices."""
+
+    path: pathlib.Path
+    rel: str                       # repo-relative posix path
+    text: str
+    tree: ast.Module
+    aliases: dict[str, str]        # local name -> dotted module/object path
+
+    @classmethod
+    def parse(cls, path: pathlib.Path, root: pathlib.Path = REPO_ROOT
+              ) -> "Source":
+        text = path.read_text()
+        tree = ast.parse(text, filename=str(path))
+        _link_parents(tree)
+        rel = path.resolve().relative_to(root).as_posix()
+        return cls(path=path, rel=rel, text=text, tree=tree,
+                   aliases=_import_aliases(tree))
+
+    @classmethod
+    def from_text(cls, text: str, rel: str = "<snippet>.py") -> "Source":
+        """Parse an in-memory snippet (fixture tests use this)."""
+        tree = ast.parse(text)
+        _link_parents(tree)
+        return cls(path=pathlib.Path(rel), rel=rel, text=text, tree=tree,
+                   aliases=_import_aliases(tree))
+
+    # -- semantic helpers shared by rules ---------------------------------
+
+    def dotted(self, node: ast.AST) -> str | None:
+        """Resolve ``Name``/``Attribute`` chains through import aliases.
+
+        ``jnp.int8`` -> ``jax.numpy.int8`` when the file did
+        ``import jax.numpy as jnp``; unresolvable heads keep their local
+        spelling (``self.foo`` -> ``self.foo``).
+        """
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        head = self.aliases.get(node.id, node.id)
+        return ".".join([head, *reversed(parts)]) if parts else head
+
+    def is_module_alias(self, name: str) -> bool:
+        """True when ``name`` is bound by a plain module import."""
+        return name in self.aliases and name in self._module_names
+
+    @property
+    def _module_names(self) -> set[str]:
+        names = getattr(self, "_module_names_cache", None)
+        if names is None:
+            names = set()
+            for node in ast.walk(self.tree):
+                if isinstance(node, ast.Import):
+                    for a in node.names:
+                        names.add(a.asname or a.name.split(".", 1)[0])
+                elif isinstance(node, ast.ImportFrom) and node.module:
+                    # `from jax import numpy as jnp` binds a module too;
+                    # we cannot tell modules from objects without importing,
+                    # so treat from-imports of known module tails as modules.
+                    for a in node.names:
+                        dotted = f"{node.module}.{a.name}"
+                        if dotted in _KNOWN_MODULES or a.name in (
+                                "numpy", "random", "lax", "linalg"):
+                            names.add(a.asname or a.name)
+            self._module_names_cache = names
+        return names
+
+
+_KNOWN_MODULES = {
+    "jax.numpy", "jax.random", "jax.lax", "jax.nn", "numpy.random",
+}
+
+
+def _import_aliases(tree: ast.Module) -> dict[str, str]:
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    aliases[a.name.split(".", 1)[0]] = a.name.split(".", 1)[0]
+        elif isinstance(node, ast.ImportFrom):
+            if node.level or not node.module:
+                continue  # relative imports stay local spellings
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _link_parents(tree: ast.AST) -> None:
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._lint_parent = parent  # type: ignore[attr-defined]
+
+
+def parent(node: ast.AST) -> ast.AST | None:
+    return getattr(node, "_lint_parent", None)
+
+
+def ancestors(node: ast.AST):
+    cur = parent(node)
+    while cur is not None:
+        yield cur
+        cur = parent(cur)
+
+
+class Rule:
+    """Base class: one contract, one ``check``.
+
+    ``include``/``exclude`` are fnmatch globs over the repo-relative posix
+    path; an empty ``include`` means every linted file.  ``exclude`` is the
+    per-rule allowlist — the modules that legitimately own the pattern the
+    rule forbids elsewhere.
+    """
+
+    name: str = ""
+    hint: str = ""
+    include: tuple[str, ...] = ()
+    exclude: tuple[str, ...] = ()
+
+    def applies_to(self, rel: str) -> bool:
+        if self.include and not any(
+                fnmatch.fnmatch(rel, g) for g in self.include):
+            return False
+        return not any(fnmatch.fnmatch(rel, g) for g in self.exclude)
+
+    def check(self, source: Source) -> list[Finding]:
+        raise NotImplementedError
+
+    def finding(self, source: Source, node: ast.AST, message: str,
+                hint: str | None = None) -> Finding:
+        return Finding(rule=self.name, path=source.rel,
+                       line=getattr(node, "lineno", 0), message=message,
+                       hint=self.hint if hint is None else hint)
+
+
+RULES: dict[str, Rule] = {}
+
+
+def register(cls: type[Rule]) -> type[Rule]:
+    rule = cls()
+    assert rule.name and rule.name not in RULES, rule.name
+    RULES[rule.name] = rule
+    return cls
+
+
+def all_rules() -> list[Rule]:
+    from repro.analysis.lint import rules as _rules  # noqa: F401 (registers)
+    return list(RULES.values())
+
+
+def lint_files(root: pathlib.Path = REPO_ROOT,
+               roots: tuple[str, ...] = DEFAULT_LINT_ROOTS
+               ) -> list[pathlib.Path]:
+    files: list[pathlib.Path] = []
+    for sub in roots:
+        base = root / sub
+        if base.exists():
+            files.extend(sorted(base.rglob("*.py")))
+    return files
+
+
+def run_lint(paths: list[pathlib.Path] | None = None,
+             rules: list[Rule] | None = None,
+             root: pathlib.Path = REPO_ROOT) -> list[Finding]:
+    rules = all_rules() if rules is None else rules
+    paths = lint_files(root) if paths is None else paths
+    findings: list[Finding] = []
+    for path in paths:
+        src = Source.parse(path, root)
+        for rule in rules:
+            if rule.applies_to(src.rel):
+                findings.extend(rule.check(src))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def check_snippet(text: str, rule_name: str, rel: str = "src/repro/x.py"
+                  ) -> list[Finding]:
+    """Run one rule over an in-memory snippet (test/fixture entry point)."""
+    from repro.analysis.lint import rules as _rules  # noqa: F401
+    src = Source.from_text(text, rel)
+    rule = RULES[rule_name]
+    if not rule.applies_to(rel):
+        return []
+    return rule.check(src)

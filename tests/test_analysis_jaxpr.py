@@ -1,0 +1,214 @@
+"""Unit tests for the jaxpr invariant checkers on toy functions.
+
+Each checker gets a deliberate violation (fires) and a contract-abiding
+twin (clean), traced with jax.make_jaxpr on tiny shapes — no Engine or
+trainer fixtures, so these run in milliseconds and pin the checker
+semantics independently of the real trace targets.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import jaxpr as jx
+
+VOCAB, DIM = 32, 8
+TABLE = (VOCAB, DIM)
+
+
+def _codes():
+    return jnp.zeros(TABLE, jnp.int8)
+
+
+# ---------------------------------------------------------- no-f32-table
+
+
+class TestNoF32Table:
+    def test_full_table_dequant_fires(self):
+        def bad(codes, step, ids):
+            table = codes.astype(jnp.float32) * step  # whole-table image
+            return table[ids]
+
+        closed = jax.make_jaxpr(bad)(
+            _codes(), jnp.float32(0.1), jnp.zeros((3,), jnp.int32))
+        found = jx.check_no_f32_table(closed, {TABLE}, "toy")
+        assert found and found[0].rule == "jaxpr-no-f32-table"
+
+    def test_per_row_dequant_is_clean(self):
+        def good(codes, step, ids):
+            rows = jnp.take(codes, ids, axis=0)  # gather first
+            return rows.astype(jnp.float32) * step
+
+        closed = jax.make_jaxpr(good)(
+            _codes(), jnp.float32(0.1), jnp.zeros((3,), jnp.int32))
+        assert jx.check_no_f32_table(closed, {TABLE}, "toy") == []
+
+    def test_int8_table_shape_not_flagged(self):
+        # The resident int8 table itself is the contract, not a violation.
+        def ident(codes):
+            return codes + jnp.int8(0)
+
+        closed = jax.make_jaxpr(ident)(_codes())
+        assert jx.check_no_f32_table(closed, {TABLE}, "toy") == []
+
+    def test_recurses_into_pjit_subjaxpr(self):
+        @jax.jit
+        def inner(codes, step):
+            return codes.astype(jnp.float32) * step
+
+        def outer(codes, step):
+            return inner(codes, step).sum()
+
+        closed = jax.make_jaxpr(outer)(_codes(), jnp.float32(0.1))
+        found = jx.check_no_f32_table(closed, {TABLE}, "toy")
+        assert found, "checker must walk pjit sub-jaxprs"
+
+
+# ---------------------------------------------------- codes-dequant-only
+
+
+class TestCodesDequantOnly:
+    def test_scaled_widen_is_clean(self):
+        def good(rows, step):
+            return rows.astype(jnp.float32) * step
+
+        closed = jax.make_jaxpr(good)(
+            jnp.zeros((3, DIM), jnp.int8), jnp.float32(0.1))
+        assert jx.check_codes_reach_float_via_dequant(closed, "toy") == []
+
+    def test_unscaled_widen_fires(self):
+        def bad(rows, bias):
+            return rows.astype(jnp.float32) + bias  # widen w/o scale
+
+        closed = jax.make_jaxpr(bad)(
+            jnp.zeros((3, DIM), jnp.int8), jnp.zeros((DIM,), jnp.float32))
+        found = jx.check_codes_reach_float_via_dequant(closed, "toy")
+        assert found and "without a scale multiply" in found[0].message
+
+    def test_uint8_to_float_always_fires(self):
+        def bad(packed, step):
+            return packed.astype(jnp.float32) * step  # bytes are not codes
+
+        closed = jax.make_jaxpr(bad)(
+            jnp.zeros((3, DIM // 2), jnp.uint8), jnp.float32(0.1))
+        found = jx.check_codes_reach_float_via_dequant(closed, "toy")
+        assert found and "uint8" in found[0].message
+
+    def test_shape_ops_between_widen_and_mul_are_clean(self):
+        def good(rows, step):
+            f = rows.astype(jnp.float32)
+            return f.reshape(-1) * step  # reshape passes through
+
+        closed = jax.make_jaxpr(good)(
+            jnp.zeros((3, DIM), jnp.int8), jnp.float32(0.1))
+        assert jx.check_codes_reach_float_via_dequant(closed, "toy") == []
+
+
+# ------------------------------------------------------ packed-containment
+
+
+class TestPackedContainment:
+    def test_whole_table_unpack_fires(self):
+        from repro.core import codestore
+
+        packed = codestore.pack_codes(jnp.zeros(TABLE, jnp.int8), 4)
+
+        def bad(p):
+            logical = codestore.unpack_codes(p, 4, DIM)  # [VOCAB, DIM] int8
+            return logical.sum()
+
+        closed = jax.make_jaxpr(bad)(packed)
+        found = jx.check_packed_stays_packed(closed, {TABLE}, "toy")
+        assert found and found[0].rule == "jaxpr-packed-containment"
+
+    def test_per_row_unpack_is_clean(self):
+        from repro.core import codestore
+
+        packed = codestore.pack_codes(jnp.zeros(TABLE, jnp.int8), 4)
+
+        def good(p, ids):
+            rows = jnp.take(p, ids, axis=0)  # gather packed rows
+            return codestore.unpack_codes(rows, 4, DIM).sum()
+
+        closed = jax.make_jaxpr(good)(packed, jnp.zeros((3,), jnp.int32))
+        assert jx.check_packed_stays_packed(closed, {TABLE}, "toy") == []
+
+
+# ----------------------------------------------------------- packed-wire
+
+
+class TestPackedWire:
+    def _trace_psum(self, fn, *args):
+        from jax.sharding import PartitionSpec as P
+
+        import repro.dist  # noqa: F401 (shard_map compat adapter)
+
+        mesh = jax.make_mesh((1,), ("data",))
+        specs = tuple(P() for _ in args)
+        mapped = jax.shard_map(fn, mesh=mesh, in_specs=specs,
+                               out_specs=P(), check_vma=False)
+        return jax.make_jaxpr(mapped)(*args)
+
+    def test_wide_payload_fires(self):
+        def bad(g):
+            return jax.lax.psum(g, "data")  # f32 payload on the wire
+
+        closed = self._trace_psum(bad, jnp.zeros((64,), jnp.float32))
+        found = jx.check_wire_stays_packed(closed, "toy")
+        assert found and found[0].rule == "jaxpr-packed-wire"
+
+    def test_packed_payload_is_clean(self):
+        def wire_only(p):
+            g = jax.lax.all_gather(p, "data")  # uint8 wire
+            return g.astype(jnp.int32).sum(0)
+
+        closed = self._trace_psum(wire_only, jnp.zeros((32,), jnp.uint8))
+        assert jx.check_wire_stays_packed(closed, "toy") == []
+
+    def test_scalar_absmax_exempt(self):
+        def good(x):
+            return jax.lax.pmax(x, "data") if hasattr(jax.lax, "pmax") \
+                else jax.lax.psum(x, "data")
+
+        closed = self._trace_psum(good, jnp.float32(1.0))
+        assert jx.check_wire_stays_packed(closed, "toy") == []
+
+
+# -------------------------------------------------------------- walk_eqns
+
+
+def test_walk_eqns_covers_nested_scan():
+    def stepper(carry, x):
+        return carry + x * 2.0, carry
+
+    def outer(xs):
+        out, _ = jax.lax.scan(stepper, jnp.float32(0.0), xs)
+        return out
+
+    closed = jax.make_jaxpr(outer)(jnp.zeros((4,), jnp.float32))
+    prims = {e.primitive.name for e in jx.walk_eqns(closed)}
+    assert "scan" in prims and "mul" in prims  # mul lives in the sub-jaxpr
+
+
+# ------------------------------------------------------------ trace targets
+
+
+def test_target_registry_names_unique_and_complete():
+    from repro.analysis.jaxpr.targets import all_targets
+    names = [t.name for t in all_targets()]
+    assert len(names) == len(set(names))
+    for m in ("lpt", "alpt", "qr_lpt", "qr_alpt", "mixed"):
+        assert f"engine-ctr/{m}" in names
+    assert "collective-sync/bits4" in names
+    assert "collective-sync/bits2" in names
+
+
+@pytest.mark.slow
+def test_engine_ctr_targets_hold_no_f32_table():
+    """The acceptance-criterion check: every registered integer-table
+    method's Engine step is provably free of full-table float
+    intermediates.  Slow (builds real engines); the CLI runs the full set.
+    """
+    from repro.analysis.jaxpr.targets import run_jaxpr_checks
+    names = [f"engine-ctr/{m}"
+             for m in ("lpt", "alpt", "qr_lpt", "qr_alpt", "mixed")]
+    assert run_jaxpr_checks(names=names) == []

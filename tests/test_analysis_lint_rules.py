@@ -1,0 +1,459 @@
+"""Fixture tests for the AST lint rules in repro.analysis.lint.rules.
+
+Each rule gets positive snippets (the violation fires, at the right line)
+and negative snippets (clean code — including the regex-era false-positive
+classes this engine exists to eliminate: docstrings, comments, aliased
+imports, keyword-dtype variants).
+"""
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import check_snippet
+
+
+def hits(text, rule, rel="src/repro/x.py"):
+    return check_snippet(textwrap.dedent(text), rule, rel=rel)
+
+
+# ------------------------------------------------------- no-string-dispatch
+
+
+class TestNoStringDispatch:
+    def test_eq_comparison_fires(self):
+        found = hits('if spec.method == "lpt":\n    pass\n',
+                     "no-string-dispatch")
+        assert len(found) == 1 and found[0].line == 1
+
+    def test_membership_fires(self):
+        found = hits('ok = cfg.embedding_method in ("lpt", "alpt")\n',
+                     "no-string-dispatch")
+        assert len(found) == 1
+
+    def test_match_statement_fires(self):
+        found = hits(
+            '''
+            match spec.method:
+                case "lpt":
+                    pass
+                case _:
+                    pass
+            ''',
+            "no-string-dispatch")
+        assert len(found) == 1
+
+    def test_startswith_fires(self):
+        found = hits('if spec.method.startswith("qr"):\n    pass\n',
+                     "no-string-dispatch")
+        assert len(found) == 1
+
+    def test_methods_package_exempt(self):
+        found = hits('if spec.method == "lpt":\n    pass\n',
+                     "no-string-dispatch",
+                     rel="src/repro/methods/registry.py")
+        assert found == []
+
+    def test_docstring_mention_is_clean(self):
+        # The regex-era false positive: prose that *mentions* dispatch.
+        found = hits(
+            '''
+            def f():
+                """Removed every `spec.method == "lpt"` chain."""
+                return 1
+            ''',
+            "no-string-dispatch")
+        assert found == []
+
+    def test_string_literal_is_clean(self):
+        found = hits(
+            'msg = "do not write cfg.embedding_method in (\'lpt\',)"\n',
+            "no-string-dispatch")
+        assert found == []
+
+    def test_unrelated_attr_comparison_is_clean(self):
+        found = hits('if spec.model == "dcn":\n    pass\n',
+                     "no-string-dispatch")
+        assert found == []
+
+
+# -------------------------------------------------------- no-raw-code-casts
+
+
+class TestNoRawCodeCasts:
+    def test_astype_int8_fires(self):
+        found = hits(
+            'import jax.numpy as jnp\ncodes = x.astype(jnp.int8)\n',
+            "no-raw-code-casts")
+        assert len(found) == 1 and found[0].line == 2
+
+    def test_astype_uint8_fires(self):
+        found = hits(
+            'import jax.numpy as jnp\ncodes = x.astype(jnp.uint8)\n',
+            "no-raw-code-casts")
+        assert len(found) == 1
+
+    def test_aliased_import_fires(self):
+        # Regex false negative: `import jax.numpy as np` hid the cast.
+        found = hits(
+            'import jax.numpy as np\ncodes = x.astype(np.int8)\n',
+            "no-raw-code-casts")
+        assert len(found) == 1
+
+    def test_asarray_dtype_kwarg_fires(self):
+        found = hits(
+            'import jax.numpy as jnp\nc = jnp.asarray(x, dtype=jnp.int8)\n',
+            "no-raw-code-casts")
+        assert len(found) == 1
+
+    def test_convert_element_type_fires(self):
+        found = hits(
+            'import jax\nimport jax.numpy as jnp\n'
+            'c = jax.lax.convert_element_type(x, jnp.int8)\n',
+            "no-raw-code-casts")
+        assert len(found) == 1
+
+    def test_string_dtype_fires(self):
+        found = hits('codes = x.astype("int8")\n', "no-raw-code-casts")
+        assert len(found) == 1
+
+    def test_float_cast_is_clean(self):
+        found = hits(
+            'import jax.numpy as jnp\nw = x.astype(jnp.float32)\n',
+            "no-raw-code-casts")
+        assert found == []
+
+    def test_comment_mention_is_clean(self):
+        found = hits('# the old code did x.astype(jnp.int8)\nw = x\n',
+                     "no-raw-code-casts")
+        assert found == []
+
+    def test_codestore_exempt(self):
+        found = hits(
+            'import jax.numpy as jnp\ncodes = x.astype(jnp.int8)\n',
+            "no-raw-code-casts", rel="src/repro/core/codestore.py")
+        assert found == []
+
+    def test_kernels_exempt(self):
+        found = hits(
+            'import jax.numpy as jnp\ncodes = x.astype(jnp.int8)\n',
+            "no-raw-code-casts", rel="src/repro/kernels/ops.py")
+        assert found == []
+
+
+# -------------------------------------------------- no-direct-storage-access
+
+
+class TestNoDirectStorageAccess:
+    def test_container_unpack_fires(self):
+        found = hits('codes = store.unpack()\n', "no-direct-storage-access")
+        assert len(found) == 1
+
+    def test_container_take_fires(self):
+        found = hits('rows = table.codes.take(ids)\n',
+                     "no-direct-storage-access")
+        assert len(found) == 1
+
+    def test_pack_codes_fires(self):
+        found = hits(
+            'from repro.core.codestore import pack_codes\n'
+            'p = pack_codes(codes, 4)\n',
+            "no-direct-storage-access")
+        assert len(found) == 1
+
+    def test_module_receiver_is_clean(self):
+        # The seam itself: import-bound receivers are modules, not
+        # containers — rowstore.set_rows(...) is the blessed path.
+        found = hits(
+            'from repro.storage import base as rowstore\n'
+            'store = rowstore.set_rows(store, ids, rows)\n',
+            "no-direct-storage-access")
+        assert found == []
+
+    def test_self_receiver_is_clean(self):
+        found = hits(
+            'class C:\n'
+            '    def f(self, ids):\n'
+            '        return self.take(ids)\n',
+            "no-direct-storage-access")
+        assert found == []
+
+    def test_take_with_axis_kwarg_is_clean(self):
+        # numpy-style take(ids, axis=0) is an ndarray take, not the seam.
+        found = hits('rows = arr.take(ids, axis=0)\n',
+                     "no-direct-storage-access")
+        assert found == []
+
+    def test_storage_layer_exempt(self):
+        found = hits('codes = store.unpack()\n', "no-direct-storage-access",
+                     rel="src/repro/storage/tiered.py")
+        assert found == []
+
+    def test_collectives_pack_exempt(self):
+        found = hits(
+            'from repro.core.codestore import pack_codes\n'
+            'p = pack_codes(codes, 4)\n',
+            "no-direct-storage-access",
+            rel="src/repro/dist/collectives.py")
+        assert found == []
+
+
+# ---------------------------------------------------------- rng-key-discipline
+
+
+class TestRngKeyDiscipline:
+    def test_double_consume_fires(self):
+        found = hits(
+            '''
+            import jax
+            def f(key, shape):
+                a = jax.random.normal(key, shape)
+                b = jax.random.uniform(key, shape)
+                return a + b
+            ''',
+            "rng-key-discipline")
+        assert len(found) == 1
+
+    def test_split_then_use_is_clean(self):
+        found = hits(
+            '''
+            import jax
+            def f(key, shape):
+                k1, k2 = jax.random.split(key)
+                a = jax.random.normal(k1, shape)
+                b = jax.random.uniform(k2, shape)
+                return a + b
+            ''',
+            "rng-key-discipline")
+        assert found == []
+
+    def test_fold_in_is_nonconsuming(self):
+        found = hits(
+            '''
+            import jax
+            def f(key, shape):
+                a = jax.random.normal(jax.random.fold_in(key, 0), shape)
+                b = jax.random.normal(jax.random.fold_in(key, 1), shape)
+                return a + b
+            ''',
+            "rng-key-discipline")
+        assert found == []
+
+    def test_branch_exclusive_use_is_clean(self):
+        found = hits(
+            '''
+            import jax
+            def f(key, shape, flag):
+                if flag:
+                    return jax.random.normal(key, shape)
+                return jax.random.uniform(key, shape)
+            ''',
+            "rng-key-discipline")
+        assert found == []
+
+    def test_loop_reuse_fires(self):
+        found = hits(
+            '''
+            import jax
+            def f(key, shape, xs):
+                out = []
+                for x in xs:
+                    out.append(jax.random.normal(key, shape))
+                return out
+            ''',
+            "rng-key-discipline")
+        assert len(found) == 1
+
+    def test_reassignment_resets_count(self):
+        found = hits(
+            '''
+            import jax
+            def f(key, shape):
+                a = jax.random.normal(key, shape)
+                key = jax.random.fold_in(key, 1)
+                b = jax.random.normal(key, shape)
+                return a + b
+            ''',
+            "rng-key-discipline")
+        assert found == []
+
+
+# ----------------------------------------------------------- no-silent-fallback
+
+
+class TestNoSilentFallback:
+    REL = "src/repro/kernels/ops.py"
+
+    def test_unnoted_fallback_fires(self):
+        found = hits(
+            '''
+            def fused_gather(codes, ids):
+                if codes.ndim != 2:
+                    return _ref_gather(codes, ids)
+                return _pallas_gather(codes, ids)
+            ''',
+            "no-silent-fallback", rel=self.REL)
+        assert len(found) == 1
+
+    def test_noted_fallback_is_clean(self):
+        found = hits(
+            '''
+            def fused_gather(codes, ids):
+                if codes.ndim != 2:
+                    _note_fallback("gather", "ndim")
+                    return _ref_gather(codes, ids)
+                return _pallas_gather(codes, ids)
+            ''',
+            "no-silent-fallback", rel=self.REL)
+        assert found == []
+
+    def test_use_kernel_switch_is_clean(self):
+        # The explicit off-switch is configuration, not a fallback.
+        found = hits(
+            '''
+            def fused_gather(codes, ids, use_kernel=True):
+                if not use_kernel:
+                    return _ref_gather(codes, ids)
+                return _pallas_gather(codes, ids)
+            ''',
+            "no-silent-fallback", rel=self.REL)
+        assert found == []
+
+    def test_ref_calling_ref_is_clean(self):
+        found = hits(
+            '''
+            def _ref_gather_sum(codes, ids):
+                return _ref_gather(codes, ids).sum()
+            ''',
+            "no-silent-fallback", rel=self.REL)
+        assert found == []
+
+    def test_outside_kernels_not_checked(self):
+        found = hits(
+            '''
+            def fused_gather(codes, ids):
+                return _ref_gather(codes, ids)
+            ''',
+            "no-silent-fallback", rel="src/repro/core/lpt.py")
+        assert found == []
+
+
+# -------------------------------------------------------- no-unfenced-model-grad
+
+
+class TestNoUnfencedModelGrad:
+    REL = "src/repro/methods/lpt.py"
+
+    def test_direct_grad_invocation_fires(self):
+        found = hits(
+            '''
+            import jax
+            def step(params, batch):
+                g = jax.grad(loss)(params, batch)
+                return g
+            ''',
+            "no-unfenced-model-grad", rel=self.REL)
+        assert len(found) == 1
+
+    def test_value_and_grad_invocation_fires(self):
+        found = hits(
+            '''
+            import jax
+            def step(params, batch):
+                loss_val, g = jax.value_and_grad(loss)(params, batch)
+                return g
+            ''',
+            "no-unfenced-model-grad", rel=self.REL)
+        assert len(found) == 1
+
+    def test_fenced_grad_is_clean(self):
+        # Constructing the callable and handing it to fence_call is the
+        # contract — the fence invokes it.
+        found = hits(
+            '''
+            import jax
+            from repro.core import fence
+            def step(params, batch):
+                g = fence.fence_call(jax.grad(loss), params, batch)
+                return g
+            ''',
+            "no-unfenced-model-grad", rel=self.REL)
+        assert found == []
+
+    def test_dense_delta_grad_exempt(self):
+        found = hits(
+            '''
+            import jax
+            def dense_delta_grad(params, batch):
+                return jax.grad(loss)(params, batch)
+            ''',
+            "no-unfenced-model-grad", rel=self.REL)
+        assert found == []
+
+    def test_fence_module_exempt(self):
+        found = hits(
+            '''
+            import jax
+            def fence_call(fn, *args):
+                return jax.grad(fn)(*args)
+            ''',
+            "no-unfenced-model-grad", rel="src/repro/core/fence.py")
+        assert found == []
+
+
+# ------------------------------------------------------------- suppressions
+
+
+class TestSuppressions:
+    def test_line_scoped_suppression(self, tmp_path):
+        from repro.analysis.findings import Finding, load_suppressions
+        supp_file = tmp_path / "supp.txt"
+        supp_file.write_text(
+            "# reviewed\nno-raw-code-casts src/repro/x.py:3\n")
+        supp = load_suppressions(supp_file)
+        hit = Finding(rule="no-raw-code-casts", path="src/repro/x.py",
+                      line=3, message="m")
+        miss = Finding(rule="no-raw-code-casts", path="src/repro/x.py",
+                       line=9, message="m")
+        kept = supp.apply([hit, miss])
+        assert kept == [miss]
+        assert supp.unused() == []
+
+    def test_unused_entries_reported(self, tmp_path):
+        from repro.analysis.findings import load_suppressions
+        supp_file = tmp_path / "supp.txt"
+        supp_file.write_text("no-string-dispatch src/repro/never.py\n")
+        supp = load_suppressions(supp_file)
+        assert supp.apply([]) == []
+        assert len(supp.unused()) == 1
+
+    def test_glob_and_rule_wildcard(self, tmp_path):
+        from repro.analysis.findings import Finding, load_suppressions
+        supp_file = tmp_path / "supp.txt"
+        supp_file.write_text("* benchmarks/*.py\n")
+        supp = load_suppressions(supp_file)
+        f = Finding(rule="anything", path="benchmarks/kernel_bench.py",
+                    line=1, message="m")
+        assert supp.apply([f]) == []
+
+
+# ------------------------------------------------------------------ catalog
+
+
+def test_rule_catalog_complete():
+    from repro.analysis.lint import all_rules
+    names = {r.name for r in all_rules()}
+    assert names == {
+        "no-string-dispatch", "no-raw-code-casts",
+        "no-direct-storage-access", "rng-key-discipline",
+        "no-silent-fallback", "no-unfenced-model-grad",
+    }
+
+
+def test_repo_tree_is_clean():
+    """The shipped tree passes its own lint gate (modulo the reviewed
+    suppression file) — the property CI enforces."""
+    from repro.analysis.findings import load_suppressions
+    from repro.analysis.lint import REPO_ROOT, run_lint
+    supp = load_suppressions(REPO_ROOT / "analysis-suppressions.txt")
+    findings = supp.apply(run_lint())
+    assert findings == [], "\n".join(f.format() for f in findings)

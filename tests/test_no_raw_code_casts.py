@@ -1,44 +1,29 @@
-"""CI guard: no raw int8 code casts outside the code-container layers.
+"""CI guard: no raw int8/uint8 code casts outside the code-container layers.
 
 The packed-storage refactor made :mod:`repro.core.codestore` the single
 owner of the code-container layout — every consumer reads/writes codes
-through ``CodeStore`` / the either-type helpers (``logical_codes``,
-``take_rows``, ``set_rows``, ``where_rows``) or through the kernel wrappers,
-which unpack sub-byte tiles in VMEM.  A direct ``.astype(jnp.int8)`` on a
-code array anywhere else is how the old implicit one-byte-per-code layout
-creeps back in: it silently materializes an unpacked copy (4x the resident
-bytes at 2-bit) and skips the sign-extension rules the container owns.
+through ``CodeStore`` / the either-type helpers or through the kernel
+wrappers, which unpack sub-byte tiles in VMEM.  A direct
+``.astype(jnp.int8)`` on a code array anywhere else is how the old implicit
+one-byte-per-code layout creeps back in.
 
-Allowed layers: ``core/codestore.py`` (the container itself),
-``core/quant.py`` (the quantizer mints fresh codes), and ``kernels/``
-(in-VMEM unpack/repack inside the fused ops and their oracles).
+This test is a thin wrapper over the ``no-raw-code-casts`` AST rule in
+:mod:`repro.analysis.lint.rules`, which also catches the variants the old
+regex missed (aliased imports, ``jnp.asarray(..., dtype=...)``,
+``lax.convert_element_type``, ``.view``, uint8) without the regex's
+false positives on comments and strings.
 """
-import pathlib
-import re
-
-SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
-
-# The container layers that legitimately cast to the logical code dtype.
-EXEMPT = re.compile(r"^(core/codestore\.py|core/quant\.py|kernels/)")
-
-CAST = re.compile(r"\.astype\(\s*jnp\.int8\s*\)")
+from repro.analysis.findings import load_suppressions
+from repro.analysis.lint import REPO_ROOT, all_rules, run_lint
 
 
 def test_no_raw_int8_code_casts_outside_codestore():
-    offenders = []
-    for path in sorted(SRC.rglob("*.py")):
-        rel = path.relative_to(SRC).as_posix()
-        if EXEMPT.match(rel):
-            continue
-        for lineno, line in enumerate(path.read_text().splitlines(), 1):
-            if CAST.search(line):
-                offenders.append(
-                    f"{path.relative_to(SRC.parent.parent)}:{lineno}: "
-                    f"{line.strip()}"
-                )
-    assert not offenders, (
-        "raw .astype(jnp.int8) code cast found — go through "
-        "repro.core.codestore (CodeStore / pack_codes / unpack_codes / the "
-        "either-type helpers) so sub-byte tables stay packed:\n"
-        + "\n".join(offenders)
+    rule = next(r for r in all_rules() if r.name == "no-raw-code-casts")
+    supp = load_suppressions(REPO_ROOT / "analysis-suppressions.txt")
+    findings = supp.apply(run_lint(rules=[rule]))
+    assert not findings, (
+        "raw code-dtype cast found — go through repro.core.codestore "
+        "(CodeStore / pack_codes / unpack_codes / the either-type helpers) "
+        "so sub-byte tables stay packed:\n"
+        + "\n".join(f.format() for f in findings)
     )

@@ -3,38 +3,21 @@
 The registry redesign removed every ``spec.method == "lpt"`` /
 ``cfg.embedding_method in ("lpt", "alpt")`` chain from the trainers, the DP
 wrapper, sharding, serving, dry-run, and checkpointing.  This test keeps it
-that way: any attribute-qualified comparison of ``.method`` /
-``.embedding_method`` against string literals (equality or tuple membership)
-in ``src/repro`` outside ``repro/methods/`` fails the build with a pointer to
-the registry.
-
-(Bare local parameters named ``method`` inside repro/core — QAT variant,
-rounding mode — are algorithm knobs, not embedding-method dispatch, and are
-not attribute-qualified, so they do not match.)
+that way, as a thin wrapper over the ``no-string-dispatch`` AST rule in
+:mod:`repro.analysis.lint.rules` — the rule resolves real comparisons on the
+syntax tree, so docstrings, comments, and string literals that merely
+*mention* ``.method == "lpt"`` no longer trip it the way the old regex
+walker did.
 """
-import pathlib
-import re
-
-SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
-
-# `.method ==`, `.method !=`, `.method in (`, and the embedding_method twins,
-# when compared against a string literal / tuple of literals.
-DISPATCH = re.compile(
-    r"\.(?:embedding_)?method\s*(?:[=!]=\s*[\"']|in\s*\(\s*[\"'])"
-)
+from repro.analysis.lint import all_rules, run_lint
 
 
 def test_no_method_string_dispatch_outside_registry():
-    offenders = []
-    for path in sorted(SRC.rglob("*.py")):
-        if "methods" in path.relative_to(SRC).parts[:1]:
-            continue  # the registry implementations may name themselves
-        for lineno, line in enumerate(path.read_text().splitlines(), 1):
-            if DISPATCH.search(line):
-                offenders.append(f"{path.relative_to(SRC.parent.parent)}:{lineno}: {line.strip()}")
-    assert not offenders, (
+    rule = next(r for r in all_rules() if r.name == "no-string-dispatch")
+    findings = run_lint(rules=[rule])
+    assert not findings, (
         "embedding-method string dispatch found — use the repro.methods "
         "registry (methods.get(name) + capability flags like "
         "is_integer_table / has_learned_step) instead:\n"
-        + "\n".join(offenders)
+        + "\n".join(f.format() for f in findings)
     )
