@@ -30,7 +30,7 @@ if "JAX_PLATFORMS" not in _os.environ and not _tpu_plausible():
         import jax as _jax
 
         _jax.config.update("jax_platforms", "cpu")
-    except Exception:  # backend already initialized — leave it alone
-        pass
+    except (ImportError, RuntimeError, ValueError):
+        pass  # backend already initialized — leave it alone
 
 del _os

@@ -1,4 +1,4 @@
-"""The rule catalog: six AST rules holding the quantization contracts.
+"""The rule catalog: seven AST rules holding the repo's code contracts.
 
 Each rule documents the contract it holds, the allowlist (modules that
 legitimately own the forbidden pattern), and the regex-era failure modes it
@@ -645,3 +645,83 @@ class NoUnfencedModelGrad(Rule):
                 source, node, "model backward invoked outside fence_call in a "
                 "fused path"))
         return out
+
+
+# --------------------------------------------------------------------------
+# no-silent-except
+
+
+_BROAD_EXC = {"Exception", "BaseException"}
+_LOG_ATTRS = {
+    "debug", "info", "warning", "warn", "error", "exception", "critical",
+    "log",
+}
+#: Calls that count as "ticking a counter": collection mutations the failure
+#: accounting paths use (e.g. CheckpointManager.corrupt_steps.append).
+_COUNTER_ATTRS = {"append", "add", "update", "merge"}
+
+
+@register
+class NoSilentExcept(Rule):
+    """Broad exception handlers must re-raise, log, or tick a counter.
+
+    The fault-injection harness (repro.faults) only proves recovery works
+    if failures are *visible*: a bare ``except:`` or ``except Exception:
+    pass`` swallows an injected fault and the chaos suite reads it as a
+    pass.  Narrow handlers (``except CorruptCheckpointError:``) stay legal —
+    catching a specific failure is a decision; catching everything silently
+    is a hole.  AST-level wins over a regex guard: ``except`` mentioned in
+    docstrings/comments never fires, and a handler that logs three
+    statements down is recognized.
+    """
+
+    name = "no-silent-except"
+    hint = ("re-raise, log through a logger/print, or tick a failure "
+            "counter — a silently swallowed broad except hides faults "
+            "from the recovery layer")
+
+    def check(self, source: Source) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(source.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not self._broad(node.type):
+                continue
+            if self._handled(node):
+                continue
+            what = ("bare `except:`" if node.type is None
+                    else f"`except {ast.unparse(node.type)}:`")
+            out.append(self.finding(
+                source, node,
+                f"{what} swallows the error without re-raise, log, or "
+                "counter"))
+        return out
+
+    @staticmethod
+    def _broad(t: ast.AST | None) -> bool:
+        if t is None:
+            return True
+        names = t.elts if isinstance(t, ast.Tuple) else [t]
+        for n in names:
+            if isinstance(n, ast.Name) and n.id in _BROAD_EXC:
+                return True
+            if isinstance(n, ast.Attribute) and n.attr in _BROAD_EXC:
+                return True
+        return False
+
+    @staticmethod
+    def _handled(handler: ast.ExceptHandler) -> bool:
+        for stmt in handler.body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Raise):
+                    return True
+                if isinstance(sub, ast.AugAssign):
+                    return True  # counter tick: `self.failures += 1`
+                if isinstance(sub, ast.Call):
+                    f = sub.func
+                    if isinstance(f, ast.Name) and f.id == "print":
+                        return True
+                    if isinstance(f, ast.Attribute) and f.attr in (
+                            _LOG_ATTRS | _COUNTER_ATTRS):
+                        return True
+        return False

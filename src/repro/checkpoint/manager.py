@@ -22,11 +22,24 @@ import os
 import pathlib
 import shutil
 import tempfile
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A committed artifact failed checksum/parse verification on restore."""
+
+
+def _fsync(path: pathlib.Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _tree_paths(tree) -> list[tuple[str, Any]]:
@@ -180,8 +193,12 @@ def save_pytree(tree, directory: str | os.PathLike, *, step: int,
         arr = np.asarray(jax.device_get(leaf))
         fname = f"leaf_{i:05d}.npy"
         np.save(tmp / fname, arr)
+        # Checksum the artifact bytes as written (header included), so any
+        # flipped bit on disk — data or header — fails restore verification.
+        crc = zlib.crc32((tmp / fname).read_bytes())
+        _fsync(tmp / fname)
         index.append({"path": path, "file": fname, "dtype": str(arr.dtype),
-                      "shape": list(arr.shape)})
+                      "shape": list(arr.shape), "crc32": crc})
     treedef = jax.tree_util.tree_structure(tree)
     manifest = {
         "step": step,
@@ -190,22 +207,31 @@ def save_pytree(tree, directory: str | os.PathLike, *, step: int,
         **(extra_meta or {}),
     }
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    _fsync(tmp / "manifest.json")
+    _fsync(tmp)
     if final.exists():
         shutil.rmtree(final)
     os.replace(tmp, final)  # atomic on POSIX
+    _fsync(directory)
     marker = directory / f"step_{step:09d}.COMMITTED"
     marker.touch()
+    _fsync(directory)
     return final
 
 
 def load_pytree(template, directory: str | os.PathLike, *, step: int | None = None,
-                shardings=None):
+                shardings=None, verify: bool = True):
     """Restore into the structure of ``template``; optionally re-shard.
 
     ``template`` provides the pytree structure (arrays or ShapeDtypeStructs);
     ``shardings`` (same structure, NamedSharding leaves) re-shards each leaf
     onto the current mesh — different device counts are fine because the save
     format is host-side full arrays.
+
+    ``verify`` checks each leaf artifact against the per-leaf crc32 the save
+    recorded and raises :class:`CorruptCheckpointError` on any mismatch or
+    unparseable artifact — a corrupted checkpoint is *refused*, never
+    half-loaded.  Manifests from before checksums simply skip verification.
     """
     directory = pathlib.Path(directory)
     if step is None:
@@ -220,7 +246,19 @@ def load_pytree(template, directory: str | os.PathLike, *, step: int | None = No
             f"checkpoint has {len(manifest['leaves'])} leaves, template "
             f"{len(flat_t)} — config mismatch?"
         )
-    arrays = [np.load(d / e["file"]) for e in manifest["leaves"]]
+    arrays = []
+    for e in manifest["leaves"]:
+        path = d / e["file"]
+        if verify and "crc32" in e:
+            crc = zlib.crc32(path.read_bytes())
+            if crc != e["crc32"]:
+                raise CorruptCheckpointError(
+                    f"{path}: crc32 {crc:#010x} != manifest {e['crc32']:#010x}"
+                )
+        try:
+            arrays.append(np.load(path))
+        except (ValueError, OSError, EOFError) as err:
+            raise CorruptCheckpointError(f"{path}: unreadable leaf: {err}") from err
     for arr, t in zip(arrays, flat_t):
         # np.shape handles scalar pytree leaves (e.g. a python-int modulus).
         if tuple(arr.shape) != tuple(getattr(t, "shape", np.shape(t))):
@@ -259,6 +297,8 @@ class CheckpointManager:
         self.directory = pathlib.Path(directory)
         self.keep = keep
         self.save_every = save_every
+        # Steps refused by restore verification (newest-first fallback walk).
+        self.corrupt_steps: list[int] = []
 
     def maybe_save(self, tree, step: int, *, force: bool = False,
                    extra_meta: dict | None = None) -> bool:
@@ -269,8 +309,42 @@ class CheckpointManager:
         return True
 
     def restore(self, template, shardings=None, step: int | None = None):
-        return load_pytree(template, self.directory, step=step,
-                           shardings=shardings)
+        """Restore ``step`` (refusing a corrupted artifact loudly) or, with
+        ``step=None``, the newest committed checkpoint that passes
+        verification — corrupted ones are skipped (recorded in
+        ``self.corrupt_steps``) and the walk falls back to the last good."""
+        if step is not None:
+            return load_pytree(template, self.directory, step=step,
+                               shardings=shardings)
+        steps = sorted(
+            (
+                int(m.stem.split("_")[1])
+                for m in self.directory.glob("step_*.COMMITTED")
+                if (self.directory / m.stem / "manifest.json").exists()
+            ),
+            reverse=True,
+        )
+        if not steps:
+            raise FileNotFoundError(
+                f"no committed checkpoint in {self.directory}"
+            )
+        last_err: CorruptCheckpointError | None = None
+        for s in steps:
+            try:
+                return load_pytree(template, self.directory, step=s,
+                                   shardings=shardings)
+            except CorruptCheckpointError as err:
+                last_err = err
+                self.corrupt_steps.append(s)
+                print(
+                    f"[checkpoint] step {s} refused ({err}); "
+                    "falling back to previous committed checkpoint"
+                )
+        assert last_err is not None
+        raise CorruptCheckpointError(
+            f"all {len(steps)} committed checkpoints in {self.directory} "
+            "failed verification"
+        ) from last_err
 
     def read_manifest(self, step: int) -> dict:
         """The manifest alone (no array loads) — for pre-restore checks."""
@@ -286,5 +360,7 @@ class CheckpointManager:
             for m in self.directory.glob("step_*.COMMITTED")
         )
         for s in steps[: -self.keep] if self.keep else []:
-            shutil.rmtree(self.directory / f"step_{s:09d}", ignore_errors=True)
+            # Marker first: a crash between the two leaves an uncommitted
+            # (invisible) directory, never a committed-but-missing one.
             (self.directory / f"step_{s:09d}.COMMITTED").unlink(missing_ok=True)
+            shutil.rmtree(self.directory / f"step_{s:09d}", ignore_errors=True)

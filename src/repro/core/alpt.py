@@ -39,6 +39,11 @@ class ALPTConfig(NamedTuple):
     # Route the lookup / write-back hot loops through repro.kernels.ops
     # (methods copy EmbeddingSpec.use_kernels in here; bitwise-identical).
     use_kernels: bool = False
+    # Absolute upper bound on the learned Delta (guardrail against step-size
+    # blowup: one huge Delta poisons the whole row's quantization grid).
+    # None (default) leaves the update graph byte-identical to the paper's;
+    # when set, clamped rows are counted in aux["delta_clamped"].
+    step_clamp: float | None = None
 
 
 def grad_scale_factor(cfg: ALPTConfig, batch_rows: int, dim: int) -> float:
@@ -135,6 +140,10 @@ def alpt_step(
         g_step + cfg.step_weight_decay * step_b
     )
     new_step_b = jnp.maximum(new_step_b, 1e-8)  # Delta must stay positive
+    delta_clamped = None
+    if cfg.step_clamp is not None:
+        delta_clamped = jnp.sum(new_step_b > cfg.step_clamp).astype(jnp.int32)
+        new_step_b = jnp.minimum(new_step_b, cfg.step_clamp)
 
     # ---- Line 5: re-quantize w^{t+1} with the NEW Delta (SR). ----
     k2 = jax.random.fold_in(noise_key, 1)
@@ -154,6 +163,8 @@ def alpt_step(
         "step_grad_norm": jnp.linalg.norm(g_step),
         "mean_step": jnp.mean(new_step_b),
     }
+    if delta_clamped is not None:
+        aux["delta_clamped"] = delta_clamped
     return new_table, loss, aux
 
 
@@ -221,6 +232,8 @@ def dense_finish(
     masked so untouched rows keep codes and Delta bit-identical."""
     new_step = table.step - cfg.step_lr * (g_step + cfg.step_weight_decay * table.step)
     new_step = jnp.maximum(new_step, 1e-8)
+    if cfg.step_clamp is not None:
+        new_step = jnp.minimum(new_step, cfg.step_clamp)
     new_step = jnp.where(upd.touched, new_step, table.step)
 
     noise = quant.sr_noise(jax.random.fold_in(noise_key, 1), upd.w_new.shape)

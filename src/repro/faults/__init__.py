@@ -1,0 +1,96 @@
+"""Deterministic fault injection + the recovery machinery it proves out.
+
+The production claim (ROADMAP north star: "serves heavy traffic from
+millions of users") needs more than happy-path bitwise parity: host tiers
+stall, packed bytes flip, gradients blow up, jobs get preempted.  This
+package makes those failures *reproducible* so the recovery paths are
+testable, not aspirational:
+
+* :mod:`repro.faults.plan` — a seeded :class:`FaultPlan`: named injection
+  sites fire on scheduled steps/waves with per-site parameters.  One plan,
+  installed process-wide, drives every seam; the same plan JSON replays the
+  same faults.
+* :mod:`repro.faults.recovery` — bounded retry with deterministic
+  exponential backoff (:func:`retry_with_backoff`) and the typed counters
+  (:class:`RetryStats`) every retried seam reports through.
+* :mod:`repro.faults.guards` — jit-compatible trainer guardrails: the
+  non-finite-update detector wraps a jitted step and skips poisoned updates
+  via ``lax.cond`` (state rolls back, step/rng advance — documented
+  skip-step semantics), with host-side :class:`GuardStats` accumulation.
+
+Seam catalog (the site names a :class:`FaultPlan` can schedule):
+
+=========================  =================================================
+site                       seam / recovery
+=========================  =================================================
+``trainer.nonfinite``      poisons a dense-param leaf at step entry (NaN
+                           forward -> NaN grads -> NaN update); recovered by
+                           the non-finite guard's skip-step.
+``alpt.delta``             scales the ALPT tables' learned Delta by
+                           ``scale`` (default inf) at step entry; non-finite
+                           blowups recovered by the guard's skip-step,
+                           finite ones bounded by the absolute Delta clamp
+                           (``ALPTConfig.step_clamp``).
+``codestore.corrupt``      flips packed code bytes in the cold tier's
+                           staged prefetch buffer; recovered by checksum
+                           verification against the host ground truth +
+                           demand re-fetch (counted, bitwise-equal).
+``cold.fetch``             cold-tier host gather raises ``TransientFault``
+                           (``fails`` times per fired wave) or stalls
+                           ``stall_s``; recovered by bounded retry+backoff.
+``cold.prefetch_loss``     drops the staged prefetch; recovered by the
+                           demand-load path (counted, bitwise-equal).
+``cache.admission``        hot-row cache admission reports OOM for the
+                           wave; recovered by serving/training straight off
+                           the warm tier (degraded counters tick).
+``tiered.writeback``       dirty hot-row write-back raises
+                           ``TransientFault`` (``fails`` times per fired
+                           flush); recovered by bounded retry+backoff (the
+                           jitted write-back is pure, retries are bitwise-
+                           identical).
+``checkpoint.corrupt``     flips a byte in a committed leaf artifact;
+                           recovered by checksum verification + fall back
+                           to the last good checkpoint.
+``kernels.force_fallback`` forces the jnp reference path at trace time
+                           (reason ``fault-injected``, counted, never
+                           silent); bitwise-equal by the kernel contract.
+``train.preempt``          requests a graceful shutdown at the scheduled
+                           step (checkpoint + exit 75); recovered by
+                           exact-resume restart.
+=========================  =================================================
+"""
+from repro.faults.guards import GuardStats, wrap_ctr_step, wrap_lm_step
+from repro.faults.plan import (
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    TransientFault,
+    active_plan,
+    corrupt_checkpoint_leaf,
+    fires,
+    install,
+    lookup,
+    step_mask,
+    uninstall,
+)
+from repro.faults.recovery import RetryError, RetryStats, retry_with_backoff
+
+__all__ = [
+    "FaultPlan",
+    "FaultSpec",
+    "GuardStats",
+    "InjectedFault",
+    "RetryError",
+    "RetryStats",
+    "TransientFault",
+    "active_plan",
+    "corrupt_checkpoint_leaf",
+    "fires",
+    "install",
+    "lookup",
+    "retry_with_backoff",
+    "step_mask",
+    "uninstall",
+    "wrap_ctr_step",
+    "wrap_lm_step",
+]

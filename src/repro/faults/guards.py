@@ -1,0 +1,181 @@
+"""Trainer guardrails: non-finite update detection with skip-step recovery.
+
+The guard wraps a train step *inside* jit: it checks the step's loss and the
+updated dense parameters for non-finite values and, on detection, rolls the
+whole state back to the pre-step value via ``lax.cond`` — only ``step`` and
+``rng`` advance (skip-step semantics: the poisoned batch is dropped, the
+data/rng streams stay aligned with an unguarded run).  Everything is traced,
+so kernels-on stays one fused program; there is no host sync in the step.
+
+The same wrapper hosts the two trainer-side injection seams, because they
+must poison a *copy* of the input state (rollback restores the clean one):
+
+* ``trainer.nonfinite`` — multiplies the first float leaf of the dense
+  params by NaN on scheduled steps (NaN forward -> NaN grads -> NaN update).
+* ``alpt.delta`` — scales every ALPT table's learned Delta by ``scale``
+  (default inf) on scheduled steps; a non-finite scale is recovered by this
+  guard's skip-step, a finite blowup by the absolute Delta clamp in
+  :mod:`repro.core.alpt` (``ALPTConfig.step_clamp``).
+
+Skip counters ride the metrics dict (``guard_skipped``, ``fault_*_fired``)
+as lazy device scalars; :class:`GuardStats` accumulates them host-side
+without forcing a sync per step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.faults import plan as _plan
+
+#: Metrics keys the guard adds to every wrapped step's output.
+GUARD_METRIC_KEYS = ("guard_skipped", "fault_nonfinite_fired", "fault_delta_fired")
+
+
+def poison_first_float_leaf(tree, fire):
+    """NaN-poison the first float leaf of ``tree`` when ``fire`` is set."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    for i, x in enumerate(leaves):
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+            leaves[i] = x * jnp.where(fire, jnp.nan, 1.0).astype(x.dtype)
+            break
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def scale_alpt_delta(emb_state, fire, scale):
+    """Scale the learned Delta of every LPT/ALPT table in ``emb_state``."""
+    # Imported here, not at module top: core.lpt reaches storage.tiered,
+    # which imports this package for the cache.admission seam.
+    from repro.core.lpt import LPTTable
+
+    def on_node(x):
+        if isinstance(x, LPTTable):
+            f = jnp.where(fire, jnp.asarray(scale, x.step.dtype), 1.0)
+            return x._replace(step=x.step * f.astype(x.step.dtype))
+        return x
+
+    return jax.tree_util.tree_map(
+        on_node, emb_state, is_leaf=lambda x: isinstance(x, LPTTable)
+    )
+
+
+def _all_finite(tree):
+    ok = jnp.ones((), bool)
+    for x in jax.tree_util.tree_leaves(tree):
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+            ok = ok & jnp.all(jnp.isfinite(x))
+    return ok
+
+
+def _wrap(step_fn, *, dense_of, with_dense, emb_of, with_emb, jit):
+    nf_spec = _plan.lookup("trainer.nonfinite")
+    dl_spec = _plan.lookup("alpt.delta")
+    fire_nf = _plan.step_mask(nf_spec)
+    fire_dl = _plan.step_mask(dl_spec)
+    dl_scale = dl_spec.param("scale", float("inf")) if dl_spec else 1.0
+
+    def guarded(state, *args):
+        st = state
+        nf = fire_nf(state.step)
+        dl = fire_dl(state.step)
+        if nf_spec is not None:
+            st = with_dense(st, poison_first_float_leaf(dense_of(st), nf))
+        if dl_spec is not None:
+            st = with_emb(st, scale_alpt_delta(emb_of(st), dl, dl_scale))
+        new_state, m = step_fn(st, *args)
+        ok = jnp.isfinite(m["loss"]) & _all_finite(dense_of(new_state))
+        out = jax.lax.cond(
+            ok,
+            lambda: new_state,
+            lambda: state._replace(step=new_state.step, rng=new_state.rng),
+        )
+        m = {
+            **m,
+            "guard_skipped": jnp.where(ok, 0, 1).astype(jnp.int32),
+            "fault_nonfinite_fired": nf.astype(jnp.int32),
+            "fault_delta_fired": dl.astype(jnp.int32),
+        }
+        return out, m
+
+    return jax.jit(guarded) if jit else guarded
+
+
+def wrap_ctr_step(step_fn):
+    """Guard a (jitted) CTR step ``(state, ids, labels) -> (state, m)``.
+
+    Returns a re-jitted step with identical signature; the injection seams
+    are baked in from the plan active at wrap time (trace-time constants).
+    """
+    return _wrap(
+        step_fn,
+        dense_of=lambda s: s.dense_params,
+        with_dense=lambda s, p: s._replace(dense_params=p),
+        emb_of=lambda s: s.emb_state,
+        with_emb=lambda s, e: s._replace(emb_state=e),
+        jit=True,
+    )
+
+
+def wrap_lm_step(step_fn):
+    """Guard an LM step ``(state, batch) -> (state, m)``.
+
+    Like the step from :func:`repro.training.lm_trainer.make_train_step`,
+    the result is jit/pjit-ready but not jitted — callers jit it.
+    """
+    return _wrap(
+        step_fn,
+        dense_of=lambda s: s.params,
+        with_dense=lambda s, p: s._replace(params=p),
+        emb_of=lambda s: s.table,
+        with_emb=lambda s, t: s._replace(table=t),
+        jit=False,
+    )
+
+
+class GuardStats:
+    """Host-side accumulation of guard/fault counters without per-step sync.
+
+    ``observe(metrics)`` adds the device scalars lazily; reading any
+    property (or :meth:`to_json`) materialises the totals once.
+    """
+
+    def __init__(self):
+        self.steps = 0
+        self._skipped = 0
+        self._nonfinite_fired = 0
+        self._delta_fired = 0
+        self._delta_clamped = 0
+
+    def observe(self, metrics) -> None:
+        self.steps += 1
+        self._skipped = self._skipped + metrics.get("guard_skipped", 0)
+        self._nonfinite_fired = (
+            self._nonfinite_fired + metrics.get("fault_nonfinite_fired", 0)
+        )
+        self._delta_fired = self._delta_fired + metrics.get("fault_delta_fired", 0)
+        self._delta_clamped = self._delta_clamped + metrics.get("delta_clamped", 0)
+
+    @property
+    def skipped(self) -> int:
+        return int(self._skipped)
+
+    @property
+    def nonfinite_fired(self) -> int:
+        return int(self._nonfinite_fired)
+
+    @property
+    def delta_fired(self) -> int:
+        return int(self._delta_fired)
+
+    @property
+    def delta_clamped(self) -> int:
+        return int(self._delta_clamped)
+
+    def to_json(self) -> dict:
+        return {
+            "steps": self.steps,
+            "skipped": self.skipped,
+            "nonfinite_fired": self.nonfinite_fired,
+            "delta_fired": self.delta_fired,
+            "delta_clamped": self.delta_clamped,
+        }

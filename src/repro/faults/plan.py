@@ -1,0 +1,194 @@
+"""The fault plan: named injection sites firing on a deterministic schedule.
+
+A :class:`FaultSpec` schedules one seam: ``site`` names the injection point
+(see the catalog in :mod:`repro.faults`), ``steps`` lists the step/wave
+indices it fires on, and ``params`` carries site-specific knobs (``fails``
+for transient-error counts, ``stall_s`` for stalls, ``ops`` for kernel
+sites, ...).  A :class:`FaultPlan` is a seeded collection of specs with a
+JSON round-trip, so a chaos run is replayable from one artifact:
+
+    plan = FaultPlan(seed=0, specs=(
+        FaultSpec(site="trainer.nonfinite", steps=(3, 7)),
+        FaultSpec(site="cold.fetch", steps=(2,), params={"fails": 2}),
+    ))
+    faults.install(plan)
+
+Installation is process-global (one chaos experiment per process — the
+seams live inside trainers, stores and engines that have no plan argument);
+:func:`uninstall` or ``install(None)`` clears it.  Sites consult the plan
+at *host* level (per wave / per call); jitted schedules are built from the
+static ``steps`` tuple (:func:`step_mask`) so kernels-on stays fused.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import zlib
+from typing import Any
+
+
+class InjectedFault(Exception):
+    """Base class for every error this package raises on purpose."""
+
+
+class TransientFault(InjectedFault):
+    """An injected failure the seam is expected to retry through."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled seam: fire ``site`` on each step/wave in ``steps``."""
+
+    site: str
+    steps: tuple[int, ...] = ()
+    #: Fire on every step/wave (schedules with unknown horizons).
+    always: bool = False
+    params: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "steps", tuple(int(s) for s in self.steps))
+
+    def fires(self, step: int) -> bool:
+        return self.always or int(step) in self.steps
+
+    def param(self, name: str, default=None):
+        return self.params.get(name, default)
+
+    def to_json(self) -> dict:
+        out: dict[str, Any] = {"site": self.site, "steps": list(self.steps)}
+        if self.always:
+            out["always"] = True
+        if self.params:
+            out["params"] = dict(self.params)
+        return out
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "FaultSpec":
+        return cls(
+            site=obj["site"],
+            steps=tuple(obj.get("steps", ())),
+            always=bool(obj.get("always", False)),
+            params=dict(obj.get("params", {})),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, replayable set of scheduled faults."""
+
+    specs: tuple[FaultSpec, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "specs", tuple(self.specs))
+        sites = [s.site for s in self.specs]
+        dup = {s for s in sites if sites.count(s) > 1}
+        if dup:
+            raise ValueError(f"duplicate fault sites in plan: {sorted(dup)}")
+
+    def lookup(self, site: str) -> FaultSpec | None:
+        for spec in self.specs:
+            if spec.site == site:
+                return spec
+        return None
+
+    def fires(self, site: str, step: int) -> bool:
+        spec = self.lookup(site)
+        return spec is not None and spec.fires(step)
+
+    def sites(self) -> tuple[str, ...]:
+        return tuple(s.site for s in self.specs)
+
+    # ------------------------------------------------------------ json
+
+    def to_json(self) -> dict:
+        return {"seed": self.seed, "specs": [s.to_json() for s in self.specs]}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "FaultPlan":
+        return cls(
+            seed=int(obj.get("seed", 0)),
+            specs=tuple(FaultSpec.from_json(s) for s in obj.get("specs", ())),
+        )
+
+    def save(self, path: str | os.PathLike) -> None:
+        pathlib.Path(path).write_text(json.dumps(self.to_json(), indent=2))
+
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> "FaultPlan":
+        return cls.from_json(json.loads(pathlib.Path(path).read_text()))
+
+
+# ------------------------------------------------------------------ install
+
+_ACTIVE: FaultPlan | None = None
+
+
+def install(plan: FaultPlan | None) -> None:
+    """Make ``plan`` the process-wide active plan (None clears it)."""
+    global _ACTIVE
+    _ACTIVE = plan
+
+
+def uninstall() -> None:
+    install(None)
+
+
+def active_plan() -> FaultPlan | None:
+    return _ACTIVE
+
+
+def lookup(site: str) -> FaultSpec | None:
+    """The active plan's spec for ``site`` (None when no plan / no spec)."""
+    return None if _ACTIVE is None else _ACTIVE.lookup(site)
+
+
+def fires(site: str, step: int) -> bool:
+    """Host-side schedule check against the active plan."""
+    return _ACTIVE is not None and _ACTIVE.fires(site, step)
+
+
+def step_mask(spec: FaultSpec | None):
+    """A jit-safe ``fire(step) -> bool[]`` from the spec's static schedule.
+
+    The schedule tuple is baked into the trace (it is plan-static), so the
+    compiled step stays a single fused program — the fault is one
+    ``jnp.any(step == steps)`` comparison feeding a ``lax.cond``.
+    """
+    import jax.numpy as jnp
+
+    if spec is None:
+        return lambda step: jnp.zeros((), bool)
+    if spec.always:
+        return lambda step: jnp.ones((), bool)
+    if not spec.steps:
+        return lambda step: jnp.zeros((), bool)
+    sched = jnp.asarray(spec.steps)
+    return lambda step: jnp.any(step == sched)
+
+
+# ------------------------------------------------------------------ helpers
+
+
+def corrupt_checkpoint_leaf(directory: str | os.PathLike, step: int,
+                            *, leaf: int = 0, seed: int = 0) -> pathlib.Path:
+    """Flip one byte of a committed checkpoint's leaf artifact (in the data
+    region, past the .npy header) — the ``checkpoint.corrupt`` seam.
+
+    Deterministic under ``seed``; returns the corrupted path.  Detection and
+    recovery belong to :mod:`repro.checkpoint.manager` (per-leaf checksums,
+    fall back to last good).
+    """
+    d = pathlib.Path(directory) / f"step_{step:09d}"
+    path = d / f"leaf_{leaf:05d}.npy"
+    raw = bytearray(path.read_bytes())
+    header = 128  # .npy v1 header is 64-byte aligned; 128 clears any dict
+    if len(raw) <= header:
+        header = max(0, len(raw) - 1)
+    span = len(raw) - header
+    pos = header + (zlib.crc32(f"{step}:{leaf}:{seed}".encode()) % span)
+    raw[pos] ^= 0xFF
+    path.write_bytes(bytes(raw))
+    return path

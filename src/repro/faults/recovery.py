@@ -1,0 +1,96 @@
+"""Bounded retry with deterministic exponential backoff.
+
+Every retried seam in the stack (cold-tier fetch/prefetch, dirty
+write-back, serving waves) goes through :func:`retry_with_backoff` so the
+retry discipline is uniform: bounded attempts, exponential backoff with a
+deterministic schedule (no wall-clock jitter — chaos runs must replay
+bit-for-bit), typed counters, and a *loud* final failure
+(:class:`RetryError` chains the last cause; nothing is swallowed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, TypeVar
+
+from repro.faults.plan import InjectedFault
+
+T = TypeVar("T")
+
+
+class RetryError(RuntimeError):
+    """All attempts exhausted — raised loudly, chaining the last cause."""
+
+    def __init__(self, op: str, attempts: int, last: BaseException):
+        super().__init__(f"{op}: failed after {attempts} attempts: {last!r}")
+        self.op = op
+        self.attempts = attempts
+
+
+@dataclasses.dataclass
+class RetryStats:
+    """Per-seam retry counters, reported in end-of-run summaries."""
+
+    calls: int = 0
+    retries: int = 0
+    failures: int = 0  # calls that exhausted all attempts
+    backoff_s: float = 0.0  # total deterministic backoff slept
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def merge(self, other: "RetryStats") -> "RetryStats":
+        return RetryStats(
+            calls=self.calls + other.calls,
+            retries=self.retries + other.retries,
+            failures=self.failures + other.failures,
+            backoff_s=self.backoff_s + other.backoff_s,
+        )
+
+
+def backoff_schedule(attempts: int, base_s: float, factor: float = 2.0,
+                     max_s: float = 1.0) -> tuple[float, ...]:
+    """The deterministic sleep before each retry: base * factor**k, capped."""
+    return tuple(min(base_s * factor**k, max_s) for k in range(max(0, attempts - 1)))
+
+
+def retry_with_backoff(
+    fn: Callable[[], T],
+    *,
+    op: str,
+    attempts: int = 3,
+    base_s: float = 0.005,
+    factor: float = 2.0,
+    max_s: float = 1.0,
+    stats: RetryStats | None = None,
+    retry_on: tuple[type[BaseException], ...] = (InjectedFault, OSError, TimeoutError),
+    sleep: Callable[[float], None] = time.sleep,
+) -> T:
+    """Call ``fn`` with up to ``attempts`` tries and exponential backoff.
+
+    Only exceptions in ``retry_on`` are retried — anything else (a real
+    bug) propagates immediately.  On exhaustion raises :class:`RetryError`
+    from the last cause.  ``stats`` (if given) ticks calls/retries/failures
+    and accumulates the backoff actually applied.
+    """
+    if attempts < 1:
+        raise ValueError(f"attempts must be >= 1, got {attempts}")
+    if stats is not None:
+        stats.calls += 1
+    sched = backoff_schedule(attempts, base_s, factor, max_s)
+    last: BaseException | None = None
+    for k in range(attempts):
+        try:
+            return fn()
+        except retry_on as e:  # noqa: PERF203 - retry loop, not hot path
+            last = e
+            if k == attempts - 1:
+                break
+            if stats is not None:
+                stats.retries += 1
+                stats.backoff_s += sched[k]
+            sleep(sched[k])
+    if stats is not None:
+        stats.failures += 1
+    assert last is not None
+    raise RetryError(op, attempts, last) from last

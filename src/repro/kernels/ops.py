@@ -137,6 +137,23 @@ def note_fallback(op: str, shape, reason: str) -> None:
     _note_fallback(op, shape, reason)
 
 
+def _fault_forced(op: str) -> bool:
+    """True when an installed FaultPlan forces ``op`` onto the jnp reference
+    path (site ``kernels.force_fallback``).  Consulted at *trace* time — the
+    wrappers run inside jit, so a per-step schedule cannot apply here; the
+    seam fires for every dispatch while the plan is installed, optionally
+    narrowed to a subset via the spec's ``ops`` param.  Bitwise-safe by the
+    kernel contract (the references are the kernels' oracles); every forced
+    dispatch is counted with reason ``fault-injected``."""
+    from repro.faults import plan as faultplan
+
+    spec = faultplan.lookup("kernels.force_fallback")
+    if spec is None:
+        return False
+    ops_sel = spec.param("ops")
+    return ops_sel is None or op in ops_sel
+
+
 def _stats_of(kernel_calls: collections.Counter,
               fallbacks: collections.Counter) -> dict:
     return {
@@ -394,6 +411,11 @@ def _dequant_gather_impl(codes, step, ids, *, use_kernel: bool = True):
             return _ref_dequant_gather_packed(
                 codes.data, step, ids, bits=codes.bits, d=d
             )
+        if _fault_forced("dequant_gather"):
+            _note_fallback("dequant_gather", (n, d), "fault-injected")
+            return _ref_dequant_gather_packed(
+                codes.data, step, ids, bits=codes.bits, d=d
+            )
         if d % SUBLANE or (not _default_interpret() and d > COL_BLOCK):
             _note_fallback(
                 "dequant_gather", (n, d),
@@ -413,6 +435,9 @@ def _dequant_gather_impl(codes, step, ids, *, use_kernel: bool = True):
     n, d = codes.shape
     if not use_kernel:
         return _ref_dequant_gather(codes, step, ids)
+    if _fault_forced("dequant_gather"):
+        _note_fallback("dequant_gather", (n, d), "fault-injected")
+        return _ref_dequant_gather(codes, step, ids)
     db = d if _default_interpret() else _pick_block(d, COL_BLOCK)
     if d % SUBLANE or db is None:
         _note_fallback("dequant_gather", (n, d), "dim not sublane-aligned")
@@ -427,6 +452,9 @@ def sr_round(w, step, noise, bits: int = 8, *, use_kernel: bool = True):
     """Fused clip + stochastic-round + int8 pack (Eq. 1/4)."""
     rows, cols = w.shape
     if not use_kernel:
+        return _ref_sr_round(w, step, noise, bits)
+    if _fault_forced("sr_round"):
+        _note_fallback("sr_round", (rows, cols), "fault-injected")
         return _ref_sr_round(w, step, noise, bits)
     blocks = _blocks_2d(rows, cols)
     if blocks is None:
@@ -462,6 +490,13 @@ def lpt_update(codes, step, grad, noise, lr, bits: int, *, new_step=None,
                 weight_decay=weight_decay, has_new_step=has_new_step,
             )
             return store.with_data(out)
+        if _fault_forced("lpt_update"):
+            _note_fallback("lpt_update", (rows, cols), "fault-injected")
+            out = _ref_lpt_update_packed_jit(
+                store.data, step, grad, noise, lr, ns, bits=bits, d=cols,
+                weight_decay=weight_decay, has_new_step=has_new_step,
+            )
+            return store.with_data(out)
         rb = rows if _default_interpret() else _pick_block(rows, ROW_BLOCK)
         if rows % SUBLANE or cols % SUBLANE or rb is None:
             _note_fallback(
@@ -492,6 +527,12 @@ def lpt_update(codes, step, grad, noise, lr, bits: int, *, new_step=None,
         )
         return store.with_data(out)
     if not use_kernel:
+        return _ref_lpt_update_jit(
+            codes, step, grad, noise, lr, ns, bits,
+            weight_decay=weight_decay, has_new_step=has_new_step,
+        )
+    if _fault_forced("lpt_update"):
+        _note_fallback("lpt_update", (rows, cols), "fault-injected")
         return _ref_lpt_update_jit(
             codes, step, grad, noise, lr, ns, bits,
             weight_decay=weight_decay, has_new_step=has_new_step,
@@ -534,6 +575,13 @@ def sparse_row_update(codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2,
                 bits=bits, d=d, weight_decay=weight_decay,
             )
             return store.with_data(out), mu2, nu2, w_new
+        if _fault_forced("sparse_row_update"):
+            _note_fallback("sparse_row_update", (n, d), "fault-injected")
+            out, mu2, nu2, w_new = _ref_sparse_row_update_packed_jit(
+                store.data, step, mu, nu, uniq, g_sum, noise, lr, c1, c2,
+                bits=bits, d=d, weight_decay=weight_decay,
+            )
+            return store.with_data(out), mu2, nu2, w_new
         if d % SUBLANE or d > COL_BLOCK:
             _note_fallback(
                 "sparse_row_update", (n, d),
@@ -561,6 +609,12 @@ def sparse_row_update(codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2,
         return store.with_data(out), mu2, nu2, w_new
     n, d = codes.shape
     if not use_kernel:
+        return _ref_sparse_row_update_jit(
+            codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits,
+            weight_decay=weight_decay,
+        )
+    if _fault_forced("sparse_row_update"):
+        _note_fallback("sparse_row_update", (n, d), "fault-injected")
         return _ref_sparse_row_update_jit(
             codes, step, mu, nu, uniq, g_sum, noise, lr, c1, c2, bits,
             weight_decay=weight_decay,
@@ -602,6 +656,11 @@ def dequant_matmul(
             return _ref_dequant_matmul_packed(
                 x, codes.data, step, bits=codes.bits, k=d
             )
+        if _fault_forced("dequant_matmul"):
+            _note_fallback("dequant_matmul", (m, n, k), "fault-injected")
+            return _ref_dequant_matmul_packed(
+                x, codes.data, step, bits=codes.bits, k=d
+            )
         bm, bn = min(block_m, m), min(block_n, n)
         if m % bm or n % bn:
             if _default_interpret():
@@ -624,6 +683,9 @@ def dequant_matmul(
     n, _ = codes.shape
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
     if not use_kernel:
+        return _ref_dequant_matmul(x, codes, step)
+    if _fault_forced("dequant_matmul"):
+        _note_fallback("dequant_matmul", (m, n, k), "fault-injected")
         return _ref_dequant_matmul(x, codes, step)
     if m % bm or n % bn or k % bk:
         if _default_interpret():

@@ -415,8 +415,8 @@ def memory_summary(compiled) -> dict[str, float]:
     ma = None
     try:
         ma = compiled.memory_analysis()
-    except Exception:
-        pass
+    except (AttributeError, NotImplementedError, RuntimeError):
+        pass  # backend exposes no memory analysis for this artifact
     if ma is None:
         return {}
     out = {}
@@ -444,8 +444,8 @@ def cost_summary(compiled) -> dict[str, float]:
     """XLA's own cost analysis (NOT trip-count aware; kept for reference)."""
     try:
         ca = compiled.cost_analysis()
-    except Exception:
-        return {}
+    except (AttributeError, NotImplementedError, RuntimeError):
+        return {}  # backend exposes no cost analysis for this artifact
     if not ca:
         return {}
     if isinstance(ca, (list, tuple)):

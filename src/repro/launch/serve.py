@@ -20,12 +20,13 @@ fabricates synthetic requests, and prints the report.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 import jax
 import numpy as np
 
-from repro import configs, methods
+from repro import configs, faults, methods
 from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
 from repro.models.ctr import DCNConfig
 from repro.serving.ctr import CTREngine, CTRRequest
@@ -102,6 +103,13 @@ def _print_report(engine) -> None:
             f"misses), {c.hot_bytes + c.metadata_bytes} device bytes "
             f"(rows {c.hot_bytes} + metadata {c.metadata_bytes})"
         )
+        if c.admission_oom or c.prefetch_dropped or c.corruption_detected:
+            print(
+                f"[serve] {c.tier} tier '{c.name}' recovery: "
+                f"{c.admission_oom} admission refusals, "
+                f"{c.prefetch_dropped} prefetch losses, "
+                f"{c.corruption_detected} corrupted prefetches re-fetched"
+            )
     if m.caches:
         print(f"[serve] aggregate cache hit rate {m.cache_hit_rate:.3f}")
     report = engine.fallback_report()
@@ -110,6 +118,17 @@ def _print_report(engine) -> None:
               f"({fb['reason']})")
     if not report["fallbacks"]:
         print("[serve] kernel fallbacks: none")
+    print(f"[serve] recovery: {m['served_degraded']} degraded waves, "
+          f"{m['deadline_misses']} deadline misses, "
+          f"{m['wave_retries']} wave retries, "
+          f"{m['retry_failures']} retry exhaustions")
+    for name, stats in engine._tier_retry_stats():
+        print(f"[serve] {name} tier retries: {json.dumps(stats.to_json())}")
+    h = engine.health()
+    status = "READY" if h["ready"] else "NOT READY"
+    failed = [k for k, ok in h["checks"].items() if not ok]
+    print(f"[serve] health: {status}"
+          + (f" (failing: {', '.join(failed)})" if failed else ""))
 
 
 def _run_lm(args) -> int:
@@ -124,6 +143,8 @@ def _run_lm(args) -> int:
         state, cfg, tcfg, batch=args.batch,
         max_len=args.prompt_len + args.gen,
     )
+    if args.deadline_ms is not None:
+        engine.deadline_s = args.deadline_ms / 1e3
     rng = np.random.RandomState(0)
     for _ in range(args.requests):
         engine.submit(LMRequest(
@@ -145,6 +166,8 @@ def _run_ctr(args) -> int:
         cache_rows=args.cache_rows, cold_tier=args.cold_tier,
         device_budget_bytes=args.device_budget_bytes,
     )
+    if args.deadline_ms is not None:
+        engine.deadline_s = args.deadline_ms / 1e3
     ids, _ = data.batch("test", 0, args.requests)
     rids = [engine.submit(CTRRequest(ids=row)) for row in ids]
     done = engine.run()
@@ -183,7 +206,19 @@ def main(argv=None) -> int:
     ctr.add_argument("--device-budget-bytes", type=int, default=None,
                      help="assert hot-tier device bytes stay under this")
 
+    for p in (lm, ctr):
+        p.add_argument("--fault-plan", default=None, metavar="JSON",
+                       help="install a repro.faults FaultPlan (JSON file); "
+                       "see the seam catalog in repro/faults/__init__.py")
+        p.add_argument("--deadline-ms", type=float, default=None,
+                       help="per-wave deadline; waves over it tick the "
+                       "deadline_misses counter (observed, not enforced)")
+
     args = ap.parse_args(argv)
+    if args.fault_plan:
+        plan = faults.FaultPlan.load(args.fault_plan)
+        faults.install(plan)
+        print(f"[serve] fault plan installed: sites {sorted(plan.sites())}")
     return _run_lm(args) if args.scenario == "lm" else _run_ctr(args)
 
 

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs, methods
+from repro import configs, faults, methods
 from repro.checkpoint import CheckpointManager
 from repro.checkpoint.manager import (
     check_embedding_manifest,
@@ -103,15 +103,46 @@ def _run_ctr(args) -> int:
         dcn=DCNConfig(n_fields=data_cfg.n_fields, emb_dim=32,
                       cross_depth=2, mlp_widths=(64, 32)),
         cache_rows=args.cache_rows,
+        guard=args.guard,
     ))
     state = trainer.init_state(jax.random.PRNGKey(0))
+    shutdown = GracefulShutdown()
+
+    start_step = 0
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(
+            args.ckpt_dir, keep=3, save_every=args.ckpt_every
+        )
+        if ckpt.latest_step() is not None:
+            # Checkpoints hold the exported (cache-off-equivalent) state;
+            # restore into that structure, then re-wrap the caches cold.
+            restored, manifest = ckpt.restore(trainer.export_state(state))
+            state = trainer.import_state(restored)
+            start_step = manifest["step"]
+            print(f"[train] ctr resumed from step {start_step}")
+
+    def save(step: int, *, force: bool = False) -> None:
+        if ckpt:
+            ckpt.maybe_save(trainer.export_state(state), step, force=force)
+
     losses = []
-    for step in range(args.steps):
+    for step in range(start_step, args.steps):
         ids, labels = data.batch("train", step, args.batch)
         state, metrics = trainer.train_step(state, ids, labels)
         losses.append(float(metrics["loss"]))
         if (step + 1) % args.log_every == 0:
             print(f"[train] ctr step {step+1} loss {losses[-1]:.4f}")
+        save(step + 1)
+        if faults.fires("train.preempt", step + 1):
+            print(f"[train] injected preemption at step {step+1}")
+            shutdown.requested = True
+        if shutdown.requested:
+            save(step + 1, force=True)
+            print(f"[train] preempted at step {step+1}; checkpointed; "
+                  f"exiting 75 for requeue")
+            return 75
+    save(args.steps, force=True)
     summary = {
         "first_loss": losses[0] if losses else None,
         "final_loss": losses[-1] if losses else None,
@@ -120,7 +151,26 @@ def _run_ctr(args) -> int:
     for stats in trainer.cache_stats():
         print(f"[train] hot tier '{stats['name']}': hit rate "
               f"{stats['hit_rate']:.3f}, {stats['evictions']} evictions, "
-              f"{stats['writebacks']} write-backs")
+              f"{stats['writebacks']} write-backs, "
+              f"{stats['writeback_retries']} write-back retries, "
+              f"{stats['admission_oom']} admission refusals")
+    if trainer.guard_stats is not None:
+        g = trainer.guard_stats.to_json()
+        summary["guard"] = g
+        print(f"[train] guard: {g['skipped']} skipped steps "
+              f"({g['nonfinite_fired']} injected non-finite, "
+              f"{g['delta_fired']} injected Delta blowups, "
+              f"{g['delta_clamped']} Delta rows clamped)")
+    if ckpt and ckpt.corrupt_steps:
+        summary["corrupt_checkpoints"] = ckpt.corrupt_steps
+        print(f"[train] WARNING: refused corrupted checkpoint step(s) "
+              f"{ckpt.corrupt_steps} on restore")
+    if not args.no_kernels:
+        stats = kernel_ops.fallback_stats()
+        summary["kernel_fallbacks"] = stats["total_fallbacks"]
+        for fb in stats["fallbacks"]:
+            print(f"[train] kernel fallback: {fb['op']} {fb['shape']} "
+                  f"({fb['reason']})")
     print("[train] done:", json.dumps(summary))
     return 0
 
@@ -170,7 +220,27 @@ def main(argv=None) -> int:
         "--zipf", action="store_true",
         help="--arch ctr only: use the Zipf(1.1) skewed-traffic fixture",
     )
+    ap.add_argument(
+        "--fault-plan", default=None, metavar="JSON",
+        help="install a repro.faults FaultPlan (JSON file) for this run; "
+        "see the seam catalog in repro/faults/__init__.py",
+    )
+    ap.add_argument(
+        "--guard", action="store_true",
+        help="enable the non-finite skip-step guard (repro.faults.guards); "
+        "auto-enabled when --fault-plan schedules a trainer seam",
+    )
     args = ap.parse_args(argv)
+
+    if args.fault_plan:
+        plan = faults.FaultPlan.load(args.fault_plan)
+        faults.install(plan)
+        print(f"[train] fault plan installed: sites {sorted(plan.sites())}")
+        trainer_seams = {"trainer.nonfinite", "alpt.delta"} & set(plan.sites())
+        if trainer_seams and not args.guard:
+            print(f"[train] plan schedules {sorted(trainer_seams)}; "
+                  f"enabling --guard")
+            args.guard = True
 
     if args.arch == "ctr":
         return _run_ctr(args)
@@ -188,10 +258,15 @@ def main(argv=None) -> int:
         dp_sync_bits=args.dp_compress_bits if dp_mode else 32,
         use_kernels=not args.no_kernels,
         pad_to_tiles=args.pad_to_tiles,
+        guard=args.guard,
     )
 
     if dp_mode and args.mesh_model != 1:
         ap.error("--dp-compress-bits is pure data parallelism; use --mesh-model 1")
+    if dp_mode and args.guard:
+        # Inside shard_map the guard would gate on the per-replica (pre-sync)
+        # loss, so replicas could disagree on skip-vs-apply and diverge.
+        ap.error("--guard is single-program only; drop --dp-compress-bits")
     if dp_mode and args.dp_compress_bits != 32 and not 2 <= args.dp_compress_bits <= 8:
         ap.error("--dp-compress-bits must be 32 (exact) or in [2, 8] "
                  f"(SR-compressed), got {args.dp_compress_bits}")
@@ -302,6 +377,7 @@ def main(argv=None) -> int:
                 print(f"[train] resumed from step {start_step}")
 
         losses = []
+        guard_stats = faults.GuardStats() if args.guard else None
         for step in range(start_step, args.steps):
             batch = make_batch(step)
             t0 = time.time()
@@ -310,6 +386,8 @@ def main(argv=None) -> int:
             dt = time.time() - t0
             slow = watchdog.observe(dt)
             losses.append(loss)
+            if guard_stats is not None:
+                guard_stats.observe(metrics)
             if (step + 1) % args.log_every == 0:
                 print(
                     f"[train] step {step+1} loss {loss:.4f} "
@@ -320,6 +398,9 @@ def main(argv=None) -> int:
                     state, step + 1,
                     extra_meta=ckpt_meta,
                 )
+            if faults.fires("train.preempt", step + 1):
+                print(f"[train] injected preemption at step {step+1}")
+                shutdown.requested = True
             if shutdown.requested:
                 if ckpt:
                     ckpt.maybe_save(
@@ -340,6 +421,16 @@ def main(argv=None) -> int:
             "straggler_steps": watchdog.flagged,
             "steps": len(losses),
         }
+        if guard_stats is not None:
+            g = guard_stats.to_json()
+            summary["guard"] = g
+            print(f"[train] guard: {g['skipped']} skipped steps "
+                  f"({g['nonfinite_fired']} injected non-finite, "
+                  f"{g['delta_fired']} injected Delta blowups)")
+        if ckpt and ckpt.corrupt_steps:
+            summary["corrupt_checkpoints"] = ckpt.corrupt_steps
+            print(f"[train] WARNING: refused corrupted checkpoint step(s) "
+                  f"{ckpt.corrupt_steps} on restore")
         if not args.no_kernels:
             # Explicit fallback accounting: surface any embedding op that
             # silently would have missed the fused path (never silent).

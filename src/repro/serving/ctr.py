@@ -52,6 +52,9 @@ class CTRRequest:
 
 class CTREngine(Engine):
     scenario = "ctr"
+    # _advance re-queues its popped wave on failure (see there), so the
+    # engine-level bounded wave retry is safe to apply.
+    _wave_retry_safe = True
 
     def __init__(self, dense_params, serving_table,
                  model_cfg, spec: methods.EmbeddingSpec, *, batch: int,
@@ -219,6 +222,9 @@ class CTREngine(Engine):
                 hit_rate=c.hit_rate,
                 hot_bytes=self._cold.hot_device_bytes,
                 metadata_bytes=c.host_metadata_bytes,
+                admission_oom=c.admission_oom,
+                prefetch_dropped=self._cold.prefetch_dropped,
+                corruption_detected=self._cold.corruption_detected,
             ),)
         out = []
         for slot, cache in self._caches:
@@ -231,6 +237,7 @@ class CTREngine(Engine):
                 hot_bytes=tiered.hot_bytes,
                 metadata_bytes=tiered.metadata_bytes
                 + cache.host_metadata_bytes,
+                admission_oom=cache.admission_oom,
             ))
         return tuple(out)
 
@@ -239,6 +246,11 @@ class CTREngine(Engine):
             self._cold.reset_counters()
         for _, cache in self._caches:
             cache.reset_counters()
+
+    def _tier_retry_stats(self):
+        if self._cold is None:
+            return []
+        return [("cold", self._cold.retry_stats)]
 
     # ------------------------------------------------------------ metrics
 
@@ -295,6 +307,16 @@ class CTREngine(Engine):
             self._queue.popleft()
             for _ in range(min(self.batch, len(self._queue)))
         ]
+        try:
+            self._score_wave(wave)
+        except BaseException:
+            # Re-queue the wave at the front so the engine's bounded wave
+            # retry (or the caller) sees the same requests again — a
+            # transient tier failure must not lose work.
+            self._queue.extendleft(reversed(wave))
+            raise
+
+    def _score_wave(self, wave) -> None:
         ids = self._padded_wave_ids(wave)
         if self._cold is not None:
             self._cold.admit(ids[: len(wave)].reshape(-1))

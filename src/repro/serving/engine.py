@@ -30,6 +30,8 @@ import time
 from typing import Any
 
 from repro import methods
+from repro.faults import plan as faultplan
+from repro.faults.recovery import RetryStats, retry_with_backoff
 from repro.kernels import ops as kernel_ops
 from repro.serving import table as serving_tbl
 
@@ -43,6 +45,8 @@ class _Counters:
     steps: int = 0
     tokens_generated: int = 0  # LM only
     wall_s: float = 0.0
+    served_degraded: int = 0  # waves served off the warm tier (admission OOM)
+    deadline_misses: int = 0  # waves exceeding the per-wave deadline
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +64,9 @@ class CacheMetrics:
     hit_rate: float
     hot_bytes: int  # device bytes of the cached rows
     metadata_bytes: int  # id-map / recency / frequency bookkeeping bytes
+    admission_oom: int = 0  # waves the tier refused on admission pressure
+    prefetch_dropped: int = 0  # injected prefetch losses (demand re-fetched)
+    corruption_detected: int = 0  # staged bytes failing crc verification
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -91,6 +98,10 @@ class EngineMetrics:
     cache_hit_rate: float | None = None
     cache_budget_bytes: int | None = None
     prefetch_depth: int = 0
+    served_degraded: int = 0
+    deadline_misses: int = 0
+    wave_retries: int = 0
+    retry_failures: int = 0
 
     def to_json(self) -> dict:
         out = {
@@ -105,6 +116,10 @@ class EngineMetrics:
             "embedding_scale_bytes": self.embedding_scale_bytes,
             "int8_resident": self.int8_resident,
             "kernel_fallbacks": self.kernel_fallbacks,
+            "served_degraded": self.served_degraded,
+            "deadline_misses": self.deadline_misses,
+            "wave_retries": self.wave_retries,
+            "retry_failures": self.retry_failures,
         }
         if self.requests_completed:
             out["us_per_request"] = (
@@ -141,6 +156,10 @@ class Engine:
     #: Scenario tag frontends set ('lm' | 'ctr'); shows up in metrics.
     scenario: str = "?"
 
+    #: Frontends whose ``_advance`` re-queues its wave on failure (so a
+    #: re-run sees the same requests) opt in to wave-level retry here.
+    _wave_retry_safe: bool = False
+
     def __init__(self, *, serving_table, spec: methods.EmbeddingSpec):
         self.table = serving_table
         self.spec = spec
@@ -153,6 +172,17 @@ class Engine:
         self.cache_budget_bytes: int | None = None
         #: How many waves ahead the cold tier stages host->device copies.
         self.prefetch_depth: int = 0
+        #: Per-wave deadline (seconds): a wave whose wall time exceeds it
+        #: ticks ``deadline_misses`` (traced compute cannot be aborted
+        #: mid-flight, so the deadline is observed, not enforced).
+        self.deadline_s: float | None = None
+        #: Bounded retry budget for a wave that dies on a *transient* error
+        #: (injected faults, cold-tier retry exhaustion, OS hiccups); the
+        #: final failure always propagates loudly.
+        self.wave_attempts: int = 2
+        #: Wave-level retry counters (the per-tier fetch retries live on the
+        #: cold store's own RetryStats).
+        self.retry_stats = RetryStats()
         # One scope for the engine's lifetime: every jitted call site below
         # runs under it, so the report covers exactly this engine's dispatch.
         self._fallbacks = kernel_ops.FallbackScope()
@@ -196,11 +226,30 @@ class Engine:
         """
         if not self._has_work():
             return False
+        # Degraded-wave detection is plan-gated: snapshotting cache metrics
+        # per wave costs host work, so zero-fault serving skips it entirely.
+        watch_oom = faultplan.lookup("cache.admission") is not None
+        oom_before = self._admission_oom_total() if watch_oom else 0
         t0 = time.perf_counter()
         with kernel_ops.fallback_scope(self._fallbacks):
-            self._advance()
-        self._metrics.wall_s += time.perf_counter() - t0
+            if faultplan.active_plan() is None or not self._wave_retry_safe:
+                self._advance()
+            else:
+                # Chaos runs: one bounded retry budget around the wave; a
+                # re-run recomputes from the engine's host-side queues (the
+                # wave's device work is idempotent — outputs overwrite).
+                retry_with_backoff(
+                    self._advance, op=f"{self.scenario}.wave",
+                    attempts=self.wave_attempts, base_s=0.002,
+                    stats=self.retry_stats,
+                )
+        dt = time.perf_counter() - t0
+        self._metrics.wall_s += dt
         self._metrics.steps += 1
+        if self.deadline_s is not None and dt > self.deadline_s:
+            self._metrics.deadline_misses += 1
+        if watch_oom and self._admission_oom_total() > oom_before:
+            self._metrics.served_degraded += 1
         return True
 
     def run(self) -> dict[int, Any]:
@@ -246,6 +295,42 @@ class Engine:
         """Per-tier cache snapshots; () when no cache is composed in."""
         return ()
 
+    def _admission_oom_total(self) -> int:
+        return sum(c.admission_oom for c in self.cache_metrics())
+
+    def _tier_retry_stats(self) -> list[tuple[str, RetryStats]]:
+        """(name, RetryStats) per storage tier with a retried fetch path."""
+        return []
+
+    def health(self) -> dict:
+        """Readiness report: is this engine fit to take traffic, and why.
+
+        ``ready`` stays True through *recovered* degradation (warm-tier
+        serving, retried fetches — outputs are still bitwise-correct) and
+        drops only on conditions that lose work or violate the residency
+        contract: exhausted retries or a blown cache budget.
+        """
+        retry_failures = self.retry_stats.failures + sum(
+            s.failures for _, s in self._tier_retry_stats()
+        )
+        checks = {
+            "int8_resident": self.int8_resident,
+            "within_budget": (
+                self.cache_budget_bytes is None
+                or self.resident_embedding_bytes <= self.cache_budget_bytes
+            ),
+            "no_retry_exhaustion": retry_failures == 0,
+        }
+        return {
+            "ready": all(checks.values()),
+            "checks": checks,
+            "queue_depth": self.pending,
+            "served_degraded": self._metrics.served_degraded,
+            "deadline_misses": self._metrics.deadline_misses,
+            "wave_retries": self.retry_stats.retries,
+            "kernel_fallbacks": self.fallback_report()["total_fallbacks"],
+        }
+
     def fallback_report(self) -> dict:
         """Kernel-vs-fallback dispatch seen by THIS engine's call sites."""
         return self._fallbacks.stats()
@@ -258,6 +343,7 @@ class Engine:
         Finished results, cache *membership*, and the fallback report are
         kept; cache traffic counters restart with the measurement window."""
         self._metrics = _Counters()
+        self.retry_stats = RetryStats()
         self._reset_cache_counters()
 
     def metrics(self) -> EngineMetrics:
@@ -285,4 +371,8 @@ class Engine:
             cache_hit_rate=hit_rate,
             cache_budget_bytes=self.cache_budget_bytes,
             prefetch_depth=self.prefetch_depth,
+            served_degraded=m.served_degraded,
+            deadline_misses=m.deadline_misses,
+            wave_retries=self.retry_stats.retries,
+            retry_failures=self.retry_stats.failures,
         )

@@ -23,12 +23,16 @@ uses :mod:`repro.storage.tiered` instead).
 from __future__ import annotations
 
 import functools
+import time
+import zlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codestore
+from repro.faults import plan as faultplan
+from repro.faults.recovery import RetryStats, retry_with_backoff
 from repro.storage.tiered import HotRowCache
 
 __all__ = ["ColdStore"]
@@ -73,8 +77,18 @@ class ColdStore:
             (self.cache.capacity, self.host.shape[1]), self.host.dtype
         )
         self._staged: tuple[bytes, jax.Array] | None = None
+        self._staged_crc: int | None = None
         self.prefetch_hits = 0
         self.demand_puts = 0
+        # Recovery accounting: every host fetch goes through bounded
+        # retry+backoff (repro.faults.recovery); these are the per-store
+        # counters the engines surface in their end-of-run reports.
+        self.retry_stats = RetryStats()
+        self.prefetch_dropped = 0  # injected prefetch losses (re-fetched)
+        self.corruption_detected = 0  # staged bytes failing crc verification
+        self.wave = 0  # fetch-wave index, the cold.* fault schedule basis
+        self._fails_armed = 0  # remaining injected failures this wave
+        self._armed_wave = -1
 
     # ------------------------------------------------------------ bytes
 
@@ -98,13 +112,57 @@ class ColdStore:
     def _host_gather(self, flat_ids: np.ndarray) -> np.ndarray:
         return self.host[np.clip(flat_ids, 0, self.n_alloc - 1)]
 
+    def _fetch(self, flat_ids: np.ndarray) -> np.ndarray:
+        """Host gather behind bounded retry+backoff (the ``cold.fetch`` seam:
+        an installed plan can stall the gather or fail it ``fails`` times per
+        fired wave; exhaustion raises ``RetryError`` loudly)."""
+        spec = faultplan.lookup("cold.fetch")
+        armed = spec is not None and spec.fires(self.wave)
+        if armed and self._armed_wave != self.wave:
+            self._armed_wave = self.wave
+            self._fails_armed = int(spec.param("fails", 1))
+
+        def gather():
+            if armed:
+                stall = float(spec.param("stall_s", 0.0))
+                if stall:
+                    time.sleep(stall)
+                if self._fails_armed > 0:
+                    self._fails_armed -= 1
+                    raise faultplan.TransientFault(
+                        f"cold.fetch injected failure (wave {self.wave})"
+                    )
+            return self._host_gather(flat_ids)
+
+        attempts = int(spec.param("attempts", 4)) if spec is not None else 4
+        return retry_with_backoff(
+            gather, op="cold.fetch", attempts=attempts, base_s=0.002,
+            stats=self.retry_stats,
+        )
+
     def stage(self, flat_ids: np.ndarray) -> None:
         """Start the host->device copy for a future wave's ids."""
         flat_ids = np.asarray(flat_ids, np.int64).reshape(-1)
         key = flat_ids.tobytes()
         if self._staged is not None and self._staged[0] == key:
             return
-        self._staged = (key, jax.device_put(self._host_gather(flat_ids)))
+        rows = self._fetch(flat_ids)
+        crc = None
+        spec = faultplan.lookup("codestore.corrupt")
+        if spec is not None:
+            # Record the ground-truth checksum of the staged bytes so the
+            # consumer can verify the device copy before trusting it.
+            crc = zlib.crc32(rows.tobytes())
+            if spec.fires(self.wave):
+                buf = bytearray(rows.tobytes())
+                seed = int(spec.param("seed", 0))
+                pos = zlib.crc32(f"{seed}:{self.wave}".encode()) % len(buf)
+                buf[pos] ^= 0xFF
+                rows = np.frombuffer(
+                    bytes(buf), dtype=rows.dtype
+                ).reshape(rows.shape)
+        self._staged = (key, jax.device_put(rows))
+        self._staged_crc = crc
 
     # ------------------------------------------------------------ serving
 
@@ -115,7 +173,7 @@ class ColdStore:
         if moves is None:
             return
         _, _, _, adm_slots, adm_ids = moves
-        rows = jax.device_put(self._host_gather(adm_ids))
+        rows = jax.device_put(self._fetch(adm_ids))
         slots = jnp.asarray(
             np.where(adm_ids >= 0, adm_slots, self.cache.capacity)
         )
@@ -129,19 +187,45 @@ class ColdStore:
         """
         flat_ids = np.asarray(flat_ids, np.int64).reshape(-1)
         key = flat_ids.tobytes()
+        spec = faultplan.lookup("cold.prefetch_loss")
+        if (
+            spec is not None
+            and spec.fires(self.wave)
+            and self._staged is not None
+        ):
+            # Injected prefetch loss: the staged copy vanishes; the demand
+            # path below re-fetches from host ground truth (bitwise-equal).
+            self._staged = None
+            self._staged_crc = None
+            self.prefetch_dropped += 1
         if self._staged is not None and self._staged[0] == key:
             host_rows = self._staged[1]
-            self.prefetch_hits += 1
+            if self._staged_crc is not None:
+                got = zlib.crc32(
+                    np.asarray(jax.device_get(host_rows)).tobytes()
+                )
+                if got != self._staged_crc:
+                    # Corrupted staged bytes: drop them, demand re-fetch.
+                    self.corruption_detected += 1
+                    host_rows = jax.device_put(self._fetch(flat_ids))
+                    self.demand_puts += 1
+                else:
+                    self.prefetch_hits += 1
+            else:
+                self.prefetch_hits += 1
         else:
-            host_rows = jax.device_put(self._host_gather(flat_ids))
+            host_rows = jax.device_put(self._fetch(flat_ids))
             self.demand_puts += 1
         self._staged = None
+        self._staged_crc = None
         slot = jnp.asarray(self.cache.slot_of_arr[np.clip(flat_ids, 0, self.n_alloc - 1)])
         ids_dev = jnp.asarray(flat_ids.astype(np.int32))
-        return _cold_dequant(
+        out = _cold_dequant(
             self.hot, self.step, host_rows, slot, ids_dev,
             bits=self.bits, d=self.d_alloc, packed=self.packed,
         )
+        self.wave += 1
+        return out
 
     def warm_start(self, freqs) -> None:
         """Admit the top rows by frequency (checkpoint-restart warm cache)."""
@@ -175,3 +259,6 @@ class ColdStore:
         self.cache.reset_counters()
         self.prefetch_hits = 0
         self.demand_puts = 0
+        self.retry_stats = RetryStats()
+        self.prefetch_dropped = 0
+        self.corruption_detected = 0

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codestore
+from repro.faults import plan as faultplan
+from repro.faults.recovery import RetryStats, retry_with_backoff
 from repro.storage import base as rowstore
 
 __all__ = ["TieredCodes", "HotRowCache", "wrap_codes"]
@@ -281,6 +283,13 @@ class HotRowCache:
         self.misses = 0
         self.evictions = 0
         self.writebacks = 0
+        # Waves this cache refused on (injected) admission memory pressure;
+        # the wave is then served straight off the backing tier (degraded
+        # but bitwise-equal — cache-on == cache-off holds per row).
+        self.admission_oom = 0
+        self.observe_calls = 0  # wave index for the cache.admission seam
+        self.flush_calls = 0  # flush index, the tiered.writeback seam basis
+        self.retry_stats = RetryStats()  # dirty write-back retry accounting
 
     # ------------------------------------------------------------ wrap
 
@@ -303,6 +312,16 @@ class HotRowCache:
         Negative / out-of-range ids (other slots' traffic, sentinels) are
         ignored.
         """
+        wave = self.observe_calls
+        self.observe_calls += 1
+        spec = faultplan.lookup("cache.admission")
+        if spec is not None and spec.fires(wave):
+            # Injected admission OOM: refuse BEFORE any policy state mutates
+            # (a half-observed wave would desync the host maps from the
+            # device overlay).  The caller serves the wave off the backing
+            # tier — degraded, counted, bitwise-equal.
+            self.admission_oom += 1
+            return None
         ids = np.asarray(ids).reshape(-1).astype(np.int64)
         ids = ids[(ids >= 0) & (ids < self.n_alloc)]
         self.clock += 1
@@ -395,12 +414,36 @@ class HotRowCache:
 
     def flush(self, tiered: TieredCodes) -> TieredCodes:
         """Write every dirty hot row back to the backing; membership and the
-        hot tier stay intact (training can continue through the cache)."""
+        hot tier stay intact (training can continue through the cache).
+
+        The write-back runs behind bounded retry+backoff (the
+        ``tiered.writeback`` seam: an installed plan can fail it ``fails``
+        times per fired flush).  ``_write_back`` is a pure jitted function,
+        so a retried attempt is bitwise-identical; exhaustion raises
+        ``RetryError`` loudly with the dirty rows still flagged."""
         moves = self._dirty_moves()
+        flush_idx = self.flush_calls
+        self.flush_calls += 1
         if moves is None:
             return tiered
         slots, ids, k = moves
-        tiered = _write_back(tiered, slots, ids)
+        spec = faultplan.lookup("tiered.writeback")
+        armed = spec is not None and spec.fires(flush_idx)
+        fails = [int(spec.param("fails", 1)) if armed else 0]
+
+        def write():
+            if fails[0] > 0:
+                fails[0] -= 1
+                raise faultplan.TransientFault(
+                    f"tiered.writeback injected failure (flush {flush_idx})"
+                )
+            return _write_back(tiered, slots, ids)
+
+        attempts = int(spec.param("attempts", 4)) if spec is not None else 4
+        tiered = retry_with_backoff(
+            write, op="tiered.writeback", attempts=attempts, base_s=0.002,
+            stats=self.retry_stats,
+        )
         self.dirty[:] = False
         self.writebacks += k
         return tiered
@@ -463,6 +506,8 @@ class HotRowCache:
     def reset_counters(self) -> None:
         """Zero the traffic counters; membership and policy state persist."""
         self.hits = self.misses = self.evictions = self.writebacks = 0
+        self.admission_oom = 0
+        self.retry_stats = RetryStats()
 
     def stats(self) -> dict:
         return {
@@ -473,5 +518,7 @@ class HotRowCache:
             "misses": self.misses,
             "evictions": self.evictions,
             "writebacks": self.writebacks,
+            "admission_oom": self.admission_oom,
+            "writeback_retries": self.retry_stats.retries,
             "hit_rate": self.hit_rate,
         }

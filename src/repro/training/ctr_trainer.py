@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import methods, metrics
+from repro import faults, methods, metrics
 from repro.models import ctr as ctr_models
 from repro.models import embedding as emb_mod
 from repro.optim import adam_init, adam_update
@@ -46,6 +46,13 @@ class TrainerConfig:
     # before eviction); cache-on is bitwise-equal to cache-off.  Integer-
     # table methods only.
     cache_rows: int = 0
+    # Opt-in non-finite guard (repro.faults.guards): detects NaN/Inf in the
+    # step's loss or updated dense params inside the jitted step and skips
+    # the update (state rolls back; step/rng advance).  Off by default so
+    # the default compiled graph — and its bitwise parity contracts — is
+    # untouched.  Also hosts the trainer.nonfinite / alpt.delta injection
+    # seams when a FaultPlan is installed.
+    guard: bool = False
 
 
 class TrainState(NamedTuple):
@@ -78,6 +85,7 @@ class CTRTrainer:
                     f"cache_rows > 0 but method {self.spec.method!r} exposes "
                     "no cacheable storage slots (integer-table methods only)"
                 )
+        self.guard_stats = faults.GuardStats() if cfg.guard else None
         self._train_step = self._build_train_step()
         self._eval_logits = jax.jit(self._logits_fn)
 
@@ -151,6 +159,21 @@ class CTRTrainer:
             )
         return state._replace(emb_state=emb_state)
 
+    def import_state(self, state: "TrainState") -> "TrainState":
+        """Re-install the hot-row caches over a restored (exported) state.
+
+        Checkpoints hold the cache-off-equivalent containers from
+        :meth:`export_state`, so a restore re-wraps them with *cold* caches
+        (fresh policy state).  That is bitwise-harmless for the training
+        math — cache-on == cache-off per row — so exact-resume parity of
+        losses and of the exported final state survives a restart even
+        though cache membership does not."""
+        if not self.cfg.cache_rows:
+            return state
+        return state._replace(
+            emb_state=self._install_caches(state.emb_state)
+        )
+
     def cache_stats(self) -> list[dict]:
         return [cache.stats() for _, cache in self._caches]
 
@@ -212,6 +235,8 @@ class CTRTrainer:
                     {"loss": loss, "lr": lr},
                 )
 
+            if self.cfg.guard:
+                step_fn = faults.wrap_ctr_step(step_fn)
             if method.has_host_refresh:
                 return self.wrap_host_refresh(step_fn)
             return step_fn
@@ -241,6 +266,8 @@ class CTRTrainer:
                 {"lr": lr, **m},
             )
 
+        if self.cfg.guard:
+            return faults.wrap_ctr_step(step_fn)
         return step_fn
 
     # ------------------------------------------- grad/apply split (DP hooks)
@@ -367,6 +394,8 @@ class CTRTrainer:
 
     def train_step(self, state: TrainState, ids: np.ndarray, labels: np.ndarray):
         state, m = self._train_step(state, jnp.asarray(ids), jnp.asarray(labels))
+        if self.guard_stats is not None:
+            self.guard_stats.observe(m)
         state = self._maintain_caches(state, ids)
         return state, m
 

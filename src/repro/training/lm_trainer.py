@@ -23,7 +23,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro import methods
+from repro import faults, methods
 from repro.core import alpt as alpt_mod
 from repro.core import pruning as pruning_mod
 from repro.models import transformer as tfm
@@ -60,6 +60,10 @@ class LMTrainerConfig:
     use_kernels: bool = True
     # Pad the vocab table to kernel tiles (EmbeddingSpec.pad_to_tiles).
     pad_to_tiles: bool = False
+    # Opt-in non-finite guard (repro.faults.guards): skip-step on NaN/Inf
+    # in the step's loss or updated params, inside the traced step.  Off by
+    # default so the default graph (and its parity contracts) is untouched.
+    guard: bool = False
 
 
 def embedding_spec_of(
@@ -265,6 +269,8 @@ def make_train_step(
             batch_rows=int(batch["labels"].size) * dp_size,
         )
 
+    if tcfg.guard:
+        return faults.wrap_lm_step(train_step)
     return train_step
 
 

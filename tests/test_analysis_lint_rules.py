@@ -400,6 +400,128 @@ class TestNoUnfencedModelGrad:
         assert found == []
 
 
+# ------------------------------------------------------------ no-silent-except
+
+
+class TestNoSilentExcept:
+    def test_bare_except_pass_fires(self):
+        found = hits(
+            '''
+            try:
+                risky()
+            except:
+                pass
+            ''',
+            "no-silent-except")
+        assert len(found) == 1 and found[0].line == 4
+
+    def test_except_exception_pass_fires(self):
+        found = hits(
+            '''
+            try:
+                risky()
+            except Exception:
+                pass
+            ''',
+            "no-silent-except")
+        assert len(found) == 1
+
+    def test_except_exception_silent_return_fires(self):
+        # Returning a default is still silent: no raise, log, or counter.
+        found = hits(
+            '''
+            def f():
+                try:
+                    return risky()
+                except Exception:
+                    return None
+            ''',
+            "no-silent-except")
+        assert len(found) == 1
+
+    def test_tuple_containing_exception_fires(self):
+        found = hits(
+            '''
+            try:
+                risky()
+            except (ValueError, Exception):
+                pass
+            ''',
+            "no-silent-except")
+        assert len(found) == 1
+
+    def test_reraise_is_clean(self):
+        found = hits(
+            '''
+            try:
+                risky()
+            except Exception:
+                cleanup()
+                raise
+            ''',
+            "no-silent-except")
+        assert found == []
+
+    def test_logging_is_clean(self):
+        found = hits(
+            '''
+            try:
+                risky()
+            except Exception as e:
+                logger.warning("risky failed: %s", e)
+            ''',
+            "no-silent-except")
+        assert found == []
+
+    def test_counter_tick_is_clean(self):
+        found = hits(
+            '''
+            class C:
+                def f(self):
+                    try:
+                        risky()
+                    except Exception:
+                        self.failures += 1
+            ''',
+            "no-silent-except")
+        assert found == []
+
+    def test_failure_list_append_is_clean(self):
+        found = hits(
+            '''
+            class C:
+                def f(self):
+                    try:
+                        risky()
+                    except Exception:
+                        self.corrupt_steps.append(1)
+            ''',
+            "no-silent-except")
+        assert found == []
+
+    def test_narrow_handler_is_clean(self):
+        # Catching a *specific* failure silently is a decision, not a hole.
+        found = hits(
+            '''
+            try:
+                risky()
+            except ValueError:
+                pass
+            ''',
+            "no-silent-except")
+        assert found == []
+
+    def test_docstring_mention_is_clean(self):
+        found = hits(
+            '''
+            def f():
+                """Never write `except Exception: pass` in src/."""
+                return 1
+            ''',
+            "no-silent-except")
+        assert found == []
+
+
 # ------------------------------------------------------------- suppressions
 
 
@@ -446,6 +568,7 @@ def test_rule_catalog_complete():
         "no-string-dispatch", "no-raw-code-casts",
         "no-direct-storage-access", "rng-key-discipline",
         "no-silent-fallback", "no-unfenced-model-grad",
+        "no-silent-except",
     }
 
 

@@ -1,0 +1,539 @@
+"""Fault injection + recovery (`repro.faults`): the PR-9 acceptance contract.
+
+* **Every seam fires on schedule** — the ten catalogued injection sites
+  (trainer.nonfinite, alpt.delta, codestore.corrupt, cold.fetch,
+  cold.prefetch_loss, cache.admission, tiered.writeback, checkpoint.corrupt,
+  kernels.force_fallback, train.preempt) each fire exactly on their
+  FaultPlan steps and tick their typed counters.
+* **Recoverable faults are bitwise-invisible** — cold-tier corruption /
+  fetch failures / prefetch losses, refused cache admissions, write-back
+  retries, forced kernel fallbacks, and an injected preemption+resume all
+  produce outputs bit-identical to the fault-free run.
+* **Skip-step semantics** — injected non-finite steps roll the state back
+  (only step/rng advance) and the guard's skip count matches the injected
+  NaN count exactly.
+* **Deterministic retry** — backoff schedules are pure functions of
+  (attempts, base, factor); exhaustion raises RetryError loudly.
+* **Exact resume** — save at step k, restore in a fresh trainer, continue:
+  losses and the exported final state are bitwise-equal to the
+  uninterrupted run, for lpt / alpt / qr_alpt / mixed.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults, methods
+from repro.checkpoint.manager import CheckpointManager, CorruptCheckpointError
+from repro.core import alpt, lpt
+from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
+from repro.faults import FaultPlan, FaultSpec, RetryError, RetryStats
+from repro.faults import recovery
+from repro.kernels import ops
+from repro.models.ctr import DCNConfig
+from repro.serving.ctr import CTREngine, CTRRequest
+from repro.storage.cold import ColdStore
+from repro.storage.tiered import HotRowCache
+from repro.training.ctr_trainer import CTRTrainer, TrainerConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.chaos
+
+CHAOS_DATA = CTRDatasetConfig(
+    name="chaos", n_fields=4, cardinalities=(13, 29, 7, 53),
+    teacher_rank=2, seed=0,
+)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    """Plans are process-global; never let one test's chaos leak into another."""
+    faults.uninstall()
+    yield
+    faults.uninstall()
+
+
+def _spec_for(method, *, n, d=8, bits=8):
+    kw = dict(method=method, n=n, d=d, bits=bits, init_scale=0.05)
+    if method.startswith("qr"):
+        kw["hash_compression"] = 4.0
+    if method == "mixed":
+        q, r = divmod(n, 4)
+        kw["field_cards"] = (q, q, q, q + r)
+        kw["field_bits"] = (8, 4, 8, 2)
+    return methods.EmbeddingSpec(**kw)
+
+
+def _trainer(method, *, guard=False, cache_rows=0, d=8):
+    spec = _spec_for(method, n=CHAOS_DATA.n_features, d=d)
+    return CTRTrainer(TrainerConfig(
+        spec=spec, model="dcn",
+        dcn=DCNConfig(n_fields=CHAOS_DATA.n_fields, emb_dim=d,
+                      cross_depth=1, mlp_widths=(16,)),
+        guard=guard, cache_rows=cache_rows,
+    ))
+
+
+def _run_steps(trainer, state, data, lo, hi, batch=32):
+    losses = []
+    for i in range(lo, hi):
+        ids, labels = data.batch("train", i, batch)
+        state, m = trainer.train_step(state, ids, labels)
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _all_float_leaves_finite(tree) -> bool:
+    for x in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(x)
+        if np.issubdtype(arr.dtype, np.floating) and not np.all(np.isfinite(arr)):
+            return False
+    return True
+
+
+# ===================================================================== plan
+
+
+def test_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan(seed=7, specs=(
+        FaultSpec(site="trainer.nonfinite", steps=(3, 7)),
+        FaultSpec(site="cold.fetch", steps=(2,), params={"fails": 2}),
+        FaultSpec(site="kernels.force_fallback", always=True),
+    ))
+    path = tmp_path / "plan.json"
+    plan.save(path)
+    loaded = FaultPlan.load(path)
+    assert loaded == plan
+    assert loaded.fires("trainer.nonfinite", 3)
+    assert not loaded.fires("trainer.nonfinite", 4)
+    assert loaded.fires("kernels.force_fallback", 12345)  # always
+    assert loaded.lookup("cold.fetch").param("fails") == 2
+    assert loaded.lookup("no.such.site") is None
+    assert not loaded.fires("no.such.site", 0)
+
+
+def test_plan_duplicate_sites_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        FaultPlan(specs=(
+            FaultSpec(site="cold.fetch", steps=(1,)),
+            FaultSpec(site="cold.fetch", steps=(2,)),
+        ))
+
+
+def test_step_mask_matches_host_schedule():
+    spec = FaultSpec(site="trainer.nonfinite", steps=(1, 4))
+    fire = faults.step_mask(spec)
+    for step in range(6):
+        assert bool(fire(jnp.int32(step))) == spec.fires(step)
+    assert not bool(faults.step_mask(None)(jnp.int32(0)))
+    assert bool(faults.step_mask(FaultSpec(site="x", always=True))(jnp.int32(9)))
+
+
+# ==================================================================== retry
+
+
+def test_backoff_schedule_deterministic():
+    assert recovery.backoff_schedule(4, 0.002) == (0.002, 0.004, 0.008)
+    assert recovery.backoff_schedule(1, 0.002) == ()
+    # The cap bounds every term, so chaos runs can't sleep unboundedly.
+    assert recovery.backoff_schedule(12, 0.5, max_s=1.0)[-1] == 1.0
+
+
+def test_retry_succeeds_after_transients_with_recorded_backoff():
+    stats = RetryStats()
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise faults.TransientFault("injected")
+        return "ok"
+
+    sleeps: list[float] = []
+    out = recovery.retry_with_backoff(
+        flaky, op="t", attempts=4, base_s=0.002, stats=stats,
+        sleep=sleeps.append,
+    )
+    assert out == "ok"
+    assert calls["n"] == 3
+    # The applied backoff is exactly the deterministic schedule prefix.
+    assert tuple(sleeps) == recovery.backoff_schedule(4, 0.002)[:2]
+    assert stats.calls == 1
+    assert stats.retries == 2
+    assert stats.failures == 0
+    assert stats.backoff_s == sum(sleeps)
+
+
+def test_retry_exhaustion_is_loud():
+    stats = RetryStats()
+
+    def doomed():
+        raise faults.TransientFault("always")
+
+    with pytest.raises(RetryError, match="failed after 3 attempts") as ei:
+        recovery.retry_with_backoff(
+            doomed, op="t", attempts=3, base_s=0.0, stats=stats,
+            sleep=lambda s: None,
+        )
+    assert isinstance(ei.value.__cause__, faults.TransientFault)
+    assert stats.failures == 1
+    assert stats.retries == 2
+
+
+def test_retry_real_bugs_propagate_immediately():
+    stats = RetryStats()
+
+    def bug():
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        recovery.retry_with_backoff(bug, op="t", attempts=5, stats=stats,
+                                    sleep=lambda s: None)
+    assert stats.retries == 0
+
+
+# =================================================================== guards
+
+
+def test_guard_skip_count_matches_injected_nan_count():
+    fired_steps = (1, 3)
+    faults.install(FaultPlan(specs=(
+        FaultSpec(site="trainer.nonfinite", steps=fired_steps),
+    )))
+    trainer = _trainer("alpt", guard=True)  # seams bind at construction
+    data = CTRSynthetic(CHAOS_DATA)
+    state = trainer.init_state()
+    for i in range(5):
+        ids, labels = data.batch("train", i, 32)
+        before = state
+        state, _ = trainer.train_step(state, ids, labels)
+        if int(before.step) in fired_steps:
+            # Skip-step semantics: rollback everything but the step/rng clock.
+            _assert_trees_equal(state.dense_params, before.dense_params)
+            _assert_trees_equal(state.emb_state, before.emb_state)
+        assert int(state.step) == int(before.step) + 1
+    assert trainer.guard_stats.skipped == len(fired_steps)
+    assert trainer.guard_stats.nonfinite_fired == len(fired_steps)
+    assert _all_float_leaves_finite(state.dense_params)
+
+
+def test_alpt_delta_blowup_recovered_by_skip_step():
+    faults.install(FaultPlan(specs=(
+        FaultSpec(site="alpt.delta", steps=(2,)),  # default scale: inf
+    )))
+    trainer = _trainer("alpt", guard=True)
+    data = CTRSynthetic(CHAOS_DATA)
+    state, _ = _run_steps(trainer, trainer.init_state(), data, 0, 4)
+    assert trainer.guard_stats.delta_fired == 1
+    assert trainer.guard_stats.skipped == 1
+    assert _all_float_leaves_finite(state.emb_state)
+    assert _all_float_leaves_finite(state.dense_params)
+
+
+def test_alpt_step_clamp_bounds_finite_blowup():
+    clamp = 0.005
+    cfg = alpt.ALPTConfig(bits=8, optimizer="sgd", step_lr=1e-3,
+                          step_clamp=clamp)
+    table = lpt.init_table(jax.random.PRNGKey(0), 16, 8, 8,
+                           step_size=0.01, optimizer="sgd")
+    ids = jnp.array([1, 2, 3])
+    c = jax.random.normal(jax.random.PRNGKey(1), (3, 8))
+    new_table, _, aux = alpt.alpt_step(
+        table, ids, lambda rows: jnp.sum(rows * c), cfg=cfg, lr=0.05,
+        noise_key=jax.random.PRNGKey(2),
+    )
+    # Initial Delta (0.01) sits above the clamp, so every touched row clamps.
+    assert int(aux["delta_clamped"]) == 3
+    assert float(jnp.max(new_table.step[ids])) <= clamp + 1e-12
+
+
+# ================================================================ cold tier
+
+
+def _make_cold(codes, step):
+    return ColdStore(codes, step, cache_rows=8, name="chaos")
+
+
+def test_cold_tier_seams_are_bitwise_invisible():
+    rng = np.random.RandomState(0)
+    codes = jnp.asarray(rng.randint(-127, 128, size=(64, 16)), jnp.int8)
+    step = jnp.asarray(rng.uniform(0.01, 0.1, size=(64,)), jnp.float32)
+    waves = [rng.randint(0, 64, size=8) for _ in range(3)]
+
+    ref = _make_cold(codes, step)
+    ref_out = []
+    for ids in waves:
+        ref.stage(ids)
+        ref_out.append(np.asarray(ref.rows(ids)))
+
+    faults.install(FaultPlan(specs=(
+        FaultSpec(site="codestore.corrupt", steps=(0,)),
+        FaultSpec(site="cold.fetch", steps=(1,), params={"fails": 2}),
+        FaultSpec(site="cold.prefetch_loss", steps=(2,)),
+    )))
+    chaos = _make_cold(codes, step)
+    for ids, expect in zip(waves, ref_out):
+        chaos.stage(ids)
+        np.testing.assert_array_equal(np.asarray(chaos.rows(ids)), expect)
+
+    assert chaos.corruption_detected == 1  # wave 0: staged bytes flipped
+    assert chaos.retry_stats.retries == 2  # wave 1: two transient failures
+    assert chaos.prefetch_dropped == 1  # wave 2: staged copy vanished
+    assert chaos.retry_stats.failures == 0
+    # 3 staged fetches + 2 demand re-fetches (corruption, prefetch loss).
+    assert chaos.retry_stats.calls == 5
+    assert chaos.demand_puts == 2
+
+
+def test_cold_fetch_exhaustion_raises_retry_error():
+    rng = np.random.RandomState(1)
+    codes = jnp.asarray(rng.randint(-127, 128, size=(16, 8)), jnp.int8)
+    step = jnp.ones((16,), jnp.float32)
+    faults.install(FaultPlan(specs=(
+        FaultSpec(site="cold.fetch", steps=(0,),
+                  params={"fails": 5, "attempts": 2}),
+    )))
+    store = _make_cold(codes, step)
+    with pytest.raises(RetryError, match="cold.fetch"):
+        store.stage(np.arange(4))
+    assert store.retry_stats.failures == 1
+
+
+# ============================================================ tiered storage
+
+
+def test_cache_admission_refusal_keeps_training_bitwise():
+    data = CTRSynthetic(CHAOS_DATA)
+    ref_trainer = _trainer("alpt")
+    ref_state, ref_losses = _run_steps(
+        ref_trainer, ref_trainer.init_state(), data, 0, 4
+    )
+
+    # Refuse EVERY admission: the cache stays empty, every read/write serves
+    # off the backing tier — degraded, counted, and bitwise-equal.
+    faults.install(FaultPlan(specs=(
+        FaultSpec(site="cache.admission", always=True),
+    )))
+    deg_trainer = _trainer("alpt", cache_rows=4)
+    deg_state, deg_losses = _run_steps(
+        deg_trainer, deg_trainer.init_state(), data, 0, 4
+    )
+
+    assert deg_losses == ref_losses
+    _assert_trees_equal(deg_trainer.export_state(deg_state), ref_state)
+    stats = deg_trainer.cache_stats()
+    assert sum(s["admission_oom"] for s in stats) == 4  # one per step
+    assert all(s["rows_cached"] == 0 for s in stats)
+
+
+def _dirty_cache_setup(codes):
+    """A 4-slot cache over an 8-row backing with rows 1, 2 cached and dirty."""
+    cache = HotRowCache(4, 8, name="wb")
+    tiered = cache.apply(cache.wrap(codes), cache.observe(np.array([1, 2])))
+    new_rows = jnp.asarray([[7, 7, 7, 7], [-7, -7, -7, -7]], jnp.int8)
+    tiered = tiered.set_rows(jnp.array([1, 2]), new_rows)
+    cache.observe(np.array([1, 2]), write=True)  # mark the written rows dirty
+    return cache, tiered
+
+
+def test_writeback_retry_is_bitwise_and_counted():
+    codes = jnp.asarray(
+        np.random.RandomState(2).randint(-5, 6, (8, 4)), jnp.int8
+    )
+    ref_cache, ref_tiered = _dirty_cache_setup(codes)
+    ref_backing = np.asarray(ref_cache.flush(ref_tiered).backing)
+
+    faults.install(FaultPlan(specs=(
+        FaultSpec(site="tiered.writeback", steps=(0,), params={"fails": 2}),
+    )))
+    cache, tiered = _dirty_cache_setup(codes)
+    flushed = cache.flush(tiered)
+    np.testing.assert_array_equal(np.asarray(flushed.backing), ref_backing)
+    assert cache.retry_stats.retries == 2
+    assert cache.retry_stats.failures == 0
+    assert not cache.dirty.any()
+    assert cache.stats()["writeback_retries"] == 2
+
+
+def test_writeback_exhaustion_keeps_rows_flagged():
+    codes = jnp.zeros((8, 4), jnp.int8)
+    faults.install(FaultPlan(specs=(
+        FaultSpec(site="tiered.writeback", steps=(0,),
+                  params={"fails": 5, "attempts": 2}),
+    )))
+    cache, tiered = _dirty_cache_setup(codes)
+    with pytest.raises(RetryError, match="tiered.writeback"):
+        cache.flush(tiered)
+    assert cache.retry_stats.failures == 1
+    assert cache.dirty.any()  # nothing lost: rows still flagged for retry
+
+
+# =============================================================== checkpoints
+
+
+def test_checkpoint_corruption_falls_back_to_last_good(tmp_path):
+    tree1 = {"s": jnp.int32(1), "w": jnp.arange(6.0).reshape(2, 3)}
+    tree2 = {"s": jnp.int32(2), "w": jnp.arange(6.0).reshape(2, 3) * 2}
+    mgr = CheckpointManager(tmp_path, keep=5, save_every=1)
+    assert mgr.maybe_save(tree1, 1)
+    assert mgr.maybe_save(tree2, 2)
+
+    faults.corrupt_checkpoint_leaf(tmp_path, 2)
+    restored, manifest = mgr.restore(tree1)
+    assert manifest["step"] == 1
+    assert mgr.corrupt_steps == [2]
+    _assert_trees_equal(restored, tree1)
+
+    # An explicitly requested corrupted step is refused, never half-loaded.
+    with pytest.raises(CorruptCheckpointError):
+        mgr.restore(tree1, step=2)
+
+    faults.corrupt_checkpoint_leaf(tmp_path, 1)
+    fresh = CheckpointManager(tmp_path, keep=5, save_every=1)
+    with pytest.raises(CorruptCheckpointError, match="failed verification"):
+        fresh.restore(tree1)
+    assert fresh.corrupt_steps == [2, 1]
+
+
+@pytest.mark.parametrize("method", ["lpt", "alpt", "qr_alpt", "mixed"])
+def test_exact_resume_parity(method, tmp_path):
+    data = CTRSynthetic(CHAOS_DATA)
+    ref_trainer = _trainer(method)
+    ref_state, ref_losses = _run_steps(
+        ref_trainer, ref_trainer.init_state(), data, 0, 6
+    )
+
+    # First life: train through a hot-row cache, checkpoint the exported
+    # (cache-off-equivalent) state at step 3.
+    tr1 = _trainer(method, cache_rows=4)
+    s1, losses1 = _run_steps(tr1, tr1.init_state(), data, 0, 3)
+    mgr = CheckpointManager(tmp_path, keep=2, save_every=100)
+    assert mgr.maybe_save(tr1.export_state(s1), 3, force=True)
+
+    # Second life: a fresh trainer restores and continues.
+    tr2 = _trainer(method, cache_rows=4)
+    template = tr2.export_state(tr2.init_state())
+    restored, manifest = CheckpointManager(
+        tmp_path, keep=2, save_every=100
+    ).restore(template)
+    s2 = tr2.import_state(restored)
+    s2, losses2 = _run_steps(tr2, s2, data, manifest["step"], 6)
+
+    assert losses1 + losses2 == ref_losses  # bitwise float equality
+    _assert_trees_equal(tr2.export_state(s2), ref_trainer.export_state(ref_state))
+
+
+# ================================================================== serving
+
+
+def test_degraded_serving_bitwise_equal_to_cache_off():
+    data = CTRSynthetic(CHAOS_DATA)
+    trainer = _trainer("alpt")
+    state, _ = _run_steps(trainer, trainer.init_state(), data, 0, 2)
+    req_ids, _ = data.batch("test", 0, 16)
+
+    def score(engine):
+        rids = [engine.submit(CTRRequest(ids=row)) for row in req_ids]
+        done = engine.run()
+        return [done[r]["prob"] for r in rids]
+
+    ref_engine = CTREngine.from_state(state, trainer.cfg, batch=8)
+    ref_probs = score(ref_engine)
+
+    faults.install(FaultPlan(specs=(
+        FaultSpec(site="cache.admission", always=True),
+    )))
+    deg_engine = CTREngine.from_state(
+        state, trainer.cfg, batch=8, cache_rows=4
+    )
+    assert score(deg_engine) == ref_probs  # bitwise float equality
+    m = deg_engine.metrics()
+    assert m["served_degraded"] == m["steps"] > 0
+    assert m["retry_failures"] == 0
+    health = deg_engine.health()
+    # Recovered degradation keeps the engine READY — outputs stay correct.
+    assert health["ready"]
+    assert health["served_degraded"] == m["served_degraded"]
+
+
+# ================================================================== kernels
+
+
+def test_kernels_force_fallback_bitwise_and_counted():
+    rng = np.random.RandomState(3)
+    codes = jnp.asarray(rng.randint(-127, 128, size=(16, 8)), jnp.int8)
+    step = jnp.asarray(rng.uniform(0.01, 0.1, size=(16,)), jnp.float32)
+    ids = jnp.array([0, 3, 3, 9, 15])
+    ref = np.asarray(ops.dequant_gather(codes, step, ids, use_kernel=False))
+
+    faults.install(FaultPlan(specs=(
+        FaultSpec(site="kernels.force_fallback", always=True),
+    )))
+    scope = ops.FallbackScope()
+    with ops.fallback_scope(scope):
+        forced = np.asarray(ops.dequant_gather(codes, step, ids))
+    np.testing.assert_array_equal(forced, ref)
+    reasons = {fb["reason"] for fb in scope.stats()["fallbacks"]
+               if fb["op"] == "dequant_gather"}
+    assert reasons == {"fault-injected"}
+
+    # The 'ops' param narrows the seam: other ops are untouched.
+    faults.install(FaultPlan(specs=(
+        FaultSpec(site="kernels.force_fallback", always=True,
+                  params={"ops": ["sr_round"]}),
+    )))
+    scope2 = ops.FallbackScope()
+    with ops.fallback_scope(scope2):
+        np.testing.assert_array_equal(
+            np.asarray(ops.dequant_gather(codes, step, ids)), ref
+        )
+    assert not any(fb["reason"] == "fault-injected"
+                   for fb in scope2.stats()["fallbacks"])
+
+
+# =============================================================== preemption
+
+
+def test_injected_preemption_resumes_bitwise(tmp_path, capsys):
+    from repro.launch import train as train_cli
+
+    plan_path = tmp_path / "plan.json"
+    FaultPlan(specs=(FaultSpec(site="train.preempt", steps=(2,)),)).save(
+        plan_path
+    )
+    base = ["--arch", "ctr", "--steps", "4", "--batch", "8",
+            "--ckpt-every", "1", "--log-every", "100", "--no-kernels"]
+
+    def done_summary():
+        out = capsys.readouterr().out
+        return json.loads(out.rsplit("[train] done:", 1)[1].strip().splitlines()[0])
+
+    # Preempted run: exits 75 with a forced checkpoint at the preempt step.
+    rc = train_cli.main(base + ["--ckpt-dir", str(tmp_path / "ck"),
+                                "--fault-plan", str(plan_path)])
+    assert rc == 75
+    capsys.readouterr()
+    faults.uninstall()  # the CLI installs the plan process-globally
+
+    # Requeue: resumes from the checkpoint and finishes the remaining steps.
+    rc = train_cli.main(base + ["--ckpt-dir", str(tmp_path / "ck")])
+    assert rc == 0
+    resumed = done_summary()
+    assert resumed["steps"] == 2  # steps 2..3 only
+
+    # Uninterrupted reference run.
+    rc = train_cli.main(base + ["--ckpt-dir", str(tmp_path / "ck-ref")])
+    assert rc == 0
+    ref = done_summary()
+    assert ref["steps"] == 4
+    assert resumed["final_loss"] == ref["final_loss"]  # bitwise equality
