@@ -1,12 +1,15 @@
 """``python -m repro.analysis`` — the static contract gate.
 
-Runs the AST lint rules over ``src/repro`` + ``benchmarks`` and the jaxpr
-invariant checkers over the trace-target registry; exits nonzero on any
-unsuppressed finding.
+Runs the AST lint rules over ``src/repro`` + ``benchmarks``, the jaxpr
+invariant checkers over the trace-target registry, and the perf-regression
+gate over the BENCH_*.json artifacts vs ``BENCH_BASELINE.json``; exits
+nonzero on any unsuppressed finding.
 
-    python -m repro.analysis                   # both layers, human output
+    python -m repro.analysis                   # all layers, human output
     python -m repro.analysis --json            # machine findings (CI artifact)
-    python -m repro.analysis --no-jaxpr        # lint only (fast)
+    python -m repro.analysis --no-jaxpr        # skip the trace checkers
+    python -m repro.analysis --no-perf         # skip the bench gate
+    python -m repro.analysis --perf-report perf-gate-report.json
     python -m repro.analysis --suppressions analysis-suppressions.txt
     python -m repro.analysis --list-rules      # the catalog
 """
@@ -29,6 +32,11 @@ def main(argv: list[str] | None = None) -> int:
                     help="skip the AST lint layer")
     ap.add_argument("--no-jaxpr", action="store_true",
                     help="skip the jaxpr trace checkers")
+    ap.add_argument("--no-perf", action="store_true",
+                    help="skip the BENCH perf-regression gate")
+    ap.add_argument("--perf-report", type=pathlib.Path, default=None,
+                    help="write raw perf-gate findings as JSON here when "
+                    "any exist (the artifact CI uploads on failure)")
     ap.add_argument("--rule", action="append", default=None,
                     help="run only this lint rule (repeatable)")
     ap.add_argument("--target", action="append", default=None,
@@ -61,6 +69,9 @@ def main(argv: list[str] | None = None) -> int:
         print("trace targets:")
         for t in all_targets():
             print(f"  {t.name:28s} checks={','.join(t.checks)}")
+        print("perf gate:")
+        print("  perf-regression              BENCH_*.json artifacts vs "
+              "BENCH_BASELINE.json (repro.obs.gate)")
         return 0
 
     findings = []
@@ -85,6 +96,10 @@ def main(argv: list[str] | None = None) -> int:
                 ap.error(f"unknown target(s): {', '.join(unknown)}")
         findings.extend(run_jaxpr_checks(names=args.target))
 
+    if not args.no_perf:
+        from repro.analysis.perf import run_perf_checks
+        findings.extend(run_perf_checks(report_path=args.perf_report))
+
     supp_path = args.suppressions
     if supp_path is None and not args.no_suppressions:
         from repro.analysis.lint import REPO_ROOT
@@ -101,7 +116,8 @@ def main(argv: list[str] | None = None) -> int:
         for f in findings:
             print(f.format())
         layers = [lyr for lyr, off in
-                  (("lint", args.no_lint), ("jaxpr", args.no_jaxpr))
+                  (("lint", args.no_lint), ("jaxpr", args.no_jaxpr),
+                   ("perf", args.no_perf))
                   if not off]
         print(f"repro.analysis [{'+'.join(layers)}]: "
               f"{len(findings)} finding(s)")

@@ -187,6 +187,57 @@ def _build_train_lm_dense() -> Traced:
     return Traced(closed, frozenset(), packed_shapes)
 
 
+def _build_train_ctr_dp(method: str, *, sync_bits: int = 8) -> Traced:
+    """DP-wrapped CTR trainer step on a 1-device mesh at ``sync_bits``.
+
+    The compressed gradient sync runs *between* backward and update inside
+    the same traced program, so the codes-dequant-only contract must hold
+    through the collective too — the wire codes and the table codes share
+    dequant machinery.  Storage stays byte-width/unpacked here: the DP
+    wrapper syncs the *dense* dequantized-table gradient (the only
+    rank-invariant shape), so a packed store would legitimately unpack
+    whole — packed containment belongs to the fused sparse targets above.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    import repro.dist  # noqa: F401  (installs the shard_map compat adapter)
+    from repro.training import data_parallel
+
+    trainer, state, spec = _ctr_trainer(method, bits=8, packed=False)
+    mesh = jax.make_mesh((1,), ("data",))
+    dp = data_parallel.DPConfig(sync_bits=sync_bits)
+    step = data_parallel.make_ctr_dp_step(trainer, mesh, dp, jit=False)
+    ids = jnp.zeros((16, len(CTR_CARDS)), jnp.int32)
+    labels = jnp.zeros((16,), jnp.float32)
+    closed = jax.make_jaxpr(lambda s, i, y: step(s, i, y))(state, ids, labels)
+    _, packed_shapes = _table_shapes(state)
+    return Traced(closed, frozenset(), packed_shapes)
+
+
+def _build_train_lm_dp(method: str, *, sync_bits: int = 8) -> Traced:
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+
+    import repro.dist  # noqa: F401  (installs the shard_map compat adapter)
+    from repro.training import data_parallel, lm_trainer
+
+    cfg = dc.replace(configs.smoke_config("smollm-135m"),
+                     embedding_method=method)
+    tcfg = lm_trainer.LMTrainerConfig(dp_sync_bits=sync_bits)
+    state = lm_trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    mesh = jax.make_mesh((1,), ("data",))
+    step = data_parallel.make_lm_dp_step(cfg, tcfg, mesh, jit=False)
+    tokens = jnp.zeros((2, 8), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    closed = jax.make_jaxpr(lambda s, b: step(s, b))(state, batch)
+    _, packed_shapes = _table_shapes(state)
+    return Traced(closed, frozenset(), packed_shapes)
+
+
 def _build_collective(bits: int) -> Traced:
     import jax
     import jax.numpy as jnp
@@ -236,6 +287,16 @@ def all_targets() -> list[TraceTarget]:
     targets.append(TraceTarget(
         name="train-lm-dense/lpt",
         build=_build_train_lm_dense,
+        checks=("codes-dequant-only", "packed-containment"),
+    ))
+    targets.append(TraceTarget(
+        name="train-ctr-dp8/alpt",
+        build=lambda: _build_train_ctr_dp("alpt", sync_bits=8),
+        checks=("codes-dequant-only", "packed-containment"),
+    ))
+    targets.append(TraceTarget(
+        name="train-lm-dp8/lpt",
+        build=lambda: _build_train_lm_dp("lpt", sync_bits=8),
         checks=("codes-dequant-only", "packed-containment"),
     ))
     for bits in (4, 2):

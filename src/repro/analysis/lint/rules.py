@@ -1,4 +1,4 @@
-"""The rule catalog: seven AST rules holding the repo's code contracts.
+"""The rule catalog: eight AST rules holding the repo's code contracts.
 
 Each rule documents the contract it holds, the allowlist (modules that
 legitimately own the forbidden pattern), and the regex-era failure modes it
@@ -724,4 +724,109 @@ class NoSilentExcept(Rule):
                     if isinstance(f, ast.Attribute) and f.attr in (
                             _LOG_ATTRS | _COUNTER_ATTRS):
                         return True
+        return False
+
+
+# --------------------------------------------------------------------------
+# no-host-sync
+# --------------------------------------------------------------------------
+
+_JIT_WRAPPERS = {
+    "jax.jit", "jax.pmap", "shard_map", "jax.experimental.shard_map.shard_map",
+}
+_HOST_PULL_FUNCS = {"numpy.asarray", "numpy.array", "jax.device_get"}
+
+
+@register
+class NoHostSync(Rule):
+    """Library code never forces a device sync; step functions never pull
+    values to the host.
+
+    The obs contract (PR 10) keeps dispatch fully async when tracing is
+    off: the only sanctioned ``block_until_ready`` in ``src/repro`` is the
+    tracer's span-edge fence (a reviewed ``analysis-suppressions.txt``
+    entry — it runs only while tracing is armed, at host span boundaries).
+    Anywhere else a ``.block_until_ready()`` stalls the pipeline for every
+    caller, traced or not.
+
+    Inside *jit scopes* — functions decorated with / passed to
+    ``jax.jit``/``pmap``/``shard_map``, and anything lexically nested in
+    one — ``np.asarray``/``np.array``/``jax.device_get`` additionally
+    force a device->host transfer at trace time (a hidden sync and a
+    constant-folded copy baked into the compiled program).  Host-side
+    policy code may convert freely; traced step functions may not.
+    Benchmarks are excluded: min-of-N timing *requires* explicit syncs.
+    """
+
+    name = "no-host-sync"
+    hint = ("keep device values on device: drop the block_until_ready (the "
+            "obs tracer fences span edges when armed), and inside jitted "
+            "step functions use jnp.* — np.asarray/device_get force a "
+            "device->host pull at trace time")
+    exclude = ("benchmarks/*",)
+
+    def check(self, source: Source) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(source.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if ((isinstance(f, ast.Attribute)
+                 and f.attr == "block_until_ready")
+                    or source.dotted(f) == "jax.block_until_ready"):
+                out.append(self.finding(
+                    source, node, "host sync: `block_until_ready` outside "
+                    "the tracer's reviewed span-edge fence"))
+        scopes = {id(fn): fn for fn in self._jit_scopes(source)}
+        for node in ast.walk(source.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = source.dotted(node.func)
+            if dotted not in _HOST_PULL_FUNCS:
+                continue
+            # attribute to the innermost enclosing function only
+            fn = next((a for a in ancestors(node) if isinstance(
+                a, (ast.FunctionDef, ast.AsyncFunctionDef))), None)
+            if fn is not None and id(fn) in scopes:
+                out.append(self.finding(
+                    source, node, f"`{dotted}` inside jit scope "
+                    f"`{fn.name}` pulls a device value to the host at "
+                    "trace time"))
+        return out
+
+    def _jit_scopes(self, source: Source):
+        """FunctionDefs compiled by jax: jit-decorated, passed to a jit
+        wrapper by name, or lexically nested in either."""
+        defs: dict[str, list[ast.AST]] = {}
+        roots: list[ast.AST] = []
+        for node in ast.walk(source.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, []).append(node)
+                if any(self._is_jit_expr(source, d)
+                       for d in node.decorator_list):
+                    roots.append(node)
+        for node in ast.walk(source.tree):
+            if (isinstance(node, ast.Call)
+                    and source.dotted(node.func) in _JIT_WRAPPERS
+                    and node.args and isinstance(node.args[0], ast.Name)):
+                roots.extend(defs.get(node.args[0].id, []))
+        seen: set[int] = set()
+        for root in roots:
+            for sub in ast.walk(root):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)
+                              ) and id(sub) not in seen:
+                    seen.add(id(sub))
+                    yield sub
+
+    @staticmethod
+    def _is_jit_expr(source: Source, node: ast.AST) -> bool:
+        """`@jax.jit`, `@partial(jax.jit, ...)`, `@jax.jit(...)` shapes."""
+        if source.dotted(node) in _JIT_WRAPPERS:
+            return True
+        if isinstance(node, ast.Call):
+            if source.dotted(node.func) in _JIT_WRAPPERS:
+                return True
+            if (source.dotted(node.func) or "").endswith("partial"):
+                return any(source.dotted(a) in _JIT_WRAPPERS
+                           for a in node.args)
         return False

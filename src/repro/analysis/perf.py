@@ -1,0 +1,62 @@
+"""The ``perf-regression`` layer: BENCH artifacts vs the committed baseline.
+
+Thin adapter over :mod:`repro.obs.gate` that turns gate findings into the
+analysis layer's :class:`~repro.analysis.findings.Finding` shape, so a perf
+regression fails ``python -m repro.analysis`` exactly the way a lint or
+jaxpr contract violation does (and is addressable through the same
+suppression file, rule name ``perf-regression``).
+
+The baseline is ``BENCH_BASELINE.json`` at the repo root — seeded and
+re-seeded deliberately via ``python -m repro.obs.gate seed``.  No baseline
+file means the gate has nothing to hold and the layer passes (a fresh
+clone without artifacts must not fail analysis); a *committed* baseline
+whose artifacts have regressed or vanished fails it.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.analysis.findings import Finding
+from repro.obs import gate
+
+BASELINE_NAME = "BENCH_BASELINE.json"
+
+_HINT = (
+    "re-run the benchmark to refresh the artifact; if the change is "
+    "intended, re-seed the baseline: python -m repro.obs.gate seed "
+    "BENCH_*.json --out BENCH_BASELINE.json"
+)
+
+
+def run_perf_checks(root: pathlib.Path | None = None,
+                    baseline_path: pathlib.Path | None = None,
+                    report_path: pathlib.Path | None = None) -> list[Finding]:
+    """Compare the repo-root BENCH_*.json artifacts to the baseline.
+
+    ``report_path`` (CI) gets the raw gate findings as JSON whenever any
+    exist — the artifact a failing analysis job uploads for diffing.
+    """
+    if root is None:
+        from repro.analysis.lint import REPO_ROOT
+
+        root = REPO_ROOT
+    baseline_path = baseline_path or root / BASELINE_NAME
+    if not pathlib.Path(baseline_path).exists():
+        return []
+    baseline = gate.load_baseline(baseline_path)
+    fresh = gate.load_fresh(root, baseline)
+    raw = gate.compare(baseline, fresh)
+    if report_path is not None and raw:
+        pathlib.Path(report_path).write_text(json.dumps(
+            [f.to_json() for f in raw], indent=2) + "\n")
+    return [
+        Finding(
+            rule="perf-regression",
+            path=f.bench,
+            line=0,
+            message=f"{f.cell} :: {f.metric}: {f.message}",
+            hint=_HINT,
+        )
+        for f in raw
+    ]

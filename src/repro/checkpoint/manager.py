@@ -29,6 +29,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import counters as obs_counters
+from repro.obs.trace import tracer
+
+_REG = obs_counters.registry()
+_MET_SAVES = _REG.counter("ckpt.saves", "checkpoints written")
+_MET_RESTORES = _REG.counter("ckpt.restores", "checkpoints restored")
+_MET_CORRUPT = _REG.counter(
+    "ckpt.corrupt_refused", "restores refused on verification failure"
+)
+
 
 class CorruptCheckpointError(RuntimeError):
     """A committed artifact failed checksum/parse verification on restore."""
@@ -181,6 +191,14 @@ def restore_serving_checkpoint(directory: str | os.PathLike, spec: Any,
 def save_pytree(tree, directory: str | os.PathLike, *, step: int,
                 extra_meta: dict | None = None) -> pathlib.Path:
     """Atomic save: write to a temp dir, fsync, rename, then commit-marker."""
+    with tracer().span("ckpt.save", step=step):
+        out = _save_pytree(tree, directory, step=step, extra_meta=extra_meta)
+    _MET_SAVES.inc()
+    return out
+
+
+def _save_pytree(tree, directory: str | os.PathLike, *, step: int,
+                 extra_meta: dict | None = None) -> pathlib.Path:
     directory = pathlib.Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:09d}"
@@ -223,6 +241,10 @@ def load_pytree(template, directory: str | os.PathLike, *, step: int | None = No
                 shardings=None, verify: bool = True):
     """Restore into the structure of ``template``; optionally re-shard.
 
+    Observability: the whole restore is one ``ckpt.restore`` span;
+    ``ckpt.restores`` counts successes, ``ckpt.corrupt_refused`` counts
+    restores refused by verification.
+
     ``template`` provides the pytree structure (arrays or ShapeDtypeStructs);
     ``shardings`` (same structure, NamedSharding leaves) re-shards each leaf
     onto the current mesh — different device counts are fine because the save
@@ -233,6 +255,19 @@ def load_pytree(template, directory: str | os.PathLike, *, step: int | None = No
     unparseable artifact — a corrupted checkpoint is *refused*, never
     half-loaded.  Manifests from before checksums simply skip verification.
     """
+    with tracer().span("ckpt.restore", step=-1 if step is None else step):
+        try:
+            out = _load_pytree(template, directory, step=step,
+                               shardings=shardings, verify=verify)
+        except CorruptCheckpointError:
+            _MET_CORRUPT.inc()
+            raise
+    _MET_RESTORES.inc()
+    return out
+
+
+def _load_pytree(template, directory: str | os.PathLike, *, step: int | None = None,
+                 shardings=None, verify: bool = True):
     directory = pathlib.Path(directory)
     if step is None:
         step = latest_step(directory)

@@ -171,6 +171,17 @@ class GuardStats:
     def delta_clamped(self) -> int:
         return int(self._delta_clamped)
 
+    def publish(self) -> None:
+        """Mirror the materialized totals into ``faults.guard.*`` registry
+        gauges.  Gauges (not counters): the totals here are already
+        cumulative, and publishing happens at report time — never per step,
+        preserving the no-sync-per-step property."""
+        from repro.obs import counters as obs_counters
+
+        reg = obs_counters.registry()
+        for name, val in self.to_json().items():
+            reg.gauge(f"faults.guard.{name}").set(val)
+
     def to_json(self) -> dict:
         return {
             "steps": self.steps,

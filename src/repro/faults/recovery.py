@@ -14,8 +14,20 @@ import time
 from typing import Callable, TypeVar
 
 from repro.faults.plan import InjectedFault
+from repro.obs import counters as obs_counters
 
 T = TypeVar("T")
+
+# Every retried seam reports into the unified registry, keyed by the seam's
+# ``op`` name — one place to read retry pressure across tiers and engines.
+_MET_RETRIES = obs_counters.registry().counter(
+    "faults.retries", "retry attempts across all retried seams",
+    labels=("op",),
+)
+_MET_RETRY_FAILURES = obs_counters.registry().counter(
+    "faults.retry_failures", "calls that exhausted all attempts",
+    labels=("op",),
+)
 
 
 class RetryError(RuntimeError):
@@ -89,8 +101,10 @@ def retry_with_backoff(
             if stats is not None:
                 stats.retries += 1
                 stats.backoff_s += sched[k]
+            _MET_RETRIES.inc(1, op)
             sleep(sched[k])
     if stats is not None:
         stats.failures += 1
+    _MET_RETRY_FAILURES.inc(1, op)
     assert last is not None
     raise RetryError(op, attempts, last) from last

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core.codestore import CodeStore
 from repro.kernels import ref
+from repro.obs import counters as obs_counters
 from repro.storage import base as rowstore
 from repro.storage.tiered import TieredCodes
 from repro.kernels.dequant_gather import dequant_gather as _dequant_gather
@@ -86,8 +87,16 @@ class FallbackScope:
         return _stats_of(self.kernel_calls, self.fallbacks)
 
 
-_KERNEL_CALLS: collections.Counter = collections.Counter()
-_FALLBACKS: collections.Counter = collections.Counter()
+# Process-wide tallies live in the repro.obs registry (the single schema
+# every surface reports through); the legacy ``fallback_stats()`` dict is
+# reconstructed from it below.  Scoped tallies stay plain Counters.
+_MET_KERNEL_CALLS = obs_counters.registry().counter(
+    "kernels.kernel_calls", "fused kernel dispatches", labels=("op",)
+)
+_MET_FALLBACKS = obs_counters.registry().counter(
+    "kernels.fallbacks", "jnp-reference fallbacks",
+    labels=("op", "shape", "reason"),
+)
 _SCOPES: list[FallbackScope] = []
 
 
@@ -112,19 +121,19 @@ def fallback_scope(scope: FallbackScope | None = None):
 
 
 def _note_kernel(op: str) -> None:
-    _KERNEL_CALLS[op] += 1
+    _MET_KERNEL_CALLS.inc(1, op)
     for scope in _SCOPES:
         scope.kernel_calls[op] += 1
 
 
 def _note_fallback(op: str, shape, reason: str) -> None:
     key = (op, str(tuple(shape)), reason)
-    if key not in _FALLBACKS:
+    if _MET_FALLBACKS.value(*key) == 0:
         logger.warning(
             "kernels.%s: shape %s falls back to the jnp reference (%s)",
             op, tuple(shape), reason,
         )
-    _FALLBACKS[key] += 1
+    _MET_FALLBACKS.inc(1, *key)
     for scope in _SCOPES:
         scope.fallbacks[key] += 1
 
@@ -172,13 +181,24 @@ def fallback_stats() -> dict:
     ``kernel_calls``/``fallbacks`` count wrapper dispatches (per call when
     eager, per trace under an enclosing jit); ``total_fallbacks`` is the
     number a kernels-on benchmark config asserts to be zero.
+
+    Backward-compatible shim: the tallies live in the ``repro.obs``
+    registry (``kernels.kernel_calls`` / ``kernels.fallbacks``); this
+    rebuilds the pre-registry dict schema from its cells, keys unchanged
+    (pinned by tests/test_obs.py).
     """
-    return _stats_of(_KERNEL_CALLS, _FALLBACKS)
+    kc = collections.Counter(
+        {op: int(c) for (op,), c in _MET_KERNEL_CALLS.cells().items()}
+    )
+    fb = collections.Counter(
+        {key: int(c) for key, c in _MET_FALLBACKS.cells().items()}
+    )
+    return _stats_of(kc, fb)
 
 
 def reset_fallback_stats() -> None:
-    _KERNEL_CALLS.clear()
-    _FALLBACKS.clear()
+    _MET_KERNEL_CALLS.reset()
+    _MET_FALLBACKS.reset()
 
 
 # ------------------------------------------------------------------ dispatch

@@ -29,6 +29,7 @@ import numpy as np
 from repro import configs, faults, methods
 from repro.data.ctr_synth import CTRDatasetConfig, CTRSynthetic
 from repro.models.ctr import DCNConfig
+from repro.obs.trace import tracer
 from repro.serving.ctr import CTREngine, CTRRequest
 from repro.serving.lm import LMEngine, LMRequest
 from repro.training import lm_trainer
@@ -112,6 +113,12 @@ def _print_report(engine) -> None:
             )
     if m.caches:
         print(f"[serve] aggregate cache hit rate {m.cache_hit_rate:.3f}")
+    if m.latency_us:
+        for which, q in sorted(m.latency_us.items()):
+            if q.get("count"):
+                print(f"[serve] {which} latency: p50 {q['p50']:.0f}us "
+                      f"p95 {q['p95']:.0f}us p99 {q['p99']:.0f}us "
+                      f"(n={q['count']})")
     report = engine.fallback_report()
     for fb in report["fallbacks"]:
         print(f"[serve] kernel fallback: {fb['op']} {fb['shape']} "
@@ -213,13 +220,24 @@ def main(argv=None) -> int:
         p.add_argument("--deadline-ms", type=float, default=None,
                        help="per-wave deadline; waves over it tick the "
                        "deadline_misses counter (observed, not enforced)")
+        p.add_argument("--trace-out", default=None, metavar="PATH",
+                       help="arm the obs span tracer and write a Chrome-trace "
+                       "JSON (chrome://tracing / ui.perfetto.dev) to PATH")
 
     args = ap.parse_args(argv)
     if args.fault_plan:
         plan = faults.FaultPlan.load(args.fault_plan)
         faults.install(plan)
         print(f"[serve] fault plan installed: sites {sorted(plan.sites())}")
-    return _run_lm(args) if args.scenario == "lm" else _run_ctr(args)
+    if args.trace_out:
+        tracer().enable(args.trace_out)
+        print(f"[serve] tracing armed -> {args.trace_out}")
+    try:
+        return _run_lm(args) if args.scenario == "lm" else _run_ctr(args)
+    finally:
+        if args.trace_out and tracer().export():
+            print(f"[serve] trace written: {args.trace_out} "
+                  f"({len(tracer().events)} events)")
 
 
 if __name__ == "__main__":

@@ -42,7 +42,16 @@ from repro.dist import context as dist_ctx
 from repro.dist import sharding
 from repro.kernels import ops as kernel_ops
 from repro.launch.mesh import make_host_mesh
+from repro.obs import counters as obs_counters
+from repro.obs.stats import StreamingQuantiles
+from repro.obs.trace import tracer
 from repro.training import data_parallel, lm_trainer
+
+# Per-host straggler accounting: ticked whenever the watchdog flags a step
+# (> factor x EWMA); read back in end-of-run summaries and obs snapshots.
+_MET_STRAGGLERS = obs_counters.registry().counter(
+    "train.straggler_warnings", "steps flagged slow by the watchdog"
+)
 
 
 class GracefulShutdown:
@@ -73,6 +82,8 @@ class StragglerWatchdog:
         slow = self.n > self.warmup and dt > self.factor * self.ewma
         if slow:
             self.flagged += 1
+            _MET_STRAGGLERS.inc()
+            tracer().instant("train.straggler", step=self.n, dt_ms=dt * 1e3)
         # Slow steps don't poison the EWMA.
         self.ewma = 0.9 * self.ewma + 0.1 * min(dt, 2 * self.ewma)
         return slow
@@ -127,10 +138,13 @@ def _run_ctr(args) -> int:
             ckpt.maybe_save(trainer.export_state(state), step, force=force)
 
     losses = []
+    step_times = StreamingQuantiles()
     for step in range(start_step, args.steps):
         ids, labels = data.batch("train", step, args.batch)
+        t0 = time.time()
         state, metrics = trainer.train_step(state, ids, labels)
-        losses.append(float(metrics["loss"]))
+        losses.append(float(metrics["loss"]))  # blocks; also the step barrier
+        step_times.add((time.time() - t0) * 1e6)
         if (step + 1) % args.log_every == 0:
             print(f"[train] ctr step {step+1} loss {losses[-1]:.4f}")
         save(step + 1)
@@ -147,6 +161,7 @@ def _run_ctr(args) -> int:
         "first_loss": losses[0] if losses else None,
         "final_loss": losses[-1] if losses else None,
         "steps": len(losses),
+        "step_time_us": step_times.to_json(),
     }
     for stats in trainer.cache_stats():
         print(f"[train] hot tier '{stats['name']}': hit rate "
@@ -155,6 +170,7 @@ def _run_ctr(args) -> int:
               f"{stats['writeback_retries']} write-back retries, "
               f"{stats['admission_oom']} admission refusals")
     if trainer.guard_stats is not None:
+        trainer.guard_stats.publish()
         g = trainer.guard_stats.to_json()
         summary["guard"] = g
         print(f"[train] guard: {g['skipped']} skipped steps "
@@ -230,7 +246,25 @@ def main(argv=None) -> int:
         help="enable the non-finite skip-step guard (repro.faults.guards); "
         "auto-enabled when --fault-plan schedules a trainer seam",
     )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="arm the obs span tracer and write a Chrome-trace JSON "
+        "(chrome://tracing / ui.perfetto.dev) to PATH at exit",
+    )
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        tracer().enable(args.trace_out)
+        print(f"[train] tracing armed -> {args.trace_out}")
+    try:
+        return _main(ap, args)
+    finally:
+        if args.trace_out and tracer().export():
+            print(f"[train] trace written: {args.trace_out} "
+                  f"({len(tracer().events)} events)")
+
+
+def _main(ap, args) -> int:
 
     if args.fault_plan:
         plan = faults.FaultPlan.load(args.fault_plan)
@@ -377,13 +411,16 @@ def main(argv=None) -> int:
                 print(f"[train] resumed from step {start_step}")
 
         losses = []
+        step_times = StreamingQuantiles()
         guard_stats = faults.GuardStats() if args.guard else None
         for step in range(start_step, args.steps):
             batch = make_batch(step)
             t0 = time.time()
-            state, metrics = step_fn(state, batch)
-            loss = float(metrics["loss"])  # blocks; also the step barrier
+            with tracer().span("train.step", step=step):
+                state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])  # blocks; also the step barrier
             dt = time.time() - t0
+            step_times.add(dt * 1e6)
             slow = watchdog.observe(dt)
             losses.append(loss)
             if guard_stats is not None:
@@ -420,8 +457,10 @@ def main(argv=None) -> int:
             "first_loss": losses[0] if losses else None,
             "straggler_steps": watchdog.flagged,
             "steps": len(losses),
+            "step_time_us": step_times.to_json(),
         }
         if guard_stats is not None:
+            guard_stats.publish()
             g = guard_stats.to_json()
             summary["guard"] = g
             print(f"[train] guard: {g['skipped']} skipped steps "

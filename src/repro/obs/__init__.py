@@ -1,0 +1,34 @@
+"""`repro.obs` — the single observability layer for the whole stack.
+
+Four pieces, one contract:
+
+* :mod:`repro.obs.counters` — a typed, namespaced counter/gauge registry
+  every existing telemetry surface re-registers into (kernel fallback
+  tallies, Engine/cache counters, fault-guard and retry counters), so CLI
+  reports and bench artifacts read one ``to_json()`` schema instead of four.
+* :mod:`repro.obs.trace` — host-side span tracing with Chrome-trace JSON
+  export (``--trace-out`` on both launch CLIs).  Spans wrap *host*
+  boundaries only (trainer step edge, cache write-back, Engine waves,
+  storage tier events, checkpoint save/restore); device-sync fences run
+  only at span edges and only while tracing is enabled.
+* :mod:`repro.obs.stats` — streaming quantile estimation (P²) behind the
+  per-host step-time quantiles and serving p50/p95/p99 that the BENCH
+  artifacts carry.
+* :mod:`repro.obs.gate` — the perf-regression gate: compares BENCH_*.json
+  artifacts against the committed ``BENCH_BASELINE.json`` and fails
+  ``python -m repro.analysis`` the way a jaxpr contract violation does.
+
+The hard contract: obs-on changes no jitted computation.  Spans never enter
+traced code, instrumented runs are bitwise-equal to uninstrumented
+(tests/test_obs.py), and measured overhead is asserted ≤3% in the e2e bench.
+"""
+from __future__ import annotations
+
+from repro.obs.counters import (  # noqa: F401
+    Counter,
+    Gauge,
+    Registry,
+    Snapshot,
+    registry,
+)
+from repro.obs.trace import tracer  # noqa: F401

@@ -1,0 +1,222 @@
+"""One typed, namespaced counter/gauge registry for the whole stack.
+
+Every telemetry surface in the repo re-registers into the process-global
+:func:`registry` under a dotted namespace::
+
+    kernels.*   kernel-vs-fallback dispatch (repro.kernels.ops)
+    engine.*    serving Engine request/step/latency counters
+    cache.*     per-tier hot/cold cache traffic
+    faults.*    guard skip/fire counters, retry/backoff outcomes
+    train.*     trainer step counters, straggler warnings
+    ckpt.*      checkpoint save/restore events
+
+Metrics are **typed**: a :class:`Counter` only increments, a :class:`Gauge`
+holds the last value set.  Both support label tuples (declared up front) so
+structured tallies — e.g. the kernels' per-``(op, shape, reason)`` fallback
+detail — live in the registry without flattening into name soup.
+
+The registry is observational only: nothing in a jitted computation reads
+or writes it, so enabling every surface changes no traced program (the
+bitwise-parity contract in tests/test_obs.py).
+
+``snapshot()`` returns an immutable :class:`Snapshot`; ``diff`` between two
+snapshots isolates one window's activity (benchmarks snapshot around their
+measurement loop).  ``to_json()`` is the stable wire schema, version-tagged
+``repro/obs/v1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Iterable, Mapping
+
+SCHEMA = "repro/obs/v1"
+
+_KINDS = ("counter", "gauge")
+
+
+class Metric:
+    """Base metric: a named family of (label-tuple -> value) cells."""
+
+    kind = "?"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: tuple[str, ...] = ()) -> None:
+        self.name = name
+        self.help = help
+        self.labels = tuple(labels)
+        self._values: dict[tuple, int | float] = {}
+        self._lock = threading.Lock()
+
+    def _key(self, label_values: tuple) -> tuple:
+        if len(label_values) != len(self.labels):
+            raise ValueError(
+                f"{self.kind} '{self.name}' takes labels {self.labels}; "
+                f"got {label_values!r}"
+            )
+        return tuple(str(v) for v in label_values)
+
+    def value(self, *label_values) -> int | float:
+        return self._values.get(self._key(label_values), 0)
+
+    def cells(self) -> dict[tuple, int | float]:
+        return dict(self._values)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._values.clear()
+
+
+class Counter(Metric):
+    """Monotonically increasing tally."""
+
+    kind = "counter"
+
+    def inc(self, amount: int | float = 1, *label_values) -> None:
+        if amount < 0:
+            raise ValueError(
+                f"counter '{self.name}' cannot decrease (amount={amount})"
+            )
+        key = self._key(label_values)
+        with self._lock:
+            self._values[key] = self._values.get(key, 0) + amount
+
+
+class Gauge(Metric):
+    """Last-value-wins measurement (bytes resident, hit rate, queue depth)."""
+
+    kind = "gauge"
+
+    def set(self, value: int | float, *label_values) -> None:
+        key = self._key(label_values)
+        with self._lock:
+            self._values[key] = value
+
+    def inc(self, amount: int | float = 1, *label_values) -> None:
+        key = self._key(label_values)
+        with self._lock:
+            self._values[key] = self._values.get(key, 0) + amount
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """Immutable point-in-time view: {name: {label_tuple: value}}."""
+
+    values: Mapping[str, Mapping[tuple, int | float]]
+    kinds: Mapping[str, str]
+    label_names: Mapping[str, tuple[str, ...]]
+
+    def value(self, name: str, *label_values) -> int | float:
+        cells = self.values.get(name, {})
+        return cells.get(tuple(str(v) for v in label_values), 0)
+
+    def diff(self, earlier: "Snapshot") -> "Snapshot":
+        """This snapshot minus an earlier one — one window's activity.
+
+        Counters subtract cell-wise (missing-earlier cells count from 0);
+        gauges keep their later value (a gauge *is* its last observation).
+        """
+        out: dict[str, dict[tuple, int | float]] = {}
+        for name, cells in self.values.items():
+            if self.kinds.get(name) == "gauge":
+                out[name] = dict(cells)
+                continue
+            prev = earlier.values.get(name, {})
+            d = {
+                k: v - prev.get(k, 0)
+                for k, v in cells.items()
+                if v - prev.get(k, 0)
+            }
+            if d:
+                out[name] = d
+        return Snapshot(values=out, kinds=dict(self.kinds),
+                        label_names=dict(self.label_names))
+
+    def to_json(self) -> dict:
+        """Stable wire schema (``repro/obs/v1``).
+
+        Unlabelled metrics serialize as scalars; labelled ones as a sorted
+        list of ``{"labels": {...}, "value": n}`` cells.
+        """
+        counters: dict = {}
+        gauges: dict = {}
+        for name in sorted(self.values):
+            cells = self.values[name]
+            names = self.label_names.get(name, ())
+            if not names:
+                val = cells.get((), 0)
+                dst = gauges if self.kinds.get(name) == "gauge" else counters
+                dst[name] = val
+                continue
+            rows = [
+                {"labels": dict(zip(names, key)), "value": val}
+                for key, val in sorted(cells.items())
+            ]
+            dst = gauges if self.kinds.get(name) == "gauge" else counters
+            dst[name] = rows
+        return {"schema": SCHEMA, "counters": counters, "gauges": gauges}
+
+
+class Registry:
+    """Get-or-create home for every metric, keyed by dotted name."""
+
+    def __init__(self) -> None:
+        self._metrics: dict[str, Metric] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, cls, name: str, help: str, labels: Iterable[str]):
+        labels = tuple(labels)
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, help=help, labels=labels)
+                self._metrics[name] = m
+                return m
+        if not isinstance(m, cls):
+            raise TypeError(
+                f"metric '{name}' already registered as {m.kind}, "
+                f"not {cls.kind}"
+            )
+        if m.labels != labels:
+            raise ValueError(
+                f"metric '{name}' already registered with labels "
+                f"{m.labels}, not {labels}"
+            )
+        return m
+
+    def counter(self, name: str, help: str = "",
+                labels: Iterable[str] = ()) -> Counter:
+        return self._get(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Iterable[str] = ()) -> Gauge:
+        return self._get(Gauge, name, help, labels)
+
+    def names(self) -> list[str]:
+        return sorted(self._metrics)
+
+    def snapshot(self) -> Snapshot:
+        with self._lock:
+            return Snapshot(
+                values={n: m.cells() for n, m in self._metrics.items()},
+                kinds={n: m.kind for n, m in self._metrics.items()},
+                label_names={n: m.labels for n, m in self._metrics.items()},
+            )
+
+    def reset(self) -> None:
+        """Zero every metric's cells (registrations survive)."""
+        with self._lock:
+            metrics = list(self._metrics.values())
+        for m in metrics:
+            m.reset()
+
+    def to_json(self) -> dict:
+        return self.snapshot().to_json()
+
+
+_REGISTRY = Registry()
+
+
+def registry() -> Registry:
+    """The process-global registry every surface re-registers into."""
+    return _REGISTRY

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro import methods
 from repro.models import ctr as ctr_models
+from repro.obs.trace import tracer
 from repro.serving import table as serving_tbl
 from repro.serving.engine import CacheMetrics, Engine
 from repro.storage.cold import ColdStore
@@ -321,16 +322,20 @@ class CTREngine(Engine):
         if self._cold is not None:
             self._cold.admit(ids[: len(wave)].reshape(-1))
             rows_flat = self._cold.rows(ids.reshape(-1))
-            logits, probs = self._score_cold(self.dense_params, rows_flat)
+            with tracer().span("engine.score", wave=len(wave), tier="cold"):
+                logits, probs = self._score_cold(self.dense_params, rows_flat)
+                tracer().fence(probs)
             # Stage the next wave's host gather while this wave finishes.
             nxt = list(itertools.islice(self._queue, self.batch))
             if nxt:
                 self._cold.stage(self._padded_wave_ids(nxt).reshape(-1))
         else:
             self._maintain_caches(ids[: len(wave)])
-            logits, probs = self._score(
-                self.table, self.dense_params, jnp.asarray(ids)
-            )
+            with tracer().span("engine.score", wave=len(wave)):
+                logits, probs = self._score(
+                    self.table, self.dense_params, jnp.asarray(ids)
+                )
+                tracer().fence(probs)
         logits = np.asarray(logits)
         probs = np.asarray(probs)
         for i, req in enumerate(wave):

@@ -33,7 +33,44 @@ from repro import methods
 from repro.faults import plan as faultplan
 from repro.faults.recovery import RetryStats, retry_with_backoff
 from repro.kernels import ops as kernel_ops
+from repro.obs import counters as obs_counters
+from repro.obs import stats as obs_stats
+from repro.obs.trace import tracer
 from repro.serving import table as serving_tbl
+
+# Engine counters live in the repro.obs registry, labeled by scenario so
+# mixed CTR+LM processes keep their tallies apart.  The registry is purely
+# observational — nothing jitted reads it (the obs bitwise contract).
+_REG = obs_counters.registry()
+_MET_SUBMITTED = _REG.counter(
+    "engine.requests_submitted", "requests enqueued", labels=("scenario",)
+)
+_MET_COMPLETED = _REG.counter(
+    "engine.requests_completed", "requests finished", labels=("scenario",)
+)
+_MET_WAVES = _REG.counter(
+    "engine.waves", "scheduler steps taken", labels=("scenario",)
+)
+_MET_DEADLINE = _REG.counter(
+    "engine.deadline_misses", "waves over the per-wave deadline",
+    labels=("scenario",),
+)
+_MET_DEGRADED = _REG.counter(
+    "engine.served_degraded", "waves served degraded off the warm tier",
+    labels=("scenario",),
+)
+
+
+def _publish_cache_metrics(caches) -> None:
+    """Mirror per-tier cache snapshots into ``cache.*`` registry gauges."""
+    for c in caches:
+        for field in ("capacity", "rows_cached", "hits", "misses",
+                      "evictions", "writebacks", "hit_rate", "hot_bytes",
+                      "metadata_bytes", "admission_oom", "prefetch_dropped",
+                      "corruption_detected"):
+            _REG.gauge(
+                f"cache.{field}", labels=("tier", "name")
+            ).set(getattr(c, field), c.tier, c.name)
 
 
 @dataclasses.dataclass
@@ -102,6 +139,11 @@ class EngineMetrics:
     deadline_misses: int = 0
     wave_retries: int = 0
     retry_failures: int = 0
+    #: Streaming latency summaries ({"wave": {...}, "request": {...}}, each
+    #: a StreamingQuantiles.to_json() with p50/p95/p99 in µs); None until a
+    #: measured wave lands, so legacy consumers see no new key on idle
+    #: engines.
+    latency_us: dict | None = None
 
     def to_json(self) -> dict:
         out = {
@@ -133,6 +175,8 @@ class EngineMetrics:
             out["cache_hit_rate"] = self.cache_hit_rate
             out["cache_budget_bytes"] = self.cache_budget_bytes
             out["prefetch_depth"] = self.prefetch_depth
+        if self.latency_us is not None:
+            out["latency_us"] = self.latency_us
         return out
 
     # --- read-only mapping shim (legacy consumers index / spread / .get) ---
@@ -186,6 +230,12 @@ class Engine:
         # One scope for the engine's lifetime: every jitted call site below
         # runs under it, so the report covers exactly this engine's dispatch.
         self._fallbacks = kernel_ops.FallbackScope()
+        # Streaming latency percentiles (host wall-clock, µs): per scheduler
+        # wave and per request submit→finish.  Pure host arithmetic — the
+        # estimators never see device values.
+        self._wave_latency = obs_stats.StreamingQuantiles()
+        self._request_latency = obs_stats.StreamingQuantiles()
+        self._submit_ns: dict[int, int] = {}
 
     # ------------------------------------------------------------ build
 
@@ -206,6 +256,9 @@ class Engine:
         self._next_rid = max(self._next_rid, rid + 1)
         self._queue.append(request)
         self._metrics.requests_submitted += 1
+        _MET_SUBMITTED.inc(1, self.scenario)
+        self._submit_ns[rid] = time.perf_counter_ns()
+        tracer().async_begin("engine.request", rid, scenario=self.scenario)
         return rid
 
     def poll(self, rid: int):
@@ -231,25 +284,32 @@ class Engine:
         watch_oom = faultplan.lookup("cache.admission") is not None
         oom_before = self._admission_oom_total() if watch_oom else 0
         t0 = time.perf_counter()
-        with kernel_ops.fallback_scope(self._fallbacks):
-            if faultplan.active_plan() is None or not self._wave_retry_safe:
-                self._advance()
-            else:
-                # Chaos runs: one bounded retry budget around the wave; a
-                # re-run recomputes from the engine's host-side queues (the
-                # wave's device work is idempotent — outputs overwrite).
-                retry_with_backoff(
-                    self._advance, op=f"{self.scenario}.wave",
-                    attempts=self.wave_attempts, base_s=0.002,
-                    stats=self.retry_stats,
-                )
+        with tracer().span("engine.wave", scenario=self.scenario):
+            with kernel_ops.fallback_scope(self._fallbacks):
+                if (faultplan.active_plan() is None
+                        or not self._wave_retry_safe):
+                    self._advance()
+                else:
+                    # Chaos runs: one bounded retry budget around the wave;
+                    # a re-run recomputes from the engine's host-side queues
+                    # (the wave's device work is idempotent — outputs
+                    # overwrite).
+                    retry_with_backoff(
+                        self._advance, op=f"{self.scenario}.wave",
+                        attempts=self.wave_attempts, base_s=0.002,
+                        stats=self.retry_stats,
+                    )
         dt = time.perf_counter() - t0
         self._metrics.wall_s += dt
         self._metrics.steps += 1
+        self._wave_latency.add(dt * 1e6)
+        _MET_WAVES.inc(1, self.scenario)
         if self.deadline_s is not None and dt > self.deadline_s:
             self._metrics.deadline_misses += 1
+            _MET_DEADLINE.inc(1, self.scenario)
         if watch_oom and self._admission_oom_total() > oom_before:
             self._metrics.served_degraded += 1
+            _MET_DEGRADED.inc(1, self.scenario)
         return True
 
     def run(self) -> dict[int, Any]:
@@ -269,6 +329,11 @@ class Engine:
     def _finish(self, rid: int, result) -> None:
         self._done[rid] = result
         self._metrics.requests_completed += 1
+        _MET_COMPLETED.inc(1, self.scenario)
+        t0 = self._submit_ns.pop(rid, None)
+        if t0 is not None:
+            self._request_latency.add((time.perf_counter_ns() - t0) / 1e3)
+        tracer().async_end("engine.request", rid)
 
     # ------------------------------------------------------------ metrics
 
@@ -344,16 +409,24 @@ class Engine:
         kept; cache traffic counters restart with the measurement window."""
         self._metrics = _Counters()
         self.retry_stats = RetryStats()
+        self._wave_latency = obs_stats.StreamingQuantiles()
+        self._request_latency = obs_stats.StreamingQuantiles()
         self._reset_cache_counters()
 
     def metrics(self) -> EngineMetrics:
         m = self._metrics
         caches = self.cache_metrics()
+        _publish_cache_metrics(caches)
         hit_rate = None
         if caches:
             hits = sum(c.hits for c in caches)
             total = hits + sum(c.misses for c in caches)
             hit_rate = hits / total if total else 0.0
+        latency = None
+        if self._wave_latency.count:
+            latency = {"wave": self._wave_latency.to_json()}
+            if self._request_latency.count:
+                latency["request"] = self._request_latency.to_json()
         return EngineMetrics(
             scenario=self.scenario,
             embedding_method=self.spec.method,
@@ -375,4 +448,5 @@ class Engine:
             deadline_misses=m.deadline_misses,
             wave_retries=self.retry_stats.retries,
             retry_failures=self.retry_stats.failures,
+            latency_us=latency,
         )

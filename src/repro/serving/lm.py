@@ -31,6 +31,7 @@ import numpy as np
 
 from repro import methods
 from repro.models import transformer as tfm
+from repro.obs.trace import tracer
 from repro.serving.engine import Engine
 
 
@@ -140,7 +141,12 @@ class LMEngine(Engine):
                 self._finish(req.rid, [])  # zero generation budget
                 continue
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, cache_one = self._prefill(self.params, self.table, prompt)
+            with tracer().span("engine.prefill", rid=req.rid,
+                               prompt_len=len(req.prompt)):
+                logits, cache_one = self._prefill(
+                    self.params, self.table, prompt
+                )
+                tracer().fence(logits)
             first = int(jnp.argmax(logits[0]))
             self._metrics.tokens_generated += 1
             if req.max_new <= 1:
@@ -161,10 +167,12 @@ class LMEngine(Engine):
         active = [i for i, rid in enumerate(self._slot_rid) if rid is not None]
         if not active:
             return
-        logits, self._cache = self._decode(
-            self.params, self.table, jnp.asarray(self._cur),
-            self._cache, jnp.asarray(self._cache_len),
-        )
+        with tracer().span("engine.decode", active=len(active)):
+            logits, self._cache = self._decode(
+                self.params, self.table, jnp.asarray(self._cur),
+                self._cache, jnp.asarray(self._cache_len),
+            )
+            tracer().fence(logits)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self._cache_len += 1
         for slot in active:

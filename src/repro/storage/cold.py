@@ -33,9 +33,27 @@ import numpy as np
 from repro.core import codestore
 from repro.faults import plan as faultplan
 from repro.faults.recovery import RetryStats, retry_with_backoff
+from repro.obs import counters as obs_counters
+from repro.obs.trace import tracer
 from repro.storage.tiered import HotRowCache
 
 __all__ = ["ColdStore"]
+
+# Cold-tier traffic in the unified registry (process-wide across stores;
+# per-store counts stay on the ColdStore attributes the engines report).
+_REG = obs_counters.registry()
+_MET_PREFETCH_HITS = _REG.counter(
+    "storage.cold.prefetch_hits", "waves served from the staged prefetch"
+)
+_MET_DEMAND_PUTS = _REG.counter(
+    "storage.cold.demand_puts", "waves demand-fetched host->device"
+)
+_MET_PREFETCH_DROPPED = _REG.counter(
+    "storage.cold.prefetch_dropped", "staged prefetches lost (re-fetched)"
+)
+_MET_CORRUPTION = _REG.counter(
+    "storage.cold.corruption_detected", "staged bytes failing crc"
+)
 
 
 @jax.jit
@@ -146,7 +164,8 @@ class ColdStore:
         key = flat_ids.tobytes()
         if self._staged is not None and self._staged[0] == key:
             return
-        rows = self._fetch(flat_ids)
+        with tracer().span("storage.cold.prefetch", rows=int(flat_ids.size)):
+            rows = self._fetch(flat_ids)
         crc = None
         spec = faultplan.lookup("codestore.corrupt")
         if spec is not None:
@@ -198,6 +217,7 @@ class ColdStore:
             self._staged = None
             self._staged_crc = None
             self.prefetch_dropped += 1
+            _MET_PREFETCH_DROPPED.inc()
         if self._staged is not None and self._staged[0] == key:
             host_rows = self._staged[1]
             if self._staged_crc is not None:
@@ -207,15 +227,25 @@ class ColdStore:
                 if got != self._staged_crc:
                     # Corrupted staged bytes: drop them, demand re-fetch.
                     self.corruption_detected += 1
-                    host_rows = jax.device_put(self._fetch(flat_ids))
+                    _MET_CORRUPTION.inc()
+                    with tracer().span("storage.cold.fetch",
+                                       rows=int(flat_ids.size),
+                                       reason="corrupt-staged"):
+                        host_rows = jax.device_put(self._fetch(flat_ids))
                     self.demand_puts += 1
+                    _MET_DEMAND_PUTS.inc()
                 else:
                     self.prefetch_hits += 1
+                    _MET_PREFETCH_HITS.inc()
             else:
                 self.prefetch_hits += 1
+                _MET_PREFETCH_HITS.inc()
         else:
-            host_rows = jax.device_put(self._fetch(flat_ids))
+            with tracer().span("storage.cold.fetch",
+                               rows=int(flat_ids.size)):
+                host_rows = jax.device_put(self._fetch(flat_ids))
             self.demand_puts += 1
+            _MET_DEMAND_PUTS.inc()
         self._staged = None
         self._staged_crc = None
         slot = jnp.asarray(self.cache.slot_of_arr[np.clip(flat_ids, 0, self.n_alloc - 1)])

@@ -35,9 +35,15 @@ import numpy as np
 from repro.core import codestore
 from repro.faults import plan as faultplan
 from repro.faults.recovery import RetryStats, retry_with_backoff
+from repro.obs import counters as obs_counters
+from repro.obs.trace import tracer
 from repro.storage import base as rowstore
 
 __all__ = ["TieredCodes", "HotRowCache", "wrap_codes"]
+
+_MET_WRITEBACK_ROWS = obs_counters.registry().counter(
+    "storage.writeback_rows", "dirty hot rows flushed to the backing tier"
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -440,12 +446,14 @@ class HotRowCache:
             return _write_back(tiered, slots, ids)
 
         attempts = int(spec.param("attempts", 4)) if spec is not None else 4
-        tiered = retry_with_backoff(
-            write, op="tiered.writeback", attempts=attempts, base_s=0.002,
-            stats=self.retry_stats,
-        )
+        with tracer().span("storage.writeback", rows=k, store=self.name):
+            tiered = retry_with_backoff(
+                write, op="tiered.writeback", attempts=attempts, base_s=0.002,
+                stats=self.retry_stats,
+            )
         self.dirty[:] = False
         self.writebacks += k
+        _MET_WRITEBACK_ROWS.inc(k)
         return tiered
 
     def unwrap(self, tiered: TieredCodes):

@@ -23,6 +23,7 @@ import numpy as np
 from repro import faults, methods, metrics
 from repro.models import ctr as ctr_models
 from repro.models import embedding as emb_mod
+from repro.obs.trace import tracer
 from repro.optim import adam_init, adam_update
 from repro.storage.tiered import HotRowCache
 
@@ -380,9 +381,10 @@ class CTRTrainer:
         def step_with_refresh(state, ids, labels):
             state, m = step_fn(state, ids, labels)
             step = int(state.step)
-            emb = method.host_sync(state.emb_state, step, spec)
-            if step % every == 0:
-                emb = refresh(emb)
+            with tracer().span("train.refresh", step=step):
+                emb = method.host_sync(state.emb_state, step, spec)
+                if step % every == 0:
+                    emb = refresh(emb)
             return state._replace(emb_state=emb), m
 
         return step_with_refresh
@@ -393,10 +395,23 @@ class CTRTrainer:
     # ------------------------------------------------------------ api
 
     def train_step(self, state: TrainState, ids: np.ndarray, labels: np.ndarray):
-        state, m = self._train_step(state, jnp.asarray(ids), jnp.asarray(labels))
+        # Span edges sit at the host boundaries only: the fused step is ONE
+        # jitted function by design (its lookup/grad/update phases are not
+        # host-separable), so the span fences its edge and the write-back
+        # phase gets its own span.  With tracing off both spans are shared
+        # null context managers and the fence is a no-op — the jitted
+        # computation is identical either way (tests/test_obs.py holds the
+        # instrumented run bitwise-equal).
+        tr = tracer()
+        with tr.span("train.step", step=int(state.step)):
+            state, m = self._train_step(
+                state, jnp.asarray(ids), jnp.asarray(labels)
+            )
+            tr.fence(m)
         if self.guard_stats is not None:
             self.guard_stats.observe(m)
-        state = self._maintain_caches(state, ids)
+        with tr.span("train.writeback"):
+            state = self._maintain_caches(state, ids)
         return state, m
 
     def evaluate(self, state: TrainState, batches) -> dict[str, float]:

@@ -568,7 +568,7 @@ def test_rule_catalog_complete():
         "no-string-dispatch", "no-raw-code-casts",
         "no-direct-storage-access", "rng-key-discipline",
         "no-silent-fallback", "no-unfenced-model-grad",
-        "no-silent-except",
+        "no-silent-except", "no-host-sync",
     }
 
 
